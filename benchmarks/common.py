@@ -1,0 +1,34 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+
+from repro.core import (philly_cluster, philly_workload, simulate, sjf_bco,
+                        first_fit, list_scheduling, random_policy)
+
+POLICIES = {
+    "SJF-BCO": sjf_bco,
+    "FF": first_fit,
+    "LS": list_scheduling,
+    "RAND": random_policy,
+}
+
+
+def run_policy(name: str, cluster, jobs, horizon: int):
+    t0 = time.time()
+    sched = POLICIES[name](cluster, jobs, horizon)
+    sim = simulate(cluster, jobs, sched.assignment)
+    return {
+        "policy": name,
+        "makespan": sim.makespan,
+        "avg_jct": sim.avg_jct,
+        "peak_contention": sim.peak_contention,
+        "utilization": sim.utilization,
+        "sched_time_s": time.time() - t0,
+        "schedule": sched,
+        "sim": sim,
+    }
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

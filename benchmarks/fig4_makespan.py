@@ -1,0 +1,51 @@
+"""Fig. 4 reproduction: makespan + avg JCT under SJF-BCO vs FF/LS/RAND.
+
+Paper setting: 160 Philly-mix jobs, 20 servers, T=1200.
+Paper claim: SJF-BCO outperforms all baselines on makespan and average JCT
+(most prominent when GPUs are scarce)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import POLICIES, run_policy
+from repro.core import philly_cluster, philly_workload
+
+HORIZON = 1200
+SEEDS = (1, 2, 3)
+
+
+def run(seeds=SEEDS, verbose: bool = True) -> list[dict]:
+    rows = []
+    for seed in seeds:
+        cluster = philly_cluster(20, seed=seed)
+        jobs = philly_workload(seed=seed)
+        for name in POLICIES:
+            r = run_policy(name, cluster, jobs, HORIZON)
+            r["seed"] = seed
+            rows.append(r)
+            if verbose:
+                print(f"  seed {seed} {name:8s} makespan {r['makespan']:7.0f} "
+                      f"avg JCT {r['avg_jct']:7.1f} util {r['utilization']:.2f}")
+    if verbose:
+        for name in POLICIES:
+            ms = np.mean([r["makespan"] for r in rows if r["policy"] == name])
+            jct = np.mean([r["avg_jct"] for r in rows if r["policy"] == name])
+            print(f"  MEAN {name:8s} makespan {ms:7.0f} avg JCT {jct:7.1f}")
+    return rows
+
+
+def validate(rows) -> dict:
+    """Check the paper's qualitative claims on every seed."""
+    ok_ms, ok_jct = True, True
+    for seed in {r["seed"] for r in rows}:
+        by = {r["policy"]: r for r in rows if r["seed"] == seed}
+        best_base_ms = min(by[p]["makespan"] for p in ("FF", "LS", "RAND"))
+        ok_ms &= by["SJF-BCO"]["makespan"] <= best_base_ms
+        best_base_jct = min(by[p]["avg_jct"] for p in ("FF", "LS", "RAND"))
+        ok_jct &= by["SJF-BCO"]["avg_jct"] <= best_base_jct * 1.15
+    return {"sjf_best_makespan": ok_ms, "sjf_competitive_jct": ok_jct}
+
+
+if __name__ == "__main__":
+    rows = run()
+    print("validation:", validate(rows))

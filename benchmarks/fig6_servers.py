@@ -1,0 +1,40 @@
+"""Fig. 6 reproduction: makespan as the number of servers grows (10 -> 20).
+
+Paper claim (T=1500): more servers => less contention => smaller makespan
+for FF, LS and SJF-BCO; FF benefits the most."""
+from __future__ import annotations
+
+from benchmarks.common import run_policy
+from repro.core import philly_cluster, philly_workload
+
+HORIZON = 1500
+SERVER_COUNTS = (10, 14, 20)
+POLICY_NAMES = ("SJF-BCO", "FF", "LS")
+
+
+def run(seed: int = 1, verbose: bool = True) -> list[dict]:
+    jobs = philly_workload(seed=seed)
+    rows = []
+    for n in SERVER_COUNTS:
+        cluster = philly_cluster(n, seed=seed)
+        for name in POLICY_NAMES:
+            r = run_policy(name, cluster, jobs, HORIZON)
+            r["servers"] = n
+            rows.append(r)
+            if verbose:
+                print(f"  {n:2d} servers {name:8s} makespan "
+                      f"{r['makespan']:7.0f} peak p {r['peak_contention']}")
+    return rows
+
+
+def validate(rows) -> dict:
+    out = {}
+    for name in POLICY_NAMES:
+        ms = [r["makespan"] for r in rows if r["policy"] == name]
+        out[f"{name}_decreases"] = bool(ms[-1] < ms[0])
+    return out
+
+
+if __name__ == "__main__":
+    rows = run()
+    print("validation:", validate(rows))

@@ -1,0 +1,102 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: profile one (arch x shape) pair, optionally with
+config overrides, and print the three roofline terms + the top collective /
+HBM-traffic contributors (hypothesis -> change -> re-lower -> measure).
+
+    PYTHONPATH=src python -m benchmarks.hillclimb \
+        --arch llama3-405b --shape train_4k --set q_chunk=1024
+"""
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.launch import roofline
+from repro.launch.dryrun import run_pair
+
+
+def profile(arch: str, shape: str, overrides: dict | None = None,
+            verbose: bool = True, multi_pod: bool = False,
+            opt_overrides: dict | None = None) -> dict:
+    cfg0 = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg0, **overrides)
+        ARCHS[arch] = cfg           # run_pair resolves via the registry
+    try:
+        row = run_pair(arch, shape, multi_pod=multi_pod, verbose=False,
+                       opt_overrides=opt_overrides)
+    finally:
+        ARCHS[arch] = cfg0
+    if verbose:
+        print(f"== {arch} x {shape} overrides={overrides or {}}")
+        print(f"   t_compute {row['t_compute_s']:.3e}s  "
+              f"t_memory {row['t_memory_s']:.3e}s  "
+              f"t_collective {row['t_collective_s']:.3e}s  "
+              f"-> {row['bottleneck']}  "
+              f"mem {row['hbm_peak_bytes']/2**30:.1f} GiB  "
+              f"useful {row['useful_ratio']:.3f}")
+    return row
+
+
+def profile_deep(arch: str, shape: str, overrides: dict | None = None,
+                 multi_pod: bool = False) -> None:
+    """Full breakdown: requires re-lowering to get the HLO text."""
+    import time
+    from repro.launch.dryrun import build_jitted
+    from repro.launch.mesh import make_production_mesh
+    cfg0 = get_config(arch)
+    if overrides:
+        ARCHS[arch] = dataclasses.replace(cfg0, **overrides)
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with jax.set_mesh(mesh):
+            jitted, args = build_jitted(arch, shape, mesh)
+            compiled = jitted.lower(*args).compile()
+    finally:
+        ARCHS[arch] = cfg0
+    txt = compiled.as_text()
+    print("--- top collectives (loop-expanded) ---")
+    for r in roofline.collective_breakdown(txt):
+        print(f"  {r['bytes']:12.3e} B  x{r['mult']:<4d} {r['kind']:<19s} "
+              f"{r['shape']:<28s} in {r['comp'][:44]}")
+    print("--- top HBM traffic in loops ---")
+    for r in roofline.bytes_breakdown(txt):
+        print(f"  {r['bytes']:12.3e} B  x{r['mult']:<4d} {r['line'][:95]}")
+
+
+def _parse_overrides(pairs: list[str]) -> dict:
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                if v in ("True", "False"):
+                    v = v == "True"
+        out[k] = v
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", nargs="*", default=[])
+    ap.add_argument("--opt", nargs="*", default=[],
+                    help="AdamWConfig overrides, e.g. grad_accum_steps=8")
+    ap.add_argument("--deep", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    a = ap.parse_args()
+    ov = _parse_overrides(a.set)
+    oov = _parse_overrides(a.opt) or None
+    profile(a.arch, a.shape, ov, multi_pod=a.multi_pod, opt_overrides=oov)
+    if a.deep:
+        profile_deep(a.arch, a.shape, ov, multi_pod=a.multi_pod)

@@ -1,0 +1,35 @@
+"""Roofline table from the dry-run JSON (EXPERIMENTS.md §Roofline source).
+
+Reads results/dryrun_single.json (and _multi if present) and prints the
+three terms per (arch x shape), dominant bottleneck, MODEL_FLOPS ratio and
+per-device HBM fit."""
+from __future__ import annotations
+
+import json
+import os
+
+V5E_HBM = 16 * 2**30
+
+
+def load(path="results/dryrun_single.json") -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    return json.load(open(path))
+
+
+def run(path="results/dryrun_single.json", verbose: bool = True) -> list[dict]:
+    rows = load(path)
+    if verbose and rows:
+        print(f"  {'arch':18s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} "
+              f"{'t_coll':>9s} {'bound':>10s} {'useful':>7s} {'fits16G':>7s}")
+        for r in sorted(rows, key=lambda r: (r['arch'], r['shape'])):
+            fits = "yes" if r["hbm_peak_bytes"] <= V5E_HBM else "NO"
+            print(f"  {r['arch']:18s} {r['shape']:12s} "
+                  f"{r['t_compute_s']:9.2e} {r['t_memory_s']:9.2e} "
+                  f"{r['t_collective_s']:9.2e} {r['bottleneck']:>10s} "
+                  f"{min(r['useful_ratio'],9.999):7.3f} {fits:>7s}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

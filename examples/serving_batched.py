@@ -1,0 +1,48 @@
+"""Batched multi-arch serving example: prefill + greedy decode with KV
+caches / recurrent state across three different model families.
+
+Run:  PYTHONPATH=src python examples/serving_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.dist.steps import make_serve_step
+from repro.models import build_model
+
+B, PROMPT, GEN = 4, 12, 24
+rng = np.random.default_rng(0)
+
+for arch in ("llama3.2-1b", "xlstm-350m", "whisper-tiny"):
+    cfg = get_config(arch).reduced()
+    max_seq = PROMPT + GEN
+    model = build_model(cfg, max_seq=max_seq)
+    params = model.init(jax.random.PRNGKey(1))
+    serve = jax.jit(make_serve_step(model))
+    cache = model.init_cache(B, max_seq)
+    if cfg.family == "audio":
+        frames = jnp.asarray(
+            rng.standard_normal((B, cfg.enc_frames, cfg.d_model)), jnp.float32)
+        cache["enc_out"] = jax.jit(model.encode)(params, frames)
+
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (B, PROMPT)), jnp.int32)
+    for pos in range(PROMPT - 1):                      # prefill via stepping
+        _, _, cache = serve(params, cache, prompt[:, pos],
+                            jnp.full((B,), pos, jnp.int32))
+    tok = prompt[:, -1]
+    t0 = time.time()
+    toks = []
+    for i in range(GEN):
+        tok, logits, cache = serve(params, cache, tok,
+                                   jnp.full((B,), PROMPT - 1 + i, jnp.int32))
+        toks.append(np.asarray(tok))
+    dt = time.time() - t0
+    gen = np.stack(toks, 1)
+    assert gen.shape == (B, GEN) and (gen >= 0).all() and (gen < cfg.vocab).all()
+    print(f"{arch:14s} [{cfg.family:6s}]: {B}x{GEN} tokens in {dt:5.2f}s "
+          f"({B*GEN/dt:6.1f} tok/s)  sample: {gen[0][:8].tolist()}")
+
+print("serving_batched OK")

@@ -1,0 +1,3 @@
+from repro.ckpt.checkpoint import load, save
+
+__all__ = ["load", "save"]

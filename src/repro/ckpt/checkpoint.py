@@ -1,0 +1,56 @@
+"""Flat-npz checkpointing for params + optimizer state.
+
+Paths are '/'-joined pytree keys; restore rebuilds the exact tree.  Good
+enough for single-host CPU validation and structurally identical to what a
+sharded orbax layout would store per shard.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if isinstance(p, jax.tree_util.DictKey) else str(p.idx)
+            for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, *, params: Any, opt_state: Any | None = None,
+         step: int = 0) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {f"params/{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        payload.update({f"opt/{k}": v for k, v in _flatten(opt_state).items()})
+    payload["meta/step"] = np.asarray(step)
+    np.savez(path, **payload)
+
+
+def load(path: str, *, params_like: Any, opt_like: Any | None = None
+         ) -> tuple[Any, Any | None, int]:
+    """Restore into the structure of the provided templates."""
+    data = np.load(path)
+
+    def restore(template: Any, prefix: str) -> Any:
+        leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
+        new_leaves = []
+        for path_k, leaf in leaves_p:
+            key = prefix + "/".join(
+                str(p.key) if isinstance(p, jax.tree_util.DictKey)
+                else str(p.idx) for p in path_k)
+            arr = data[key]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+            new_leaves.append(arr.astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+    params = restore(params_like, "params/")
+    opt = restore(opt_like, "opt/") if opt_like is not None else None
+    return params, opt, int(data["meta/step"])

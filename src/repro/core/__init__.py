@@ -1,0 +1,30 @@
+"""Paper core: contention-aware scheduling of ring-all-reduce DDL jobs.
+
+Faithful implementation of Yu et al., "On Scheduling Ring-All-Reduce
+Learning Jobs in Multi-Tenant GPU Clusters with Communication Contention"
+(MobiHoc '22): the Eq. (6)-(9) analytical model, the slot simulator that
+evaluates actual execution under time-varying contention, the SJF-BCO
+approximation algorithm (Algs. 1-3) and the §7 baselines.
+"""
+from repro.core.cluster import Cluster, philly_cluster
+from repro.core.jobs import Job, philly_workload
+from repro.core.contention import (IterModel, contention_level, degradation,
+                                   evaluate, estimate_exec_time, tau_bounds)
+from repro.core.simulator import SimResult, simulate
+from repro.core.sjf_bco import Schedule, fa_ffp, lbsgf, rho_hat, sjf_bco
+from repro.core import baselines
+from repro.core.baselines import (first_fit, list_scheduling, random_policy,
+                                  reserved_bandwidth)
+from repro.core.theory import TheoryReport, report
+
+baselines.POLICIES["sjf-bco"] = sjf_bco
+
+__all__ = [
+    "Cluster", "philly_cluster", "Job", "philly_workload",
+    "IterModel", "contention_level", "degradation", "evaluate",
+    "estimate_exec_time", "tau_bounds",
+    "SimResult", "simulate",
+    "Schedule", "fa_ffp", "lbsgf", "rho_hat", "sjf_bco",
+    "first_fit", "list_scheduling", "random_policy", "reserved_bandwidth",
+    "TheoryReport", "report",
+]

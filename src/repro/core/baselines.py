@@ -1,0 +1,140 @@
+"""Baseline scheduling policies from §7-2: First-Fit, List-Scheduling, RAND.
+
+All baselines share SJF-BCO's busy-time accounting (U clocks, refined
+rho_hat(y^k)/u charging) so the comparison isolates the *placement policy*:
+
+  * FF   -- walk servers in id order, take the first G_j feasible GPUs
+            (packs into fewest servers; fragmentation-averse but
+            contention/overhead-oblivious);
+  * LS   -- globally least-loaded feasible GPUs (balances busy time but may
+            span many servers => high overhead + contention);
+  * RAND -- random servers/GPUs with theta_u = T (paper sets the RAND limit
+            to the horizon to avoid long feasibility searches).
+
+FF and LS bisect their own theta_u like SJF-BCO does, per the paper's
+"theta_u^f is the maximum execution time limit returned by policy f".
+Baselines keep the user-submitted arrival order (no SJF sort).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cluster import Cluster
+from repro.core.jobs import Job
+from repro.core.sjf_bco import (Schedule, _State, _finalize, _try_place,
+                                nominal_rho)
+
+
+def _ff_pick(state: _State, job: Job, rho_nom: float, u: float, theta: float
+             ) -> np.ndarray | None:
+    # Server-major, GPU-id order == first fit from server to server.
+    ids = np.flatnonzero(state.U + rho_nom / u <= theta + 1e-9)
+    if len(ids) < job.num_gpus:
+        return None
+    return ids[: job.num_gpus]
+
+
+def _ls_pick(state: _State, job: Job, rho_nom: float, u: float, theta: float
+             ) -> np.ndarray | None:
+    feasible = np.flatnonzero(state.U + rho_nom / u <= theta + 1e-9)
+    if len(feasible) < job.num_gpus:
+        return None
+    order = feasible[np.argsort(state.U[feasible], kind="stable")]
+    return order[: job.num_gpus]
+
+
+def _run(cluster: Cluster, jobs: list[Job], picker, u: float, theta: float
+         ) -> _State | None:
+    state = _State(cluster)
+    for job in jobs:
+        if not _try_place(state, job, picker, nominal_rho(cluster, job), u, theta):
+            return None
+    return state
+
+
+def _bisect(cluster: Cluster, jobs: list[Job], picker, horizon: int,
+            u: float, name: str) -> Schedule:
+    best: Schedule | None = None
+    left, right = 1.0, float(horizon)
+    while left <= right:
+        theta = 0.5 * (left + right)
+        state = _run(cluster, jobs, picker, u, theta)
+        if state is not None:
+            cand = _finalize(state, len(jobs), theta, None, name)
+            if best is None or cand.est_makespan <= best.est_makespan:
+                best = cand
+            right = theta - 1.0
+        else:
+            left = theta + 1.0
+    if best is None:
+        raise RuntimeError(f"{name}: no feasible schedule within horizon")
+    return best
+
+
+def first_fit(cluster: Cluster, jobs: list[Job], horizon: int,
+              u: float = 1.5) -> Schedule:
+    return _bisect(cluster, jobs, _ff_pick, horizon, u, "FF")
+
+
+def list_scheduling(cluster: Cluster, jobs: list[Job], horizon: int,
+                    u: float = 1.5) -> Schedule:
+    return _bisect(cluster, jobs, _ls_pick, horizon, u, "LS")
+
+
+def random_policy(cluster: Cluster, jobs: list[Job], horizon: int,
+                  u: float = 1.5, seed: int = 0) -> Schedule:
+    rng = np.random.default_rng(seed)
+    state = _State(cluster)
+    theta = float(horizon)
+
+    def picker(st, job, rho_nom, uu, th):
+        feasible = np.flatnonzero(st.U + rho_nom / uu <= th + 1e-9)
+        if len(feasible) < job.num_gpus:
+            return None
+        return rng.choice(feasible, size=job.num_gpus, replace=False)
+
+    for job in jobs:
+        if not _try_place(state, job, picker, nominal_rho(cluster, job), u, theta):
+            raise RuntimeError("RAND: no feasible schedule within horizon")
+    return _finalize(state, len(jobs), theta, None, "RAND")
+
+
+def reserved_bandwidth(cluster: Cluster, jobs: list[Job], horizon: int,
+                       u: float = 1.5) -> Schedule:
+    """GADGET-style ablation [22]: schedule as if each job had reserved,
+    contention-free bandwidth (rho charged at its nominal lower estimate,
+    placement = least-loaded GPUs).  The simulator *does* model contention,
+    so the actual makespan of this schedule exposes the optimism the paper
+    argues against."""
+    best: Schedule | None = None
+    left, right = 1.0, float(horizon)
+    while left <= right:
+        theta = 0.5 * (left + right)
+        state = _State(cluster)
+        ok = True
+        for job in jobs:
+            rho = nominal_rho(cluster, job)
+            gpus = _ls_pick(state, job, rho, u, theta)
+            if gpus is None or np.any(state.U[gpus] + rho / u > theta + 1e-9):
+                ok = False
+                break
+            start = float(state.R[gpus].max()) if len(gpus) else 0.0
+            state.commit(job, np.asarray(gpus), rho, start, u)
+        if ok:
+            cand = _finalize(state, len(jobs), theta, None, "RESERVED")
+            if best is None or cand.est_makespan <= best.est_makespan:
+                best = cand
+            right = theta - 1.0
+        else:
+            left = theta + 1.0
+    assert best is not None
+    return best
+
+
+POLICIES = {
+    "sjf-bco": None,  # filled in repro.core.__init__ to avoid import cycle
+    "ff": first_fit,
+    "ls": list_scheduling,
+    "rand": random_policy,
+    "reserved": reserved_bandwidth,
+}

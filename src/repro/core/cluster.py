@@ -1,0 +1,81 @@
+"""Cluster model for RAR-DDLS (paper §4.1).
+
+A multi-tenant GPU cluster: a set of servers ``s ∈ S``, each with GPU
+capacity ``O_s``; fast intra-server interconnect bandwidth ``b_i`` (NVLink
+class) and slow, contended inter-server bandwidth ``b_e`` (Ethernet class),
+with ``b_i >> b_e``.  All GPUs are homogeneous with compute speed ``C``
+(amount of gradient data reduced per time-slot).
+
+The contention-model constants (paper Eqs. 6-8):
+  * ``xi1``  -- fraction of wall time a job actually contends (Eq. 7)
+  * ``xi2``  -- per-server communication-overhead coefficient (gamma)
+  * ``alpha`` -- bandwidth-sharing degradation slope, f(a,k) = k + a(k-1)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Cluster:
+    """Static description of the multi-tenant GPU cluster."""
+
+    capacities: tuple[int, ...]      # O_s, GPUs per server
+    b_intra: float = 300.0           # b^i, intra-server link bandwidth (GB/slot)
+    b_inter: float = 1.25            # b^e, inter-server link bandwidth (GB/slot)
+    gpu_speed: float = 50.0          # C, reduction throughput (GB/slot)
+    xi1: float = 0.7                 # Eq. (7) contention duty-cycle
+    xi2: float = 0.002               # gamma coefficient (slots per server spanned)
+    alpha: float = 0.3               # degradation slope in f(alpha, k)
+
+    def __post_init__(self) -> None:
+        if not self.capacities:
+            raise ValueError("cluster needs at least one server")
+        if any(c <= 0 for c in self.capacities):
+            raise ValueError("server capacities must be positive")
+        if self.b_intra < self.b_inter:
+            raise ValueError("paper assumes b_intra >> b_inter")
+
+    # ---- derived quantities -------------------------------------------------
+
+    @property
+    def num_servers(self) -> int:
+        return len(self.capacities)
+
+    @property
+    def num_gpus(self) -> int:
+        return int(sum(self.capacities))
+
+    @property
+    def capacities_array(self) -> np.ndarray:
+        return np.asarray(self.capacities, dtype=np.int64)
+
+    @property
+    def gpu_server(self) -> np.ndarray:
+        """Map global GPU id -> server id, shape [N]."""
+        return np.repeat(np.arange(self.num_servers), self.capacities_array)
+
+    def server_gpu_ids(self, s: int) -> np.ndarray:
+        """Global GPU ids living on server ``s``."""
+        offsets = np.concatenate([[0], np.cumsum(self.capacities_array)])
+        return np.arange(offsets[s], offsets[s + 1])
+
+    def placement_matrix(self, gpu_sets: Sequence[np.ndarray]) -> np.ndarray:
+        """Build the Y matrix [J, S]: #GPUs of each job on each server."""
+        srv = self.gpu_server
+        out = np.zeros((len(gpu_sets), self.num_servers), dtype=np.int64)
+        for j, gpus in enumerate(gpu_sets):
+            if len(gpus) == 0:
+                continue
+            np.add.at(out[j], srv[np.asarray(gpus, dtype=np.int64)], 1)
+        return out
+
+
+def philly_cluster(num_servers: int = 20, seed: int = 0) -> Cluster:
+    """The §7 experiment cluster: ``num_servers`` servers, O_s ~ U{4,8,16,32}."""
+    rng = np.random.default_rng(seed)
+    caps = tuple(int(c) for c in rng.choice([4, 8, 16, 32], size=num_servers))
+    return Cluster(capacities=caps)

@@ -1,0 +1,131 @@
+"""The paper's analytical model: Eqs. (6)-(8), vectorised over jobs.
+
+Given a placement matrix Y[t] (rows = active jobs, cols = servers, entries =
+#GPUs of that job on that server), compute
+
+  p_j[t]   (Eq. 6)  largest #concurrent jobs sharing an inter-server link
+  k_j[t]   (Eq. 7)  effective contention, k = xi1 * p (clamped >= 1)
+  f(a, k)           bandwidth-sharing degradation, linear form k + a(k-1)
+  B_j(y[t])         bottleneck bandwidth: b_i if single-server else b_e/f
+  gamma_j           comm overhead, xi2 * #servers spanned
+  tau_j[t] (Eq. 8)  per-iteration RAR time
+  phi_j[t]          iterations completed per slot, floor(1/tau)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.cluster import Cluster
+from repro.core.jobs import Job
+
+
+@dataclasses.dataclass(frozen=True)
+class IterModel:
+    """Per-slot evaluation of the Eq. (8) terms for a set of active jobs."""
+
+    p: np.ndarray          # Eq. (6), int [J]
+    k: np.ndarray          # Eq. (7), float [J]
+    bandwidth: np.ndarray  # B_j(y[t]), float [J]
+    gamma: np.ndarray      # comm overhead, float [J]
+    exchange: np.ndarray   # information-exchange term, float [J]
+    reduce: np.ndarray     # reduction-compute term, float [J]
+    compute: np.ndarray    # Delta_f * M + Delta_b, float [J]
+    tau: np.ndarray        # Eq. (8), float [J]
+    phi: np.ndarray        # iterations per slot, int [J]
+
+
+def degradation(alpha: float, k: np.ndarray) -> np.ndarray:
+    """Bandwidth-sharing degradation factor f(alpha, k).
+
+    Linear model from §4.1: f = k + alpha * (k - 1); f(alpha, 1) = 1 and
+    increasing in k, as the paper requires.
+    """
+    k = np.maximum(np.asarray(k, dtype=np.float64), 1.0)
+    return k + alpha * (k - 1.0)
+
+
+def contention_level(Y: np.ndarray, G: np.ndarray) -> np.ndarray:
+    """p_j per Eq. (6).
+
+    A job *straddles* server s iff 0 < y_js < G_j (it uses inter-server
+    links through s).  p_j = max over straddled servers of the number of
+    straddling jobs on that server (including j itself).
+    """
+    Y = np.asarray(Y)
+    if Y.ndim != 2:
+        raise ValueError("Y must be [J, S]")
+    straddle = (Y > 0) & (Y < G[:, None])          # [J, S]
+    per_server = straddle.sum(axis=0)              # [S], #contenders per server
+    p = np.where(straddle, per_server[None, :], 0).max(axis=1)
+    return p.astype(np.int64)
+
+
+def evaluate(cluster: Cluster, jobs: list[Job], Y: np.ndarray) -> IterModel:
+    """Evaluate Eqs. (6)-(8) for the active-job placement ``Y`` [J, S]."""
+    J = len(jobs)
+    if Y.shape != (J, cluster.num_servers):
+        raise ValueError(f"Y shape {Y.shape} != ({J}, {cluster.num_servers})")
+    G = np.asarray([j.num_gpus for j in jobs], dtype=np.int64)
+    if not np.array_equal(Y.sum(axis=1), G):
+        raise ValueError("placement does not cover every job's GPUs (Eq. 1)")
+
+    m = np.asarray([j.grad_size for j in jobs], dtype=np.float64)
+    w = G.astype(np.float64)
+    M = np.asarray([j.batch for j in jobs], dtype=np.float64)
+    dfw = np.asarray([j.dt_fwd for j in jobs], dtype=np.float64)
+    dbw = np.asarray([j.dt_bwd for j in jobs], dtype=np.float64)
+
+    p = contention_level(Y, G)
+    k = np.maximum(cluster.xi1 * p, 1.0)
+    multi = (Y > 0).sum(axis=1) > 1
+    f = degradation(cluster.alpha, k)
+    bandwidth = np.where(multi, cluster.b_inter / f, cluster.b_intra)
+
+    n_srv = (Y > 0).sum(axis=1).astype(np.float64)
+    gamma = cluster.xi2 * n_srv
+
+    # Eq. (8): single-GPU jobs (w=1) have no exchange/reduction terms.
+    share = np.where(w > 1, (m / w) * (w - 1.0), 0.0)
+    exchange = 2.0 * share / bandwidth
+    reduce_t = share / cluster.gpu_speed
+    compute = dfw * M + dbw
+    tau = exchange + reduce_t + gamma + compute
+    phi = np.floor(1.0 / tau).astype(np.int64)
+    return IterModel(p=p, k=k, bandwidth=bandwidth, gamma=gamma,
+                     exchange=exchange, reduce=reduce_t, compute=compute,
+                     tau=tau, phi=phi)
+
+
+def tau_bounds(cluster: Cluster, job: Job) -> tuple[float, float]:
+    """[tau_lo, tau_hi] per §5.1: B in [b_e/f(a, max_s O_s), b_i], spread in
+    [1, G_j] servers.  Used to derive the l/u estimate bracket."""
+    w = float(job.num_gpus)
+    share = (job.grad_size / w) * (w - 1.0) if w > 1 else 0.0
+    compute = job.dt_fwd * job.batch + job.dt_bwd
+    k_max = max(1.0, cluster.xi1 * max(cluster.capacities))
+    b_lo = cluster.b_inter / float(degradation(cluster.alpha, np.array(k_max)))
+    tau_lo = 2.0 * share / cluster.b_intra + share / cluster.gpu_speed \
+        + cluster.xi2 * 1.0 + compute
+    tau_hi = 2.0 * share / b_lo + share / cluster.gpu_speed \
+        + cluster.xi2 * min(w, cluster.num_servers) + compute
+    return tau_lo, tau_hi
+
+
+def estimate_exec_time(cluster: Cluster, job: Job, Y_snapshot: np.ndarray,
+                       jobs_snapshot: list[Job], y_j: np.ndarray) -> float:
+    """rho_hat(y^k): estimated execution time (slots) of ``job`` if placed as
+    ``y_j`` [S] while the jobs in ``jobs_snapshot`` are placed as
+    ``Y_snapshot`` [J', S].
+
+    This is the scheduler-side estimate of Fig. 3: evaluate Eq. (8) against
+    the current placement snapshot and multiply by F_j.  The true rho is
+    later produced by the slot simulator (contention evolves over time).
+    """
+    Y = np.vstack([Y_snapshot, y_j[None, :]]) if len(jobs_snapshot) else y_j[None, :]
+    model = evaluate(cluster, jobs_snapshot + [job], Y)
+    tau = float(model.tau[-1])
+    # slots needed at phi iterations/slot
+    phi = max(1, int(np.floor(1.0 / tau)))
+    return float(int(np.ceil(job.iters / phi)))

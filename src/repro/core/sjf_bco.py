@@ -1,0 +1,264 @@
+"""SJF-BCO: Smallest Job First with Balanced Contention and Overhead.
+
+Implements the paper's Algorithm 1 (bisection on the per-GPU execution-time
+budget theta_u, sweep over the small/large-job threshold kappa), Algorithm 2
+(FA-FFP, fragment-aware first-fit packing, used when G_j <= kappa) and
+Algorithm 3 (LBSGF, least-busy-server-GPU-first, used when G_j > kappa).
+
+Accounting follows §5-3: every GPU g carries an accumulated *busy-time*
+clock U_s^g, charged rho_hat_j(y^k) / u per placed job (Eq. 15), and
+placement is feasible only while U stays within theta_u (Eq. 16) -- this is
+what Lemma 2 certifies.  Alongside U we keep a real-time clock R_g
+(estimated gang start = max R over the chosen GPUs) used to *estimate* the
+makespan of a candidate (theta_u, kappa) schedule; the actual makespan is
+later produced by ``repro.core.simulator`` which re-evaluates contention
+slot by slot.
+
+rho_hat_j(y^k) is schedule-dependent, exactly as in the paper's Table 1: we
+evaluate Eq. (8) against the snapshot of already-placed, time-overlapping
+jobs (the Fig. 3 "search -> evaluate" loop) and multiply by F_j.  A cheap
+contention-free *nominal* estimate pre-filters the feasible GPU pool; the
+refined estimate is what gets charged to U and re-checked against theta_u.
+
+The paper's "wait for some job to exit and retry" (Alg. 2 line 9, Alg. 3
+line 12) concerns run-time availability; in the static busy-time accounting
+waiting never reduces U, so an insufficient feasible-GPU set is reported as
+infeasible for the current (theta_u, kappa), matching Alg. 1 line 14.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.cluster import Cluster
+from repro.core.contention import evaluate, tau_bounds
+from repro.core.jobs import Job
+
+
+@dataclasses.dataclass
+class Schedule:
+    """Result of a scheduling policy, ready for the simulator."""
+    assignment: list[tuple[int, np.ndarray]]   # (job idx, gpu ids), placement order
+    est_start: np.ndarray
+    est_finish: np.ndarray
+    est_makespan: float
+    theta: float
+    kappa: int | None = None
+    policy: str = ""
+    _max_busy: float = 0.0
+
+    @property
+    def max_busy_time(self) -> float:          # = W_max^Alg1 (Lemma 2)
+        return self._max_busy
+
+
+def nominal_rho(cluster: Cluster, job: Job) -> float:
+    """Contention-free lower estimate (tau at b_intra, single server)."""
+    lo, _ = tau_bounds(cluster, job)
+    phi = max(1, int(np.floor(1.0 / lo)))
+    return float(int(np.ceil(job.iters / phi)))
+
+
+def rho_hat(cluster: Cluster, job: Job) -> float:
+    """Schedule-independent mid-bracket estimate, used by theory checks."""
+    lo, hi = tau_bounds(cluster, job)
+    tau = 0.5 * (lo + hi)
+    phi = max(1, int(np.floor(1.0 / tau)))
+    return float(int(np.ceil(job.iters / phi)))
+
+
+class _State:
+    """Per-attempt scheduler state: busy clocks U, real clocks R, and the
+    snapshot of placed jobs used for the rho_hat(y^k) refinement."""
+
+    def __init__(self, cluster: Cluster):
+        self.cluster = cluster
+        self.U = np.zeros(cluster.num_gpus)    # busy-time clock (Eq. 15/16)
+        self.R = np.zeros(cluster.num_gpus)    # real-time clock (gang start)
+        self.assignment: list[tuple[int, np.ndarray]] = []
+        self.placed_jobs: list[Job] = []
+        self.placed_y: list[np.ndarray] = []   # per-server GPU counts
+        self.est_start: dict[int, float] = {}
+        self.est_finish: dict[int, float] = {}
+
+    def _y_of(self, gpus: np.ndarray) -> np.ndarray:
+        y = np.zeros(self.cluster.num_servers, dtype=np.int64)
+        np.add.at(y, self.cluster.gpu_server[gpus], 1)
+        return y
+
+    def refined_rho(self, job: Job, gpus: np.ndarray) -> tuple[float, float]:
+        """rho_hat_j(y^k): Eq. (8) against placed jobs overlapping the
+        estimated gang start.  Returns (rho_hat, est_start)."""
+        start = float(self.R[gpus].max()) if len(gpus) else 0.0
+        y_j = self._y_of(gpus)
+        overlap_jobs, overlap_y = [], []
+        for jb, y in zip(self.placed_jobs, self.placed_y):
+            if self.est_finish[jb.jid] > start + 1e-9:
+                overlap_jobs.append(jb)
+                overlap_y.append(y)
+        Y = np.vstack(overlap_y + [y_j]) if overlap_y else y_j[None, :]
+        model = evaluate(self.cluster, overlap_jobs + [job], Y)
+        tau = float(model.tau[-1])
+        phi = max(1, int(np.floor(1.0 / tau)))
+        return float(int(np.ceil(job.iters / phi))), start
+
+    def commit(self, job: Job, gpus: np.ndarray, rho: float, start: float,
+               u: float) -> None:
+        self.U[gpus] += rho / u
+        self.R[gpus] = start + rho
+        self.assignment.append((job.jid, gpus))
+        self.placed_jobs.append(job)
+        self.placed_y.append(self._y_of(gpus))
+        self.est_start[job.jid] = start
+        self.est_finish[job.jid] = start + rho
+
+
+def _try_place(state: _State, job: Job, picker, rho_nom: float, u: float,
+               theta: float, tries: int = 4) -> bool:
+    """Pick GPUs with the nominal-estimate filter, refine rho_hat(y^k) for
+    the chosen set, and re-check the Eq. (16) budget.  If the refined charge
+    overflows theta on some GPU, re-filter with the refined estimate (which
+    excludes the marginal GPUs) and retry -- mirroring the paper's
+    "re-evaluate after the schedule is known" loop of Fig. 3."""
+    rho_try = rho_nom
+    for _ in range(tries):
+        gpus = picker(state, job, rho_try, u, theta)
+        if gpus is None:
+            return False
+        gpus = np.asarray(gpus)
+        rho, start = state.refined_rho(job, gpus)
+        if np.all(state.U[gpus] + rho / u <= theta + 1e-9):
+            state.commit(job, gpus, rho, start, u)
+            return True
+        rho_try = max(rho, rho_try * 1.05)
+    return False
+
+
+def fa_ffp(state: _State, job: Job, rho_nom: float, u: float, theta: float
+           ) -> np.ndarray | None:
+    """Algorithm 2: Fragment-Aware First-Fit Packing (small jobs).
+
+    Feasible pool = GPUs whose busy time stays within theta after the job
+    (Alg. 2 line 2).  Fragment-awareness (the stated intuition of §5-4):
+    prefer to pack the whole job into a single, already-occupied server --
+    best-fit on feasible capacity -- so small jobs neither fragment empty
+    servers nor straddle links; fall back to globally least-loaded GPUs
+    (least-execution-time-first, the property Lemma 4(b) relies on) when no
+    single server fits."""
+    cl = state.cluster
+    feasible = np.flatnonzero(state.U + rho_nom / u <= theta + 1e-9)
+    if len(feasible) < job.num_gpus:
+        return None
+    srv_of = cl.gpu_server[feasible]
+    best_srv, best_key = -1, None
+    for s in range(cl.num_servers):
+        cnt = int((srv_of == s).sum())
+        if cnt < job.num_gpus:
+            continue
+        occupied = float(state.U[cl.server_gpu_ids(s)].sum())
+        # Best fit: fewest feasible slots left after placing; prefer servers
+        # that already carry work (pack, don't open fresh servers).
+        key = (cnt - job.num_gpus, -occupied)
+        if best_key is None or key < best_key:
+            best_srv, best_key = s, key
+    if best_srv >= 0:
+        pool = feasible[srv_of == best_srv]
+        order = pool[np.argsort(state.U[pool], kind="stable")]
+        return order[: job.num_gpus]
+    order = feasible[np.argsort(state.U[feasible], kind="stable")]
+    return order[: job.num_gpus]
+
+
+def lbsgf(state: _State, job: Job, rho_nom: float, u: float, theta: float
+          ) -> np.ndarray | None:
+    """Algorithm 3: Least-Busy-Server-GPU-First (large jobs).
+
+    Sort servers by average GPU busy time; take the top-m least-busy servers
+    with cumulative capacity >= lambda_j * G_j (line 2); walk those servers
+    in least-busy order appending their feasible GPUs sorted by U (lines
+    4-5), and take the first G_j (line 7).  Server-major order packs the
+    ring into the emptiest few servers — which is what makes a larger
+    lambda (a wider server pool) monotonically reduce contention+overhead,
+    the Fig. 7 behaviour."""
+    cl = state.cluster
+    srv_of = cl.gpu_server
+    caps = cl.capacities_array
+    srv_load = np.zeros(cl.num_servers)
+    np.add.at(srv_load, srv_of, state.U)
+    srv_order = np.argsort(srv_load / caps, kind="stable")
+    need = job.lam * job.num_gpus
+    cum = np.cumsum(caps[srv_order])
+    m = int(np.searchsorted(cum, need) + 1)
+    m = min(m, cl.num_servers)
+    selected = srv_order[:m]
+    srv_rank = {int(s): r for r, s in enumerate(selected)}
+
+    pool = np.flatnonzero(state.U + rho_nom / u <= theta + 1e-9)
+    pool = pool[np.isin(srv_of[pool], selected)]
+    if len(pool) < job.num_gpus:
+        return None
+    ranks = np.asarray([srv_rank[int(srv_of[g])] for g in pool])
+    order = np.lexsort((state.U[pool], ranks))   # server-major, then least U
+    return pool[order][: job.num_gpus]
+
+
+def _attempt(cluster: Cluster, jobs_sorted: list[Job], rho_noms: dict[int, float],
+             u: float, theta: float, kappa: int) -> _State | None:
+    """One (theta, kappa) pass of Alg. 1 lines 8-16."""
+    state = _State(cluster)
+    for job in jobs_sorted:
+        picker = fa_ffp if job.num_gpus <= kappa else lbsgf
+        if not _try_place(state, job, picker, rho_noms[job.jid], u, theta):
+            return None
+    return state
+
+
+def _finalize(state: _State, n_jobs: int, theta: float, kappa: int | None,
+              policy: str) -> Schedule:
+    est_start = np.full(n_jobs, -1.0)
+    est_finish = np.full(n_jobs, -1.0)
+    for j, s in state.est_start.items():
+        est_start[j] = s
+        est_finish[j] = state.est_finish[j]
+    return Schedule(assignment=state.assignment, est_start=est_start,
+                    est_finish=est_finish,
+                    est_makespan=float(est_finish.max(initial=0.0)),
+                    theta=theta, kappa=kappa, policy=policy,
+                    _max_busy=float(state.U.max(initial=0.0)))
+
+
+def sjf_bco(cluster: Cluster, jobs: list[Job], horizon: int,
+            u: float = 1.5, kappas: list[int] | None = None) -> Schedule:
+    """Algorithm 1.  ``horizon`` is T, the bisection upper bound for theta_u."""
+    jobs_sorted = sorted(jobs, key=lambda j: (j.num_gpus, j.jid))   # line 3
+    rho_noms = {j.jid: nominal_rho(cluster, j) for j in jobs}
+    if kappas is None:
+        # Only kappa values at distinct job sizes change the FA-FFP/LBSGF
+        # split; sweeping them is equivalent to the paper's 1..max_j G_j.
+        kappas = sorted({j.num_gpus for j in jobs})
+        if 1 not in kappas:
+            kappas.insert(0, 1)
+
+    best: Schedule | None = None
+    left, right = 1.0, float(horizon)                              # line 4
+    while left <= right:                                           # line 5
+        theta = 0.5 * (left + right)                               # line 6
+        best_theta: Schedule | None = None
+        for kappa in kappas:                                       # line 7
+            state = _attempt(cluster, jobs_sorted, rho_noms, u, theta, kappa)
+            if state is None:                                      # line 14
+                continue
+            cand = _finalize(state, len(jobs), theta, kappa, "SJF-BCO")
+            if best_theta is None or cand.est_makespan < best_theta.est_makespan:
+                best_theta = cand                                  # lines 17-18
+        if best_theta is not None:                                 # lines 19-21
+            if best is None or best_theta.est_makespan <= best.est_makespan:
+                best = best_theta
+            right = theta - 1.0
+        else:
+            left = theta + 1.0                                     # line 23
+    if best is None:
+        raise RuntimeError("SJF-BCO: no feasible schedule within horizon; "
+                           "increase T")
+    return best

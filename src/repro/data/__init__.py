@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, batch_iterator, make_batch
+
+__all__ = ["DataConfig", "batch_iterator", "make_batch"]

@@ -1,0 +1,89 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These handle layout adaptation (GQA head repetition, sequence padding to
+block multiples, [B,S,H,hd] <-> [B,H,S,hd]) so model code can call them
+with natural shapes.  On CPU the kernels execute in interpret mode; on TPU
+they compile to Mosaic."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import swiglu as _sg
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> tuple[jax.Array, int]:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 128,
+                    block_k: int = 128) -> jax.Array:
+    """Model-layout entry point: q [B,S,H,hd], k/v [B,S,K,hd] (GQA ok).
+
+    Repeats kv heads to match q heads, pads S to block multiples (padded
+    kv columns carry position > any real q so the causal mask kills them),
+    and returns [B,S,H,hd]."""
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    if H != K:
+        rep = H // K
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    bq = min(block_q, 1 << (Sq - 1).bit_length())       # pow2 cap
+    bk = min(block_k, 1 << (Skv - 1).bit_length())
+    qt, pad_q = _pad_to(qt, 2, bq)
+    kt, _ = _pad_to(kt, 2, bk)
+    vt, _ = _pad_to(vt, 2, bk)
+    out = _fa.flash_attention(qt, kt, vt, causal=causal, window=window,
+                              softcap=softcap, block_q=bq, block_k=bk,
+                              kv_len=Skv)
+    if pad_q:
+        out = out[:, :, :Sq]
+    return out.transpose(0, 2, 1, 3)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """x: [..., d] any leading shape."""
+    shape = x.shape
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, shape[-1])
+    br = 256
+    while rows % br and br > 1:
+        br //= 2
+    out = _rn.rmsnorm(x2, scale, eps=eps, block_rows=br)
+    return out.reshape(shape)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array) -> jax.Array:
+    """x: [..., K]; w: [K, N]."""
+    shape = x.shape
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, shape[-1])
+    bm = 128
+    while rows % bm and bm > 1:
+        bm //= 2
+    bn = 128
+    while w_gate.shape[1] % bn and bn > 1:
+        bn //= 2
+    bk = 512
+    while shape[-1] % bk and bk > 1:
+        bk //= 2
+    out = _sg.swiglu(x2, w_gate, w_up, block_m=bm, block_n=bn, block_k=bk)
+    return out.reshape(shape[:-1] + (w_gate.shape[1],))

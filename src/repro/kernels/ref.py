@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0) -> jax.Array:
+    """Reference attention.  q/k/v: [B, H, S, hd] (equal head counts —
+    GQA repeat happens in ops).  Returns [B, H, S, hd]."""
+    Sq, Skv = q.shape[2], k.shape[2]
+    hd = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    if causal:
+        qi = jnp.arange(Sq)[:, None]
+        ki = jnp.arange(Skv)[None, :]
+        rel = qi - ki
+        mask = rel >= 0
+        if window:
+            mask &= rel < window
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """x: [rows, d]; scale: [d]."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def mlstm_parallel(q: jax.Array, k: jax.Array, v: jax.Array,
+                   F: jax.Array, i_pre: jax.Array) -> jax.Array:
+    """Reference mLSTM parallel form.  q/k/v: [BH, S, hd] (k pre-scaled);
+    F/i_pre: [BH, S].  Mirrors ssm._mlstm_parallel_block at full S."""
+    q, k, v = (t.astype(jnp.float32) for t in (q, k, v))
+    S = q.shape[1]
+    D = F[:, :, None] - F[:, None, :] + i_pre[:, None, :]     # [BH, t, s]
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    D = jnp.where(causal[None], D, -jnp.inf)
+    m = jnp.max(D, axis=-1, keepdims=True)
+    w = jnp.exp(D - m)
+    scores = jnp.einsum("btd,bsd->bts", q, k) * w
+    norm = jnp.maximum(jnp.abs(scores.sum(-1, keepdims=True)), jnp.exp(-m))
+    return jnp.einsum("bts,bsd->btd", scores / norm, v).astype(q.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array) -> jax.Array:
+    """Fused silu(x @ w_gate) * (x @ w_up).  x: [M, K]; w: [K, N]."""
+    g = x.astype(jnp.float32) @ w_gate.astype(jnp.float32)
+    u = x.astype(jnp.float32) @ w_up.astype(jnp.float32)
+    return (jax.nn.silu(g) * u).astype(x.dtype)

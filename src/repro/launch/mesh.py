@@ -1,0 +1,33 @@
+"""Production mesh definitions (TPU v5e pods).
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod: 2 pods = 512 chips as (pod=2, data=16, model=16); the "pod"
+axis crosses DCN — the contended inter-server path of the paper's model
+(DESIGN.md hardware-adaptation notes).
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module does not touch jax device state; the dry-run sets
+XLA_FLAGS before calling it.
+"""
+from __future__ import annotations
+
+import jax
+
+# v5e hardware constants used by the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW = 50e9                     # bytes/s per link
+DCN_BW = 6.25e9                   # bytes/s per chip across pods (4x100G NIC
+                                  # per 8-chip host) — the contended b^e path
+POD_CHIPS = 256
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over however many (forced) host devices exist."""
+    return jax.make_mesh((data, model), ("data", "model"))

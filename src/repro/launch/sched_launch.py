@@ -1,0 +1,119 @@
+"""Scheduler-integrated multi-job launcher: SJF-BCO placing *real* JAX
+RAR training jobs onto device slices.
+
+This is the paper's full loop made executable: a multi-tenant "cluster" of
+host devices grouped into servers, a queue of RAR data-parallel training
+jobs (reduced archs), SJF-BCO (or a baseline policy) deciding placement and
+order, and each job actually training with the explicit ring-all-reduce
+collective on a mesh built from exactly the devices the scheduler assigned.
+
+On the CPU container jobs execute sequentially (one process), so wall-clock
+contention is not physical; the simulator provides the contention-aware
+makespan for the chosen placement, and the launcher proves the placements
+are *executable* (each job really trains on its assigned slice).  On a real
+TPU/GPU cluster each job would be launched concurrently on its slice.
+
+    PYTHONPATH=src python -m repro.launch.sched_launch \
+        --devices 8 --servers 2 --jobs 6 --policy sjf-bco --steps 4
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--servers", type=int, default=2)
+    ap.add_argument("--jobs", type=int, default=6)
+    ap.add_argument("--policy", default="sjf-bco",
+                    choices=("sjf-bco", "ff", "ls", "rand"))
+    ap.add_argument("--steps", type=int, default=4,
+                    help="real train steps per job (F_j for the simulator "
+                         "is scaled from this)")
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.configs import ARCHS, get_config
+    from repro.core import (Cluster, Job, baselines, simulate, sjf_bco)
+    from repro.data import DataConfig, make_batch
+    from repro.dist.steps import make_rar_train_step
+    from repro.models import build_model
+    from repro.models.config import InputShape
+    from repro.optim import adamw
+    from repro.optim.adamw import AdamWConfig
+
+    if args.devices % args.servers:
+        raise SystemExit("--devices must divide evenly into --servers")
+    per_srv = args.devices // args.servers
+    cluster = Cluster(capacities=(per_srv,) * args.servers)
+
+    # --- job queue: reduced archs, power-of-two ring widths ----------------
+    rng = np.random.default_rng(args.seed)
+    arch_pool = ["llama3.2-1b", "xlstm-350m", "internvl2-1b", "whisper-tiny",
+                 "hymba-1.5b", "deepseek-moe-16b"]
+    jobs, job_archs = [], []
+    for j in range(args.jobs):
+        g = int(rng.choice([1, 2, min(4, args.devices)]))
+        arch = arch_pool[j % len(arch_pool)]
+        jobs.append(Job(jid=j, num_gpus=g,
+                        iters=int(rng.integers(1000, 3000)),
+                        grad_size=float(rng.uniform(5e-4, 2e-3)),
+                        batch=32, dt_fwd=3e-4,
+                        dt_bwd=float(rng.uniform(4e-3, 1.2e-2))))
+        job_archs.append(arch)
+
+    # --- schedule -----------------------------------------------------------
+    policy = {"sjf-bco": sjf_bco, "ff": baselines.first_fit,
+              "ls": baselines.list_scheduling,
+              "rand": baselines.random_policy}[args.policy]
+    sched = policy(cluster, jobs, horizon=100000)
+    sim = simulate(cluster, jobs, sched.assignment)
+    print(f"[sched] policy={args.policy}: simulated makespan "
+          f"{sim.makespan:.0f} slots, avg JCT {sim.avg_jct:.0f}, "
+          f"peak contention {sim.peak_contention}")
+
+    # --- execute each job on its assigned device slice ---------------------
+    devices = np.asarray(jax.devices())
+    shape = InputShape("sched", args.seq, 0, "train")
+    for j, gpu_ids in sched.assignment:
+        arch = job_archs[j]
+        cfg = get_config(arch).reduced()
+        w = len(gpu_ids)
+        mesh = Mesh(devices[np.asarray(gpu_ids)], ("data",))
+        model = build_model(cfg, max_seq=args.seq)
+        params = model.init(jax.random.PRNGKey(j))
+        ocfg = AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=args.steps)
+        opt = adamw.init(ocfg, params)
+        step_fn = make_rar_train_step(model, ocfg, mesh)
+        batch_size = max(w, 2)
+        t0 = time.time()
+        loss0 = loss = None
+        for step in range(args.steps):
+            batch = make_batch(cfg, shape, step, DataConfig(seed=j),
+                               batch_override=batch_size)
+            batch = jax.tree.map(jax.numpy.asarray, batch)
+            params, opt, metrics = step_fn(params, opt, batch)
+            loss = float(metrics["loss"])
+            loss0 = loss0 if loss0 is not None else loss
+        srvs = sorted({int(g) // per_srv for g in gpu_ids})
+        print(f"[sched] job {j:2d} ({arch:18s} w={w}) on devices "
+              f"{list(map(int, gpu_ids))} (servers {srvs}): "
+              f"loss {loss0:.3f}->{loss:.3f} in {time.time()-t0:.1f}s "
+              f"[start slot {sim.start[j]}, finish {sim.finish[j]}]")
+
+    print(f"[sched] all {len(jobs)} jobs executed on their assigned slices")
+
+
+if __name__ == "__main__":
+    main()

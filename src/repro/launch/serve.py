@@ -1,0 +1,80 @@
+"""Batched serving driver: prefill a prompt batch, then decode greedily.
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch llama3.2-1b --reduced --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.dist.steps import make_serve_step
+    from repro.models import build_model
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    max_seq = args.prompt_len + args.gen
+    model = build_model(cfg, max_seq=max_seq)
+    params = model.init(jax.random.PRNGKey(0))
+
+    B = args.batch
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (B, args.prompt_len)),
+                         jnp.int32)
+    if cfg.family == "vlm":
+        raise SystemExit("vlm serving needs patch inputs; use examples/")
+    extra = {}
+    if cfg.family == "audio":
+        extra["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.enc_frames, cfg.d_model)), jnp.float32)
+
+    serve = jax.jit(make_serve_step(model))
+    cache = model.init_cache(B, max_seq)
+    if cfg.family == "audio":
+        # run the encoder once and pin enc_out into the cache
+        cache["enc_out"] = jax.jit(model.encode)(params, extra["frames"])
+    # prefill by stepping the prompt through the cache (keeps one code path
+    # for recurrent and attention families alike)
+    t0 = time.time()
+    tok = prompt[:, 0]
+    for pos in range(args.prompt_len - 1):
+        _, _, cache = serve(params, cache, prompt[:, pos],
+                            jnp.full((B,), pos, jnp.int32))
+    tok = prompt[:, -1]
+    prefill_t = time.time() - t0
+
+    out = []
+    t0 = time.time()
+    for i in range(args.gen):
+        pos = args.prompt_len - 1 + i
+        tok, logits, cache = serve(params, cache, tok,
+                                   jnp.full((B,), pos, jnp.int32))
+        out.append(np.asarray(tok))
+    gen_t = time.time() - t0
+    gen = np.stack(out, 1)
+    print(f"[serve] {cfg.name}: batch {B}, prompt {args.prompt_len}, "
+          f"generated {args.gen} tokens/seq")
+    print(f"[serve] prefill {prefill_t:.2f}s, decode {gen_t:.2f}s "
+          f"({B*args.gen/max(gen_t,1e-9):.1f} tok/s)")
+    print(f"[serve] sample tokens (seq 0): {gen[0][:16].tolist()}")
+    assert np.all(gen >= 0) and np.all(gen < cfg.vocab)
+
+
+if __name__ == "__main__":
+    main()

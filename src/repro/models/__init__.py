@@ -1,0 +1,5 @@
+"""Model zoo: composable JAX modules covering the six assigned families."""
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models.model import Model, build_model
+
+__all__ = ["INPUT_SHAPES", "InputShape", "ModelConfig", "Model", "build_model"]

@@ -1,0 +1,40 @@
+"""Unified Model API + family dispatch.
+
+``build_model(cfg, max_seq)`` returns a ``Model`` whose five functions are
+pure (params in, arrays out) and jit/pjit-ready.  ``max_seq`` sizes learned
+position tables (whisper) only; every other family is length-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    config: ModelConfig
+    init: Callable[..., Any]
+    loss_fn: Callable[..., Any]          # (params, batch) -> (loss, metrics)
+    prefill: Callable[..., Any]          # (params, batch) -> logits
+    init_cache: Callable[..., Any]       # (batch, max_slots) -> cache
+    decode_step: Callable[..., Any]      # (params, cache, tok, pos) -> (logits, cache)
+    encode: Callable[..., Any] | None = None   # audio: (params, frames) -> enc_out
+
+
+def build_model(cfg: ModelConfig, max_seq: int = 4096) -> Model:
+    from repro.models import transformer, xlstm
+    if cfg.family in ("dense", "vlm"):
+        fns = transformer.build_dense(cfg, max_seq)
+    elif cfg.family == "moe":
+        fns = transformer.build_moe(cfg, max_seq)
+    elif cfg.family == "hybrid":
+        fns = transformer.build_hybrid(cfg, max_seq)
+    elif cfg.family == "audio":
+        fns = transformer.build_audio(cfg, max_seq)
+    elif cfg.family == "ssm":
+        fns = xlstm.build_xlstm(cfg, max_seq)
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return Model(cfg, *fns)

@@ -1,0 +1,87 @@
+"""Fine-grained mixture-of-experts layer (DeepSeekMoE / Kimi-K2 style).
+
+Token-choice top-k routing with capacity-factor dropping, implemented the
+TPU-native way: sort token-expert pairs by expert id, scatter into a dense
+[E, C, d] buffer, run all experts as one batched einsum (MXU-friendly,
+expert dim shardable over the ``model`` mesh axis = expert parallelism),
+gather back, combine with normalised router weights.  No per-expert Python
+loops, no ragged shapes -- everything is static for jit/scan.
+
+Shared experts (DeepSeekMoE's "2 shared + 64 routed") are fused into one
+always-on dense MLP of width n_shared * d_expert.
+
+Returns the Switch-style load-balance auxiliary loss alongside the output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import init_mlp, mlp
+
+
+def init_moe(rng, cfg: ModelConfig, dtype):
+    E, d, de = cfg.n_experts, cfg.d_model, cfg.d_expert
+    r = jax.random.split(rng, 5)
+    s = 1.0 / jnp.sqrt(d)
+    p = {
+        "router": (jax.random.normal(r[0], (d, E)) * s).astype(jnp.float32),
+        "we_gate": (jax.random.normal(r[1], (E, d, de)) * s).astype(dtype),
+        "we_up": (jax.random.normal(r[2], (E, d, de)) * s).astype(dtype),
+        "we_down": (jax.random.normal(r[3], (E, de, d)) / jnp.sqrt(de)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(r[4], d, cfg.n_shared_experts * de, "swiglu", dtype)
+    return p
+
+
+def moe_apply(cfg: ModelConfig, p, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (out [B, S, d], aux_loss scalar)."""
+    cd = x.dtype
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(T, d)
+
+    gate_logits = (xt.astype(jnp.float32) @ p["router"])            # [T, E]
+    probs = jax.nn.softmax(gate_logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                          # [T, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # ---- dispatch: sort token-expert pairs by expert --------------------------
+    capacity = int(max(k, round(T * k / E * cfg.capacity_factor)))
+    flat_e = top_i.reshape(-1)                                      # [T*k]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    tok_of = order // k
+    # rank of each entry within its expert's group
+    first_of = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank = jnp.arange(T * k) - first_of
+    keep = rank < capacity
+    slot = jnp.where(keep, sorted_e * capacity + rank, E * capacity)
+
+    buf = jnp.zeros((E * capacity + 1, d), cd).at[slot].set(xt[tok_of].astype(cd))
+    h = buf[: E * capacity].reshape(E, capacity, d)
+
+    # ---- all experts as one batched matmul ------------------------------------
+    g = jnp.einsum("ecd,edf->ecf", h, p["we_gate"].astype(cd))
+    u = jnp.einsum("ecd,edf->ecf", h, p["we_up"].astype(cd))
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["we_down"].astype(cd))
+
+    # ---- combine ---------------------------------------------------------------
+    y_flat = jnp.concatenate([y.reshape(E * capacity, d),
+                              jnp.zeros((1, d), cd)], axis=0)
+    gathered = y_flat[slot]                                         # [T*k, d]
+    weight = top_p.reshape(-1)[order] * keep.astype(jnp.float32)
+    out = jnp.zeros((T, d), cd).at[tok_of].add(
+        gathered * weight[:, None].astype(cd))
+
+    if cfg.n_shared_experts:
+        out = out + mlp(p["shared"], xt, "swiglu")
+
+    # ---- Switch-style load-balance loss -----------------------------------------
+    frac = jnp.zeros((E,), jnp.float32).at[flat_e].add(1.0) / (T * k)
+    mean_p = probs.mean(axis=0)
+    aux = E * jnp.sum(frac * mean_p) * cfg.router_aux_coef
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,325 @@
+"""State-space & recurrent sequence mixers: Mamba head (Hymba) and the
+xLSTM cells (mLSTM / sLSTM).
+
+Design notes (TPU adaptation):
+  * The selective-SSM recurrence h_t = a_t * h_{t-1} + b_t is evaluated with
+    ``lax.associative_scan`` over the sequence axis for train/prefill
+    (log-depth, VPU-friendly) and as a one-step recurrence for decode.
+  * The mLSTM's parallel form is computed attention-style with an additive
+    log-decay bias matrix (quadratic in S -- used for train/prefill); decode
+    uses the O(1) matrix-memory recurrence (C, n, m), which is what makes
+    long_500k tractable for xlstm/hymba.
+  * sLSTM is inherently sequential; train/prefill use ``lax.scan`` over time.
+All state is seq-length independent => decode shapes carry tiny state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM head (Hymba's parallel-to-attention branch)
+# ---------------------------------------------------------------------------
+
+_CONV_K = 4  # depthwise causal conv width
+
+
+def init_mamba(rng, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    Hs, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    inner = Hs * P
+    r = jax.random.split(rng, 7)
+    s = 1.0 / jnp.sqrt(d)
+    return {
+        "w_in": (jax.random.normal(r[0], (d, 2 * inner)) * s).astype(dtype),
+        "w_conv": (jax.random.normal(r[1], (_CONV_K, inner)) * 0.2).astype(dtype),
+        "w_B": (jax.random.normal(r[2], (Hs, P, N)) * P**-0.5).astype(dtype),
+        "w_C": (jax.random.normal(r[3], (Hs, P, N)) * P**-0.5).astype(dtype),
+        "w_dt": (jax.random.normal(r[4], (Hs, P)) * P**-0.5).astype(dtype),
+        "dt_bias": jnp.zeros((Hs,), jnp.float32),
+        "A_log": (jax.random.uniform(r[5], (Hs, P, N), minval=0.0, maxval=1.0)
+                  ).astype(jnp.float32),
+        "D": jnp.ones((Hs, P), dtype),
+        "w_out": (jax.random.normal(r[6], (inner, d)) / jnp.sqrt(inner)).astype(dtype),
+    }
+
+
+def _mamba_gates(cfg, p, u):
+    """Shared discretisation math.  u: [..., Hs, P] -> a, b coefficients."""
+    dt = jax.nn.softplus(
+        jnp.einsum("...hp,hp->...h", u.astype(jnp.float32), p["w_dt"].astype(jnp.float32))
+        + p["dt_bias"])                                            # [..., Hs]
+    A = -jnp.exp(p["A_log"])                                       # [Hs,P,N]
+    Bmat = jnp.einsum("...hp,hpn->...hn", u, p["w_B"])             # [..., Hs,N]
+    a = jnp.exp(dt[..., None, None] * A)                           # [..., Hs,P,N]
+    b = (dt[..., None] * Bmat)[..., None, :] * u[..., None]        # [..., Hs,P,N]
+    return a, b.astype(jnp.float32)
+
+
+def mamba_seq(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    """Parallel (train/prefill) pass.  x: [B,S,d] -> [B,S,d]."""
+    cd = x.dtype
+    B, S, d = x.shape
+    Hs, P = cfg.ssm_heads, cfg.ssm_head_dim
+    inner = Hs * P
+    uz = x @ p["w_in"].astype(cd)
+    u, z = uz[..., :inner], uz[..., inner:]
+    # depthwise causal conv over the sequence axis
+    upad = jnp.pad(u, ((0, 0), (_CONV_K - 1, 0), (0, 0)))
+    u = sum(upad[:, i:i + S] * p["w_conv"][i].astype(cd)
+            for i in range(_CONV_K))
+    u = jax.nn.silu(u).reshape(B, S, Hs, P)
+
+    a, b = _mamba_gates(cfg, p, u)
+
+    def comb(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(comb, (a.astype(jnp.float32), b), axis=1)
+    C = jnp.einsum("bshp,hpn->bshn", u, p["w_C"]).astype(jnp.float32)
+    y = jnp.einsum("bshpn,bshn->bshp", h, C).astype(cd) \
+        + p["D"].astype(cd) * u
+    y = (y.reshape(B, S, inner) * jax.nn.silu(z))
+    return y @ p["w_out"].astype(cd)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype):
+    Hs, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    return {
+        "h": jnp.zeros((batch, Hs, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_K - 1, Hs * P), dtype),
+    }
+
+
+def mamba_step(cfg: ModelConfig, p, state, x_t: jax.Array):
+    """One decode step.  x_t: [B,d] -> ([B,d], new_state)."""
+    cd = x_t.dtype
+    B, d = x_t.shape
+    Hs, P = cfg.ssm_heads, cfg.ssm_head_dim
+    inner = Hs * P
+    uz = x_t @ p["w_in"].astype(cd)
+    u, z = uz[..., :inner], uz[..., inner:]
+    hist = jnp.concatenate([state["conv"], u[:, None, :]], axis=1)  # [B,K,inner]
+    u_c = sum(hist[:, i] * p["w_conv"][i].astype(cd) for i in range(_CONV_K))
+    u_c = jax.nn.silu(u_c).reshape(B, Hs, P)
+
+    a, b = _mamba_gates(cfg, p, u_c)
+    h = a.astype(jnp.float32) * state["h"] + b
+    C = jnp.einsum("bhp,hpn->bhn", u_c, p["w_C"]).astype(jnp.float32)
+    y = jnp.einsum("bhpn,bhn->bhp", h, C).astype(cd) + p["D"].astype(cd) * u_c
+    y = (y.reshape(B, inner) * jax.nn.silu(z)) @ p["w_out"].astype(cd)
+    return y, {"h": h, "conv": hist[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory)
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(rng, cfg: ModelConfig, dtype):
+    """mLSTM block: pre-norm, up-projection (factor pf), q/k/v + i/f/o gates,
+    matrix-memory mixing, gated down-projection."""
+    d = cfg.d_model
+    H, hd = cfg.n_heads, cfg.head_dim
+    dp = int(cfg.mlstm_proj_factor * d)
+    r = jax.random.split(rng, 6)
+    s = 1.0 / jnp.sqrt(d)
+    sp = 1.0 / jnp.sqrt(dp)
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "w_up": (jax.random.normal(r[0], (d, 2 * dp)) * s).astype(dtype),
+        "w_qkv": (jax.random.normal(r[1], (dp, 3 * H * hd)) * sp).astype(dtype),
+        "w_if": (jax.random.normal(r[2], (dp, 2 * H)) * sp).astype(jnp.float32),
+        "if_bias": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]),
+        "w_og": (jax.random.normal(r[3], (dp, H * hd)) * sp).astype(dtype),
+        "w_down": (jax.random.normal(r[4], (H * hd, d)) / jnp.sqrt(H * hd)).astype(dtype),
+    }
+
+
+def _mlstm_qkvif(cfg, p, xe):
+    H, hd = cfg.n_heads, cfg.head_dim
+    qkv = xe @ p["w_qkv"].astype(xe.dtype)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    shape = xe.shape[:-1] + (H, hd)
+    q, k, v = (t.reshape(shape) for t in (q, k, v))
+    i_f = xe.astype(jnp.float32) @ p["w_if"] + p["if_bias"]
+    i_pre, f_pre = jnp.split(i_f, 2, axis=-1)                      # [..., H]
+    return q, k, v / jnp.sqrt(hd), i_pre, f_pre
+
+
+def _mlstm_parallel_block(q_c, F_c, k, v, F, i_pre, t0, chunk):
+    """One query-chunk of the mLSTM parallel form (fp32 in/out).
+
+    q_c: [B,c,H,hd] queries for rows [t0, t0+c); F_c their cumulative
+    log-forget; k/v/F/i_pre: full-sequence tensors.  The [c, S] decay slab
+    is transient — the full [S, S] matrix never materialises (same shape
+    trick as the q-chunked attention path).  Query rows context-parallelise
+    over the "model" axis (4 mLSTM heads never tile it)."""
+    import os
+    from repro.models.layers import BATCH_AXES, shard_hint
+    if not os.environ.get("REPRO_NAIVE_SHARDING"):
+        q_c = shard_hint(q_c, BATCH_AXES, "model", None, None)
+        F_c = shard_hint(F_c, BATCH_AXES, "model", None)
+    B, S, H, hd = k.shape
+    # D[b,h,t,s] = F_t - F_s + i_s  for s <= t   (log decay matrix)
+    Dmat = F_c.transpose(0, 2, 1)[:, :, :, None] \
+        - F.transpose(0, 2, 1)[:, :, None, :] \
+        + i_pre.transpose(0, 2, 1)[:, :, None, :]                 # [B,H,c,S]
+    t_idx = t0 + jnp.arange(q_c.shape[1])
+    causal = t_idx[:, None] >= jnp.arange(S)[None, :]
+    Dmat = jnp.where(causal[None, None], Dmat, -jnp.inf)
+    m = jnp.max(Dmat, axis=-1, keepdims=True)                     # stabiliser
+    w = jnp.exp(Dmat - m)
+    scores = jnp.einsum("bthd,bshd->bhts", q_c, k) * w
+    norm = jnp.maximum(jnp.abs(scores.sum(-1, keepdims=True)), jnp.exp(-m))
+    return jnp.einsum("bhts,bshd->bthd", scores / norm, v)        # [B,c,H,hd]
+
+
+def mlstm_seq(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    """Parallel form over the full sequence, query-chunked.  x: [B,S,d]."""
+    from repro.models.layers import rms_norm
+    cd = x.dtype
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    xe, zg = jnp.split(rms_norm(x, p["norm"], cfg.norm_eps) @ p["w_up"].astype(cd),
+                       2, axis=-1)
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(cfg, p, xe)
+    q, k, v = (t.astype(jnp.float32) for t in (q, k, v))
+
+    logf = jax.nn.log_sigmoid(f_pre)                               # [B,S,H]
+    F = jnp.cumsum(logf, axis=1)
+
+    chunk = cfg.q_chunk if (cfg.q_chunk and S > cfg.q_chunk
+                            and S % cfg.q_chunk == 0) else S
+    if chunk == S:
+        y = _mlstm_parallel_block(q, F, k, v, F, i_pre, 0, S)
+    else:
+        nc = S // chunk
+        qs = jnp.moveaxis(q.reshape(B, nc, chunk, H, hd), 1, 0)
+        Fs = jnp.moveaxis(F.reshape(B, nc, chunk, H), 1, 0)
+        t0s = jnp.arange(nc) * chunk
+
+        def body(_, inp):
+            qc, Fc, t0 = inp
+            return None, _mlstm_parallel_block(qc, Fc, k, v, F, i_pre,
+                                               t0, chunk)
+
+        _, ys = jax.lax.scan(jax.checkpoint(body), None, (qs, Fs, t0s))
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, hd)
+    y = y.reshape(B, S, H * hd).astype(cd)
+    y = y * jax.nn.silu(zg @ p["w_og"].astype(cd))     # z-branch output gate
+    return x + y @ p["w_down"].astype(cd)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    H, hd = cfg.n_heads, cfg.head_dim
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_step(cfg: ModelConfig, p, state, x_t: jax.Array):
+    """O(1) decode recurrence.  x_t: [B,d]."""
+    from repro.models.layers import rms_norm
+    cd = x_t.dtype
+    B, d = x_t.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    xe, zg = jnp.split(rms_norm(x_t, p["norm"], cfg.norm_eps) @ p["w_up"].astype(cd),
+                       2, axis=-1)
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(cfg, p, xe)
+    logf = jax.nn.log_sigmoid(f_pre)                               # [B,H]
+    m_new = jnp.maximum(logf + state["m"], i_pre)
+    f_s = jnp.exp(logf + state["m"] - m_new)
+    i_s = jnp.exp(i_pre - m_new)
+    C = f_s[..., None, None] * state["C"] \
+        + i_s[..., None, None] * jnp.einsum("bhk,bhv->bhkv",
+                                            k.astype(jnp.float32),
+                                            v.astype(jnp.float32))
+    n = f_s[..., None] * state["n"] + i_s[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhkv,bhk->bhv", C, q.astype(jnp.float32))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q.astype(jnp.float32))),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(B, H * hd).astype(cd)
+    y = y * jax.nn.silu(zg @ p["w_og"].astype(cd))     # z-branch output gate
+    out = x_t + y @ p["w_down"].astype(cd)
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+def init_slstm(rng, cfg: ModelConfig, dtype):
+    """sLSTM block: recurrent scalar-memory cell + post up/down MLP (pf 4/3)."""
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    dff = int(d * 4 / 3)
+    r = jax.random.split(rng, 4)
+    s = 1.0 / jnp.sqrt(d)
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "w_x": (jax.random.normal(r[0], (d, 4 * d)) * s).astype(dtype),
+        "r_h": (jax.random.normal(r[1], (H, dh, 4 * dh)) / jnp.sqrt(dh)).astype(dtype),
+        "w_up": (jax.random.normal(r[2], (d, dff)) * s).astype(dtype),
+        "w_down": (jax.random.normal(r[3], (dff, d)) / jnp.sqrt(dff)).astype(dtype),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, H, dh), -1e30)}
+
+
+def _slstm_cell(cfg: ModelConfig, p, state, gx):
+    """gx: [B, 4*d] pre-activations from the input path."""
+    B = gx.shape[0]
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    rh = jnp.einsum("bhd,hdk->bhk", state["h"].astype(p["r_h"].dtype), p["r_h"])
+    g = gx.reshape(B, H, 4 * dh).astype(jnp.float32) + rh.astype(jnp.float32)
+    i_pre, f_pre, z_pre, o_pre = jnp.split(g, 4, axis=-1)          # [B,H,dh]
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state["m"], i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(logf + state["m"] - m_new)
+    c = f_s * state["c"] + i_s * jnp.tanh(z_pre)
+    n = f_s * state["n"] + i_s
+    h = jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_seq(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    """Sequential scan over time.  x: [B,S,d]."""
+    from repro.models.layers import rms_norm
+    cd = x.dtype
+    B, S, d = x.shape
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    gx = xn @ p["w_x"].astype(cd)                                  # [B,S,4d]
+    state0 = init_slstm_state(cfg, B)
+
+    def step(state, g_t):
+        new = _slstm_cell(cfg, p, state, g_t)
+        return new, new["h"]
+
+    _, hs = jax.lax.scan(step, state0, gx.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(cd)
+    y = jax.nn.gelu(y @ p["w_up"].astype(cd), approximate=True) @ p["w_down"].astype(cd)
+    return x + y
+
+
+def slstm_step(cfg: ModelConfig, p, state, x_t: jax.Array):
+    from repro.models.layers import rms_norm
+    cd = x_t.dtype
+    B, d = x_t.shape
+    xn = rms_norm(x_t, p["norm"], cfg.norm_eps)
+    gx = xn @ p["w_x"].astype(cd)
+    new = _slstm_cell(cfg, p, state, gx)
+    y = new["h"].reshape(B, d).astype(cd)
+    y = jax.nn.gelu(y @ p["w_up"].astype(cd), approximate=True) @ p["w_down"].astype(cd)
+    return x_t + y, new

@@ -1,0 +1,100 @@
+"""xLSTM language model (sLSTM + mLSTM blocks) — arXiv:2405.04517.
+
+The stack is organised in super-blocks of ``slstm_every`` layers:
+(slstm_every - 1) mLSTM blocks followed by one sLSTM block, scanned over
+``G = n_layers // slstm_every`` groups (outer scan) with an inner scan over
+the mLSTM blocks.  Decode state is sequence-length independent (matrix
+memory C/n/m per mLSTM, scalar memories per sLSTM), which is what makes the
+long_500k decode shape tractable for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm, softmax_cross_entropy
+from repro.models.ssm import (init_mlstm, init_mlstm_state, init_slstm,
+                              init_slstm_state, mlstm_seq, mlstm_step,
+                              slstm_seq, slstm_step)
+from repro.models.transformer import (_init_common, _positions,
+                                       _public_logits, _unembed)
+
+
+def build_xlstm(cfg: ModelConfig, max_seq: int):
+    dtype = jnp.dtype(cfg.param_dtype)
+    k = cfg.slstm_every
+    if k <= 0 or cfg.n_layers % k:
+        raise ValueError("xlstm needs slstm_every | n_layers")
+    G, n_m = cfg.n_layers // k, k - 1
+
+    def init(rng):
+        r = jax.random.split(rng, 3)
+        p = _init_common(r[0], cfg, dtype)
+        p["mlstm"] = jax.vmap(lambda kg: jax.vmap(
+            lambda kk: init_mlstm(kk, cfg, dtype))(jax.random.split(kg, n_m))
+        )(jax.random.split(r[1], G))
+        p["slstm"] = jax.vmap(lambda kg: init_slstm(kg, cfg, dtype)
+                              )(jax.random.split(r[2], G))
+        return p
+
+    def _group_seq(mp, sp, x):
+        def mbody(x, pm):
+            return mlstm_seq(cfg, pm, x), None
+        x, _ = jax.lax.scan(mbody, x, mp)
+        return slstm_seq(cfg, sp, x)
+
+    group_seq = jax.checkpoint(_group_seq) if cfg.remat else _group_seq
+
+    def _forward(params, batch):
+        tokens = batch["tokens"]
+        cd = jnp.dtype(cfg.compute_dtype)
+        x = params["embed"][tokens].astype(cd)
+
+        def body(x, per):
+            mp, sp = per
+            return group_seq(mp, sp, x), None
+
+        x, _ = jax.lax.scan(body, x, (params["mlstm"], params["slstm"]))
+        return _unembed(params, cfg, x)
+
+    def loss_fn(params, batch):
+        logits = _forward(params, batch)
+        tokens = batch["tokens"]
+        loss = softmax_cross_entropy(logits[:, :-1], tokens[:, 1:])
+        return loss, {"loss": loss, "aux": jnp.zeros((), jnp.float32)}
+
+    def prefill(params, batch):
+        return _public_logits(cfg, _forward(params, batch))
+
+    def init_cache(batch_size: int, max_slots: int):
+        m = jax.vmap(lambda _: jax.vmap(
+            lambda __: init_mlstm_state(cfg, batch_size))(jnp.arange(n_m))
+        )(jnp.arange(G))
+        s = jax.vmap(lambda _: init_slstm_state(cfg, batch_size)
+                     )(jnp.arange(G))
+        return {"mlstm": m, "slstm": s}
+
+    def decode_step(params, cache, tok, pos):
+        cd = jnp.dtype(cfg.compute_dtype)
+        x = params["embed"][tok].astype(cd)                 # [B, d]
+
+        def group_step(x, per):
+            mp, sp, mstate, sstate = per
+
+            def mstep(x, inp):
+                pm, st = inp
+                y, st2 = mlstm_step(cfg, pm, st, x)
+                return y, st2
+
+            x, new_m = jax.lax.scan(mstep, x, (mp, mstate))
+            x, new_s = slstm_step(cfg, sp, sstate, x)
+            return x, (new_m, new_s)
+
+        x, (new_m, new_s) = jax.lax.scan(
+            group_step, x,
+            (params["mlstm"], params["slstm"], cache["mlstm"], cache["slstm"]))
+        logits = _public_logits(cfg, _unembed(params, cfg, x[:, None, :]))[:, 0]
+        return logits, {"mlstm": new_m, "slstm": new_s}
+
+    return init, loss_fn, prefill, init_cache, decode_step

@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWConfig, apply, global_norm, init, schedule
+
+__all__ = ["AdamWConfig", "apply", "global_norm", "init", "schedule"]

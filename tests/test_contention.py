@@ -1,0 +1,134 @@
+"""Unit tests for the Eq. (6)-(8) analytical model (paper §4.1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Cluster, Job, contention_level, degradation, evaluate,
+                        tau_bounds)
+
+CL = Cluster(capacities=(4, 4, 4))
+
+
+def _job(jid, gpus, iters=1000, m=1e-3, M=32, dfw=3e-4, dbw=8e-3):
+    return Job(jid=jid, num_gpus=gpus, iters=iters, grad_size=m, batch=M,
+               dt_fwd=dfw, dt_bwd=dbw)
+
+
+class TestContentionLevel:
+    def test_fig2a_colocated_jobs_no_contention(self):
+        # Fig. 2(a): each job fully inside one server -> nobody straddles.
+        Y = np.array([[4, 0, 0], [0, 4, 0]])
+        p = contention_level(Y, np.array([4, 4]))
+        assert p.tolist() == [0, 0]
+
+    def test_fig2b_straddling_jobs_contend(self):
+        # Fig. 2(b): both jobs split across servers 0 and 1 -> p = 2 each.
+        Y = np.array([[2, 2, 0], [2, 2, 0]])
+        p = contention_level(Y, np.array([4, 4]))
+        assert p.tolist() == [2, 2]
+
+    def test_single_straddler_contends_with_itself_only(self):
+        Y = np.array([[2, 2, 0], [0, 0, 4]])
+        p = contention_level(Y, np.array([4, 4]))
+        assert p.tolist() == [1, 0]
+
+    def test_max_over_servers(self):
+        # Job 0 straddles all three servers; server 1 also hosts straddling
+        # job 1 and server 2 hosts straddling jobs 1.. -> p0 is the max count.
+        Y = np.array([[1, 1, 1], [0, 2, 1], [0, 1, 2]])
+        G = np.array([3, 3, 3])
+        p = contention_level(Y, G)
+        assert p[0] == 3  # servers 1/2 each host 3 straddlers
+        assert p[1] == 3 and p[2] == 3
+
+
+class TestDegradation:
+    def test_no_contention_is_identity(self):
+        assert degradation(0.5, np.array([1.0])) == pytest.approx(1.0)
+
+    @given(st.floats(0.0, 1.0), st.floats(1.0, 64.0), st.floats(0.0, 10.0))
+    def test_monotone_increasing(self, alpha, k, dk):
+        f1 = degradation(alpha, np.array([k]))
+        f2 = degradation(alpha, np.array([k + dk]))
+        assert f2 >= f1
+
+    def test_clamped_below_one_contender(self):
+        # k = xi1 * p may fall below 1 for p = 1; f must not "boost" bandwidth.
+        assert degradation(0.3, np.array([0.5])) == pytest.approx(1.0)
+
+
+class TestIterModel:
+    def test_colocated_uses_intra_bandwidth(self):
+        jobs = [_job(0, 4), _job(1, 4)]
+        Y = np.array([[4, 0, 0], [0, 4, 0]])
+        m = evaluate(CL, jobs, Y)
+        assert np.allclose(m.bandwidth, CL.b_intra)
+
+    def test_straddling_uses_degraded_inter_bandwidth(self):
+        jobs = [_job(0, 4), _job(1, 4)]
+        Y = np.array([[2, 2, 0], [2, 2, 0]])
+        m = evaluate(CL, jobs, Y)
+        k = max(1.0, CL.xi1 * 2)
+        expected = CL.b_inter / (k + CL.alpha * (k - 1))
+        assert np.allclose(m.bandwidth, expected)
+
+    def test_single_gpu_job_has_no_exchange(self):
+        jobs = [_job(0, 1)]
+        Y = np.array([[1, 0, 0]])
+        m = evaluate(CL, jobs, Y)
+        assert m.exchange[0] == 0.0 and m.reduce[0] == 0.0
+        assert m.tau[0] == pytest.approx(CL.xi2 + 3e-4 * 32 + 8e-3)
+
+    def test_overhead_linear_in_servers(self):
+        jobs = [_job(0, 3)]
+        for n_srv, Y in [(1, [[3, 0, 0]]), (2, [[2, 1, 0]]), (3, [[1, 1, 1]])]:
+            m = evaluate(CL, jobs, np.array(Y))
+            assert m.gamma[0] == pytest.approx(CL.xi2 * n_srv)
+
+    def test_eq8_composition(self):
+        jobs = [_job(0, 4, m=2e-3)]
+        Y = np.array([[2, 2, 0]])
+        m = evaluate(CL, jobs, Y)
+        share = (2e-3 / 4) * 3
+        assert m.exchange[0] == pytest.approx(2 * share / m.bandwidth[0])
+        assert m.reduce[0] == pytest.approx(share / CL.gpu_speed)
+        assert m.tau[0] == pytest.approx(
+            m.exchange[0] + m.reduce[0] + m.gamma[0] + m.compute[0])
+
+    def test_placement_must_cover_job(self):
+        with pytest.raises(ValueError):
+            evaluate(CL, [_job(0, 4)], np.array([[2, 0, 0]]))
+
+    def test_rar_bandwidth_optimality(self):
+        """§3: per-worker exchanged volume 2m(w-1)/w is bounded by 2m and
+        asymptotically independent of w (monotone, converging)."""
+        m = 1.0
+        vols = [2 * m * (w - 1) / w for w in range(2, 129)]
+        assert all(v < 2 * m for v in vols)
+        assert np.all(np.diff(vols) > 0)
+        assert vols[-1] - vols[-2] < 1e-3
+
+    @given(st.integers(1, 12), st.integers(0, 2), st.data())
+    @settings(max_examples=50, deadline=None)
+    def test_tau_within_bounds(self, gpus, extra_jobs, data):
+        """Property: any placement's tau lies within the §5-1 bracket."""
+        job = _job(0, gpus)
+        jobs = [job]
+        placements = [_random_placement(data, gpus)]
+        for e in range(extra_jobs):
+            g = data.draw(st.integers(1, 6))
+            jobs.append(_job(e + 1, g))
+            placements.append(_random_placement(data, g))
+        Y = np.array(placements)
+        m = evaluate(CL, jobs, Y)
+        lo, hi = tau_bounds(CL, job)
+        assert lo - 1e-9 <= m.tau[0] <= hi + 1e-9
+
+
+def _random_placement(data, gpus):
+    """Random split of `gpus` across the 3 servers (capacity ignored: the
+    analytical model itself doesn't enforce Eq. (2); schedulers do)."""
+    row = [0, 0, 0]
+    for _ in range(gpus):
+        row[data.draw(st.integers(0, 2))] += 1
+    return row

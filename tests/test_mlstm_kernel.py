@@ -1,0 +1,85 @@
+"""mLSTM Pallas kernel vs the pure-jnp oracle and the model's own math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.mlstm import mlstm_parallel
+
+
+def _inputs(BH, S, hd, seed=0, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (BH, S, hd), dtype)
+    k = jax.random.normal(ks[1], (BH, S, hd), dtype) / jnp.sqrt(hd)
+    v = jax.random.normal(ks[2], (BH, S, hd), dtype)
+    # realistic gates: forget ~ sigmoid(3) (slow decay), input pre-act ~ N(0,1)
+    logf = jax.nn.log_sigmoid(3.0 + jax.random.normal(ks[3], (BH, S)))
+    F = jnp.cumsum(logf, axis=1)
+    i_pre = jax.random.normal(ks[4], (BH, S))
+    return q, k, v, F, i_pre
+
+
+class TestMLSTMKernel:
+    @pytest.mark.parametrize("BH,S,hd", [(2, 128, 64), (4, 256, 64),
+                                         (1, 512, 128), (2, 128, 256)])
+    def test_matches_ref(self, BH, S, hd):
+        q, k, v, F, i_pre = _inputs(BH, S, hd)
+        out = mlstm_parallel(q, k, v, F, i_pre, block_q=128, block_k=128)
+        exp = ref.mlstm_parallel(q, k, v, F, i_pre)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("bq,bk", [(64, 64), (128, 64), (64, 128)])
+    def test_block_shape_sweep(self, bq, bk):
+        q, k, v, F, i_pre = _inputs(2, 256, 64, seed=1)
+        out = mlstm_parallel(q, k, v, F, i_pre, block_q=bq, block_k=bk)
+        exp = ref.mlstm_parallel(q, k, v, F, i_pre)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_bf16_inputs(self):
+        q, k, v, F, i_pre = _inputs(2, 128, 64, seed=2, dtype=jnp.bfloat16)
+        out = mlstm_parallel(q, k, v, F.astype(jnp.float32),
+                             i_pre.astype(jnp.float32),
+                             block_q=64, block_k=64)
+        exp = ref.mlstm_parallel(q, k, v, F.astype(jnp.float32),
+                                 i_pre.astype(jnp.float32))
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(exp, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+    def test_matches_model_mlstm_block(self):
+        """The kernel must agree with the model's chunked jnp path
+        (ssm._mlstm_parallel_block) — same math, different engine."""
+        from repro.models.ssm import _mlstm_parallel_block
+        BH, S, hd = 2, 256, 64
+        q, k, v, F, i_pre = _inputs(BH, S, hd, seed=3)
+        # model layout: [B, S, H, hd] with H folded differently; use B=BH,H=1
+        qm = q[:, :, None, :]
+        km = k[:, :, None, :]
+        vm = v[:, :, None, :]
+        Fm = F[:, :, None]
+        im = i_pre[:, :, None]
+        exp = _mlstm_parallel_block(qm.astype(jnp.float32), Fm,
+                                    km.astype(jnp.float32),
+                                    vm.astype(jnp.float32), Fm, im, 0, S)
+        out = mlstm_parallel(q, k, v, F, i_pre, block_q=128, block_k=128)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(exp[:, :, 0, :]),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_decay_actually_decays(self):
+        """Sanity: with strong forget gates, distant tokens contribute less:
+        zeroing v beyond a horizon changes y_t only slightly."""
+        BH, S, hd = 1, 256, 64
+        q, k, v, F, i_pre = _inputs(BH, S, hd, seed=4)
+        logf = jnp.full((BH, S), jnp.log(0.5))          # aggressive decay
+        F = jnp.cumsum(logf, axis=1)
+        full = mlstm_parallel(q, k, v, F, i_pre, block_q=64, block_k=64)
+        v_trunc = v.at[:, :128].set(0.0)
+        trunc = mlstm_parallel(q, k, v_trunc, F, i_pre, block_q=64, block_k=64)
+        # last rows see ~zero contribution from the zeroed distant half
+        np.testing.assert_allclose(np.asarray(full[:, -16:]),
+                                   np.asarray(trunc[:, -16:]),
+                                   rtol=1e-3, atol=1e-3)

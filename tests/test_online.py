@@ -1,0 +1,71 @@
+"""Online (dynamic-arrival) scheduling extension + flash-kernel model path."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import philly_cluster, philly_workload, simulate, sjf_bco
+from repro.core.online import poisson_arrivals, run_online, schedule_online
+
+
+class TestOnlineScheduling:
+    @pytest.mark.parametrize("rate", [0.2, 0.5, 2.0])
+    def test_all_jobs_complete_after_their_arrival(self, rate):
+        cluster = philly_cluster(20, seed=1)
+        jobs = philly_workload(seed=1)
+        stream = poisson_arrivals(jobs, rate=rate, seed=1)
+        _, sim = run_online(cluster, stream)
+        assert sim.completed == len(jobs)
+        arr = {a.job.jid: a.arrival for a in stream}
+        for j in jobs:
+            assert sim.start[j.jid] >= arr[j.jid], "started before arrival"
+
+    def test_high_rate_approaches_batch_quality(self):
+        """As the arrival rate -> infinity the stream degenerates to the
+        batch setting; online should be within ~2.5x of offline SJF-BCO
+        (it lacks the theta bisection + SJF sort)."""
+        cluster = philly_cluster(20, seed=1)
+        jobs = philly_workload(seed=1)
+        offline = simulate(cluster, jobs,
+                           sjf_bco(cluster, jobs, 1200).assignment).makespan
+        stream = poisson_arrivals(jobs, rate=50.0, seed=1)
+        _, sim = run_online(cluster, stream)
+        assert sim.makespan < 2.5 * offline
+
+    def test_low_rate_tracks_arrivals(self):
+        """At low load the makespan is dominated by the last arrival, not
+        by queueing: drain time stays small."""
+        cluster = philly_cluster(20, seed=1)
+        jobs = philly_workload(seed=1)
+        stream = poisson_arrivals(jobs, rate=0.2, seed=1)
+        _, sim = run_online(cluster, stream)
+        last = max(a.arrival for a in stream)
+        assert sim.makespan >= last
+        assert sim.makespan < last + 400   # bounded drain
+
+    def test_assignment_respects_capacity(self):
+        cluster = philly_cluster(4, seed=2)
+        jobs = philly_workload(seed=2)[:20]
+        stream = poisson_arrivals(jobs, rate=0.5, seed=2)
+        asg = schedule_online(cluster, stream)
+        for j, gpus in asg:
+            assert len(np.unique(gpus)) == len(gpus)
+            assert np.all(gpus < cluster.num_gpus)
+
+
+class TestFlashKernelModelPath:
+    def test_prefill_matches_jnp_path(self):
+        from repro.configs import get_config
+        from repro.models import build_model
+        cfg = dataclasses.replace(get_config("llama3.2-1b").reduced(),
+                                  compute_dtype="float32")
+        cfg_k = dataclasses.replace(cfg, use_flash_kernel=True)
+        m = build_model(cfg, 256)
+        mk = build_model(cfg_k, 256)
+        params = m.init(jax.random.PRNGKey(0))
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                              (2, 256), 0, cfg.vocab)}
+        a = np.asarray(jax.jit(m.prefill)(params, batch), np.float32)
+        b = np.asarray(jax.jit(mk.prefill)(params, batch), np.float32)
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,219 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, serving loop."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import ckpt
+from repro.configs import get_config
+from repro.data import DataConfig, batch_iterator, make_batch
+from repro.dist.steps import make_serve_step, make_train_step
+from repro.models import build_model
+from repro.models.config import InputShape
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+
+
+class TestAdamW:
+    def _setup(self, **kw):
+        cfg = AdamWConfig(lr=1e-2, warmup_steps=0, total_steps=100, **kw)
+        params = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+        return cfg, params, adamw.init(cfg, params)
+
+    def test_descends_quadratic(self):
+        cfg = AdamWConfig(lr=5e-2, warmup_steps=0, total_steps=400,
+                          weight_decay=0.0)
+        params = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+        state = adamw.init(cfg, params)
+
+        def loss(p):
+            return jnp.sum(jnp.square(p["w"] - 2.0)) + jnp.sum(jnp.square(p["b"] + 1.0))
+
+        l0 = float(loss(params))
+        step = jax.jit(lambda p, s: adamw.apply(cfg, jax.grad(loss)(p), p, s)[:2])
+        for _ in range(400):
+            params, state = step(params, state)
+        assert float(loss(params)) < 0.05 * l0
+
+    def test_clip_bounds_update(self):
+        cfg, params, state = self._setup(clip_norm=1.0)
+        grads = jax.tree.map(lambda p: jnp.full_like(p, 1e6), params)
+        new_params, _, m = adamw.apply(cfg, grads, params, state)
+        assert float(m["grad_norm"]) > 1e6
+        delta = max(float(jnp.abs(a - b).max())
+                    for a, b in zip(jax.tree.leaves(params),
+                                    jax.tree.leaves(new_params)))
+        assert delta < 1.0  # clipped + Adam-normalised
+
+    def test_schedule_warmup_and_cosine(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+        lrs = [float(adamw.schedule(cfg, jnp.asarray(s))) for s in range(101)]
+        assert lrs[5] < lrs[10]                    # warming up
+        assert lrs[10] == pytest.approx(1.0, abs=0.05)
+        assert lrs[100] == pytest.approx(cfg.min_lr_ratio, abs=0.05)
+
+    def test_bf16_moments(self):
+        cfg, params, state = self._setup(moment_dtype="bfloat16")
+        assert state["m"]["w"].dtype == jnp.bfloat16
+
+    def test_grad_accumulation_matches_full_batch(self):
+        cfg = get_config("llama3.2-1b").reduced()
+        model = build_model(cfg, max_seq=32)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                              (8, 32), 0, cfg.vocab)}
+        o1 = AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=5,
+                         grad_accum_steps=1)
+        o4 = AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=5,
+                         grad_accum_steps=4)
+        p1, _, m1 = jax.jit(make_train_step(model, o1))(
+            params, adamw.init(o1, params), batch)
+        p4, _, m4 = jax.jit(make_train_step(model, o4))(
+            params, adamw.init(o4, params), batch)
+        assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-3
+        d = max(float(jnp.abs(a - b).max())
+                for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)))
+        assert d < 2e-4  # fp reassociation through Adam only
+
+
+class TestData:
+    def test_deterministic_by_step(self):
+        cfg = get_config("llama3.2-1b").reduced()
+        shape = InputShape("t", 16, 4, "train")
+        a = make_batch(cfg, shape, 7)
+        b = make_batch(cfg, shape, 7)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        c = make_batch(cfg, shape, 8)
+        assert not np.array_equal(a["tokens"], c["tokens"])
+
+    def test_tokens_in_vocab_and_zipf_skewed(self):
+        cfg = get_config("llama3.2-1b").reduced()
+        shape = InputShape("t", 256, 16, "train")
+        toks = make_batch(cfg, shape, 0)["tokens"]
+        assert toks.min() >= 0 and toks.max() < cfg.vocab
+        # Zipf: low ids should be much more frequent than high ids
+        low = (toks < cfg.vocab // 10).mean()
+        assert low > 0.5
+
+    def test_family_specific_keys(self):
+        shape = InputShape("t", 16, 2, "train")
+        vlm = make_batch(get_config("internvl2-1b").reduced(), shape, 0)
+        assert set(vlm) == {"tokens", "patches"}
+        audio = make_batch(get_config("whisper-tiny").reduced(), shape, 0)
+        assert set(audio) == {"frames", "tokens"}
+
+    def test_iterator_advances(self):
+        cfg = get_config("llama3.2-1b").reduced()
+        it = batch_iterator(cfg, InputShape("t", 16, 2, "train"))
+        b0, b1 = next(it), next(it)
+        assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+class TestCheckpoint:
+    def test_roundtrip_params_and_opt(self):
+        cfg = get_config("xlstm-350m").reduced()
+        model = build_model(cfg, max_seq=32)
+        params = model.init(jax.random.PRNGKey(3))
+        ocfg = AdamWConfig()
+        opt = adamw.init(ocfg, params)
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "ck.npz")
+            ckpt.save(path, params=params, opt_state=opt, step=42)
+            p2, o2, step = ckpt.load(path, params_like=params, opt_like=opt)
+        assert step == 42
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_shape_mismatch_rejected(self):
+        params = {"w": jnp.ones((2, 2))}
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "ck.npz")
+            ckpt.save(path, params=params)
+            with pytest.raises(ValueError):
+                ckpt.load(path, params_like={"w": jnp.ones((3, 3))})
+
+
+class TestServingLoop:
+    def test_greedy_decode_is_deterministic(self):
+        cfg = get_config("llama3.2-1b").reduced()
+        model = build_model(cfg, max_seq=32)
+        params = model.init(jax.random.PRNGKey(0))
+        serve = jax.jit(make_serve_step(model))
+
+        def gen():
+            cache = model.init_cache(2, 32)
+            tok = jnp.zeros((2,), jnp.int32)
+            toks = []
+            for pos in range(8):
+                tok, _, cache = serve(params, cache, tok,
+                                      jnp.full((2,), pos, jnp.int32))
+                toks.append(np.asarray(tok))
+            return np.stack(toks)
+
+        np.testing.assert_array_equal(gen(), gen())
+
+    def test_rolling_cache_window_decode(self):
+        """long_500k mechanics: cache smaller than the sequence rolls and
+        still decodes finite values past the wrap point."""
+        cfg = get_config("gemma2-9b").reduced()
+        model = build_model(cfg, max_seq=64)
+        params = model.init(jax.random.PRNGKey(0))
+        serve = jax.jit(make_serve_step(model))
+        slots = 8                                  # tiny rolling window
+        cache = model.init_cache(1, slots)
+        tok = jnp.zeros((1,), jnp.int32)
+        for pos in range(20):                      # wraps 2.5 times
+            tok, logits, cache = serve(params, cache, tok,
+                                       jnp.full((1,), pos, jnp.int32))
+            assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+        # all slot positions within the last window
+        pos_arr = np.asarray(jax.tree.leaves(cache["kv"].pos)[0])
+        assert pos_arr.max() == 19 and pos_arr.min() >= 12
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_loss_finite_for_any_data_seed(seed):
+    """Property: the training loss is finite for arbitrary data."""
+    cfg = get_config("llama3.2-1b").reduced()
+    model = build_model(cfg, max_seq=16)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, InputShape("t", 16, 2, "train"), 0,
+                       DataConfig(seed=seed))
+    loss, _ = jax.jit(model.loss_fn)(params, jax.tree.map(jnp.asarray, batch))
+    assert np.isfinite(float(loss))
+
+
+class TestInt8KVCache:
+    def test_decode_matches_fp_cache(self):
+        import dataclasses
+        cfg = get_config("llama3.2-1b").reduced()
+        cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+        m = build_model(cfg, max_seq=32)
+        m8 = build_model(cfg8, max_seq=32)
+        params = m.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (8,), 0, cfg.vocab)
+        c, c8 = m.init_cache(1, 16), m8.init_cache(1, 16)
+        d = jax.jit(m.decode_step)
+        d8 = jax.jit(m8.decode_step)
+        for pos in range(8):
+            l, c = d(params, c, toks[pos][None],
+                     jnp.asarray([pos], jnp.int32))
+            l8, c8 = d8(params, c8, toks[pos][None],
+                        jnp.asarray([pos], jnp.int32))
+            assert float(jnp.abs(l - l8).max()) < 0.5
+            assert int(l.argmax()) == int(l8.argmax())
+
+    def test_cache_is_actually_int8(self):
+        import dataclasses
+        cfg = dataclasses.replace(get_config("llama3.2-1b").reduced(),
+                                  kv_cache_dtype="int8")
+        m = build_model(cfg, max_seq=32)
+        cache = m.init_cache(1, 16)
+        k = jax.tree.leaves(cache["kv"].k)[0]
+        assert k.dtype == jnp.int8
+        assert cache["kv"].k_scale is not None
