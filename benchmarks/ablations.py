@@ -14,9 +14,9 @@
 """
 from __future__ import annotations
 
-from repro.core import (list_scheduling, philly_cluster, philly_workload,
-                        reserved_bandwidth, simulate, sjf_bco)
-from repro.core.extensions import contention_sweep, sjf_bco_adaptive
+from repro.core import (ScheduleRequest, get_policy, philly_cluster,
+                        philly_workload, simulate)
+from repro.core.extensions import contention_sweep
 
 
 def run(verbose: bool = True) -> list[str]:
@@ -29,11 +29,14 @@ def run(verbose: bool = True) -> list[str]:
             f"advantage={r['advantage_vs_ls']:.2f}x")
     cluster = philly_cluster(20, seed=1)
     jobs = philly_workload(seed=1)
-    plus = simulate(cluster, jobs, sjf_bco_adaptive(cluster, jobs, 1200).assignment)
-    base = simulate(cluster, jobs, sjf_bco(cluster, jobs, 1200).assignment)
+    request = ScheduleRequest(cluster=cluster, jobs=jobs, horizon=1200)
+    plus = simulate(cluster, jobs,
+                    get_policy("sjf-bco-adaptive")(request).assignment)
+    base = simulate(cluster, jobs, get_policy("sjf-bco")(request).assignment)
     rows.append(f"ablation_sjfplus,0,makespan={plus.makespan:.0f}vs{base.makespan:.0f};"
                 f"avg_jct={plus.avg_jct:.0f}vs{base.avg_jct:.0f}")
-    res = simulate(cluster, jobs, reserved_bandwidth(cluster, jobs, 1200).assignment)
+    res = simulate(cluster, jobs,
+                   get_policy("reserved")(request).assignment)
     rows.append(f"ablation_reserved_bw,0,makespan={res.makespan:.0f}"
                 f";sjf={base.makespan:.0f}")
     if verbose:

@@ -1,22 +1,31 @@
-"""Shared helpers for the paper-figure benchmarks."""
+"""Shared helpers for the paper-figure benchmarks.
+
+All figure drivers go through the policy registry: ``run_policy`` builds a
+:class:`~repro.core.api.ScheduleRequest`, resolves the policy by registry
+name and simulates the result.
+"""
 from __future__ import annotations
 
 import time
 
-from repro.core import (philly_cluster, philly_workload, simulate, sjf_bco,
-                        first_fit, list_scheduling, random_policy)
+from repro.core import ScheduleRequest, get_policy, simulate
 
+# Display name -> registry name for the §7 figures.
 POLICIES = {
-    "SJF-BCO": sjf_bco,
-    "FF": first_fit,
-    "LS": list_scheduling,
-    "RAND": random_policy,
+    "SJF-BCO": "sjf-bco",
+    "FF": "ff",
+    "LS": "ls",
+    "RAND": "rand",
 }
 
 
-def run_policy(name: str, cluster, jobs, horizon: int):
+def run_policy(name: str, cluster, jobs, horizon: int,
+               params: dict | None = None):
+    policy = get_policy(POLICIES.get(name, name))
+    request = ScheduleRequest(cluster=cluster, jobs=list(jobs),
+                              horizon=horizon, params=params or {})
     t0 = time.time()
-    sched = POLICIES[name](cluster, jobs, horizon)
+    sched = policy(request)
     sim = simulate(cluster, jobs, sched.assignment)
     return {
         "policy": name,

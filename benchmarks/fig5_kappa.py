@@ -9,7 +9,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import philly_cluster, philly_workload, simulate, sjf_bco
+from repro.core import (ScheduleRequest, get_policy, philly_cluster,
+                        philly_workload, simulate)
 
 HORIZON = 1200
 KAPPAS = (1, 2, 4, 8, 16, 32)
@@ -18,9 +19,12 @@ KAPPAS = (1, 2, 4, 8, 16, 32)
 def run(seed: int = 1, verbose: bool = True) -> list[dict]:
     cluster = philly_cluster(20, seed=seed)
     jobs = philly_workload(seed=seed)
+    sjf = get_policy("sjf-bco")
     rows = []
     for kappa in KAPPAS:
-        sched = sjf_bco(cluster, jobs, HORIZON, kappas=[kappa])
+        sched = sjf(ScheduleRequest(cluster=cluster, jobs=jobs,
+                                    horizon=HORIZON,
+                                    params={"kappas": [kappa]}))
         sim = simulate(cluster, jobs, sched.assignment)
         rows.append({"kappa": kappa, "makespan": sim.makespan,
                      "avg_jct": sim.avg_jct,

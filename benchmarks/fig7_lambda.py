@@ -8,9 +8,9 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
 
-from repro.core import philly_cluster, philly_workload, simulate, sjf_bco
+from repro.core import (ScheduleRequest, get_policy, philly_cluster,
+                        philly_workload, simulate)
 
 HORIZON = 1200
 LAMBDAS = (1.0, 2.0, 4.0, 8.0)
@@ -19,10 +19,12 @@ LAMBDAS = (1.0, 2.0, 4.0, 8.0)
 def run(seed: int = 1, verbose: bool = True) -> list[dict]:
     cluster = philly_cluster(20, seed=seed)
     base_jobs = philly_workload(seed=seed)
+    sjf = get_policy("sjf-bco")
     rows = []
     for lam in LAMBDAS:
         jobs = [dataclasses.replace(j, lam=lam) for j in base_jobs]
-        sched = sjf_bco(cluster, jobs, HORIZON, kappas=[1])
+        sched = sjf(ScheduleRequest(cluster=cluster, jobs=jobs,
+                                    horizon=HORIZON, params={"kappas": [1]}))
         sim = simulate(cluster, jobs, sched.assignment)
         rows.append({"lambda": lam, "makespan": sim.makespan,
                      "avg_jct": sim.avg_jct,

@@ -10,25 +10,24 @@
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import numpy as np
 
-from repro.core import (first_fit, list_scheduling, philly_cluster,
-                        philly_workload, random_policy, report, simulate,
-                        sjf_bco)
+from repro.core import (ClusterSpec, Scenario, WorkloadSpec, philly_cluster,
+                        philly_workload, report, run_scenario)
 
 print("=" * 64)
 print("1-2) schedule 160 RAR jobs on 20 servers (paper §7 setting)")
 cluster = philly_cluster(20, seed=1)
 jobs = philly_workload(seed=1)
 results = {}
-for name, policy in [("SJF-BCO", sjf_bco), ("FF", first_fit),
-                     ("LS", list_scheduling), ("RAND", random_policy)]:
-    sched = policy(cluster, jobs, horizon=1200)
-    sim = simulate(cluster, jobs, sched.assignment)
-    results[name] = (sched, sim)
-    print(f"   {name:8s} makespan {sim.makespan:6.0f} slots | "
-          f"avg JCT {sim.avg_jct:6.1f} | peak contention "
-          f"{sim.peak_contention:2d} | util {sim.utilization:.2f}")
+for name, policy in [("SJF-BCO", "sjf-bco"), ("FF", "ff"),
+                     ("LS", "ls"), ("RAND", "rand")]:
+    rep = run_scenario(Scenario(cluster=ClusterSpec(num_servers=20, seed=1),
+                                workload=WorkloadSpec(seed=1),
+                                policy=policy, horizon=1200))
+    results[name] = (rep.schedule, rep.sim)
+    print(f"   {name:8s} makespan {rep.sim.makespan:6.0f} slots | "
+          f"avg JCT {rep.sim.avg_jct:6.1f} | peak contention "
+          f"{rep.contention.peak:2d} | util {rep.sim.utilization:.2f}")
 
 print("\n3) Theorem 5 certificate for the SJF-BCO schedule")
 sched, sim = results["SJF-BCO"]
@@ -39,9 +38,14 @@ print(f"   makespan {rep.makespan:.0f} <= bound "
       f"(certified={rep.certified})")
 
 print("\n4) train a reduced llama3.2-1b (a real RAR-schedulable job)")
+try:
+    from repro.dist.steps import make_train_step
+except ImportError:
+    print("   (skipped: repro.dist training substrate not present)")
+    print("\nquickstart OK (scheduling)")
+    raise SystemExit(0)
 from repro.configs import get_config
 from repro.data import DataConfig, make_batch
-from repro.dist.steps import make_train_step
 from repro.models import build_model
 from repro.models.config import InputShape
 from repro.optim import adamw

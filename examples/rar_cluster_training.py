@@ -18,10 +18,15 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.core import Cluster, Job, ScheduleRequest, get_policy, simulate
+
+try:
+    from repro.dist.steps import make_rar_train_step
+except ImportError:
+    raise SystemExit("rar_cluster_training needs the repro.dist training "
+                     "substrate (not present in this checkout)")
 from repro.configs import get_config
-from repro.core import Cluster, Job, simulate, sjf_bco
 from repro.data import DataConfig, make_batch
-from repro.dist.steps import make_rar_train_step
 from repro.models import build_model
 from repro.models.config import InputShape
 from repro.optim import adamw
@@ -34,7 +39,8 @@ queue = [
 ]
 jobs = [Job(jid=i, num_gpus=g, iters=1500, grad_size=1e-3, batch=32,
             dt_fwd=3e-4, dt_bwd=8e-3) for i, (_, g) in enumerate(queue)]
-sched = sjf_bco(cluster, jobs, horizon=50000)
+sched = get_policy("sjf-bco")(
+    ScheduleRequest(cluster=cluster, jobs=jobs, horizon=50000))
 sim = simulate(cluster, jobs, sched.assignment)
 print(f"[cluster] SJF-BCO makespan {sim.makespan:.0f} slots, "
       f"peak contention {sim.peak_contention}")

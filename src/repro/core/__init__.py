@@ -5,26 +5,51 @@ Learning Jobs in Multi-Tenant GPU Clusters with Communication Contention"
 (MobiHoc '22): the Eq. (6)-(9) analytical model, the slot simulator that
 evaluates actual execution under time-varying contention, the SJF-BCO
 approximation algorithm (Algs. 1-3) and the §7 baselines.
+
+Public surface (new code should use the unified API):
+
+  * :mod:`repro.core.api` -- ``ScheduleRequest`` / ``ScheduleResult``, the
+    policy registry (``register_policy`` / ``get_policy`` /
+    ``list_policies``) and the busy-time building blocks.
+  * :mod:`repro.core.scenario` -- declarative ``Scenario`` experiments and
+    ``run_scenario``.
+
+The legacy free-function entrypoints (``sjf_bco``, ``first_fit``, ...)
+remain importable as deprecated shims for one release.
 """
+from repro.core.api import (PlacementState, ScheduleRequest, ScheduleResult,
+                            SchedulingPolicy, get_policy, list_policies,
+                            nominal_rho, register_policy, rho_hat)
 from repro.core.cluster import Cluster, philly_cluster
 from repro.core.jobs import Job, philly_workload
 from repro.core.contention import (IterModel, contention_level, degradation,
                                    evaluate, estimate_exec_time, tau_bounds)
-from repro.core.simulator import SimResult, simulate
-from repro.core.sjf_bco import Schedule, fa_ffp, lbsgf, rho_hat, sjf_bco
+from repro.core.simulator import SimEvent, SimResult, simulate
+from repro.core.sjf_bco import Schedule, fa_ffp, lbsgf, sjf_bco
 from repro.core import baselines
 from repro.core.baselines import (first_fit, list_scheduling, random_policy,
                                   reserved_bandwidth)
+from repro.core.extensions import sjf_bco_adaptive
+from repro.core.scenario import (ArrivalSpec, ClusterSpec, ContentionStats,
+                                 RunReport, Scenario, WorkloadSpec,
+                                 run_scenario)
 from repro.core.theory import TheoryReport, report
 
-baselines.POLICIES["sjf-bco"] = sjf_bco
-
 __all__ = [
+    # unified scheduling API
+    "ScheduleRequest", "ScheduleResult", "SchedulingPolicy",
+    "register_policy", "get_policy", "list_policies",
+    "PlacementState", "nominal_rho", "rho_hat",
+    # scenarios
+    "Scenario", "ClusterSpec", "WorkloadSpec", "ArrivalSpec",
+    "RunReport", "ContentionStats", "run_scenario",
+    # problem model
     "Cluster", "philly_cluster", "Job", "philly_workload",
     "IterModel", "contention_level", "degradation", "evaluate",
     "estimate_exec_time", "tau_bounds",
-    "SimResult", "simulate",
-    "Schedule", "fa_ffp", "lbsgf", "rho_hat", "sjf_bco",
+    "SimEvent", "SimResult", "simulate",
+    # algorithms + deprecated shims
+    "Schedule", "fa_ffp", "lbsgf", "sjf_bco", "sjf_bco_adaptive",
     "first_fit", "list_scheduling", "random_policy", "reserved_bandwidth",
     "TheoryReport", "report",
 ]

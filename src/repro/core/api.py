@@ -1,0 +1,404 @@
+"""Unified scheduling API: one request/result pair, a policy registry, and
+the shared busy-time machinery every policy builds on.
+
+The paper's Fig. 3 loop is "search a placement -> evaluate it under
+contention".  Every scheduler in this repo is an instance of that loop, so
+the public surface is deliberately small:
+
+  * :class:`ScheduleRequest` -- cluster, jobs, optional arrival times,
+    horizon T, slack factor u, and policy-specific ``params``.  Batch
+    scheduling (the paper's §4 setting, all jobs known at t=0) is the
+    ``arrivals=None`` special case of the same code path that serves
+    online streams.
+  * :class:`ScheduleResult` -- placement + busy-time certificate, ready
+    for :func:`repro.core.simulator.simulate`.
+  * :func:`register_policy` / :func:`get_policy` / :func:`list_policies`
+    -- a decorator-based registry; ``get_policy(name)(request)`` runs any
+    registered policy through one signature.
+
+Supported building blocks for policy authors (promoted out of
+``sjf_bco.py``, which previously kept them private):
+
+  * :class:`PlacementState` -- busy-time clocks U (Eq. 15/16), real-time
+    clocks R, and the placed-job snapshot used by the rho_hat(y^k)
+    refinement of Eq. (8).
+  * :func:`try_place` -- nominal-filter -> refine -> re-check loop
+    (the Fig. 3 "re-evaluate after the schedule is known" retry).
+  * :func:`bisect_theta` -- Algorithm 1's bisection on the per-GPU
+    execution-time budget theta_u, generic over the per-theta attempt.
+  * :func:`schedule_arrivals` -- the online epoch loop: advance the real
+    clocks to each arrival and greedily place with a policy-supplied
+    chooser.
+  * :func:`finalize`, :func:`nominal_rho`, :func:`rho_hat`.
+
+A new policy is ~20 lines::
+
+    @register_policy("my-policy")
+    def my_policy(request: ScheduleRequest) -> ScheduleResult:
+        def attempt(theta):
+            state = PlacementState(request.cluster)
+            for job in request.jobs:
+                if not try_place(state, job, my_picker,
+                                 nominal_rho(request.cluster, job),
+                                 request.u, theta):
+                    return None
+            return finalize(state, len(request.jobs), theta, None, "MINE")
+        return bisect_theta(attempt, request.horizon, "MINE")
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.cluster import Cluster
+from repro.core.contention import evaluate, tau_bounds
+from repro.core.jobs import Job
+
+# --------------------------------------------------------------------------
+# Request / result
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleRequest:
+    """One scheduling problem instance.
+
+    ``arrivals`` (optional) gives the arrival slot of ``jobs[i]`` as
+    ``arrivals[i]``; ``None`` -- or an all-zero array -- is the batch
+    setting where every job is available at t=0.  ``params`` carries
+    policy-specific knobs (e.g. ``{"kappas": [8]}`` for SJF-BCO,
+    ``{"seed": 1}`` for RAND).
+    """
+
+    cluster: Cluster
+    jobs: list[Job]
+    arrivals: np.ndarray | None = None
+    horizon: int = 1200
+    u: float = 1.5
+    params: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if not self.jobs:
+            raise ValueError("request needs at least one job")
+        for i, j in enumerate(self.jobs):
+            # Assignments carry job ids and the simulator indexes ``jobs``
+            # with them, so ids must be 0..n-1 in list order.
+            if j.jid != i:
+                raise ValueError(
+                    f"jobs[{i}].jid == {j.jid}; job ids must equal their "
+                    "list index (renumber with dataclasses.replace)")
+        if self.arrivals is not None:
+            arr = np.asarray(self.arrivals)
+            if arr.shape != (len(self.jobs),):
+                raise ValueError(
+                    f"arrivals shape {arr.shape} != ({len(self.jobs)},)")
+            if np.any(arr < 0):
+                raise ValueError("arrival slots must be >= 0")
+            object.__setattr__(self, "arrivals", arr)
+
+    @property
+    def is_batch(self) -> bool:
+        """True when every job is available at t=0 (the paper's setting)."""
+        return self.arrivals is None or not np.any(self.arrivals > 0)
+
+    def arrival_of(self, job: Job) -> int:
+        if self.arrivals is None:
+            return 0
+        return int(self.arrivals[self.jobs.index(job)])
+
+    def arrival_items(self) -> list[tuple[Job, int]]:
+        """(job, arrival) pairs, in request order."""
+        if self.arrivals is None:
+            return [(j, 0) for j in self.jobs]
+        return [(j, int(t)) for j, t in zip(self.jobs, self.arrivals)]
+
+
+@dataclasses.dataclass
+class ScheduleResult:
+    """Result of a scheduling policy, ready for the simulator.
+
+    Subsumes the legacy ``Schedule``: ``assignment`` is the ordered
+    (job id, gpu ids) placement, ``theta`` the busy-time budget the
+    schedule was certified against (Eq. 16), ``max_busy_time`` the
+    realised max U (== theta_tilde of Lemma 2 for the tightest feasible
+    theta).
+    """
+
+    assignment: list[tuple[int, np.ndarray]]   # (job id, gpu ids), order
+    est_start: np.ndarray
+    est_finish: np.ndarray
+    est_makespan: float
+    theta: float
+    kappa: int | None = None
+    policy: str = ""
+    max_busy_time: float = 0.0
+
+
+@runtime_checkable
+class SchedulingPolicy(Protocol):
+    """A scheduling policy: one problem instance in, one schedule out."""
+
+    def __call__(self, request: ScheduleRequest) -> ScheduleResult: ...
+
+
+# --------------------------------------------------------------------------
+# Policy registry
+# --------------------------------------------------------------------------
+
+_REGISTRY: dict[str, SchedulingPolicy] = {}
+_BUILTINS_LOADED = False
+
+
+def _load_builtins() -> None:
+    """Import the built-in policy modules so their decorators run.
+
+    Lazy so ``repro.core.api`` has no imports of the modules that import
+    it -- this is what removes the old ``POLICIES["sjf-bco"] = None``
+    import-cycle patch.
+    """
+    global _BUILTINS_LOADED
+    if _BUILTINS_LOADED:
+        return
+    _BUILTINS_LOADED = True
+    from repro.core import baselines, extensions, sjf_bco  # noqa: F401
+
+
+def register_policy(name: str, *aliases: str
+                    ) -> Callable[[SchedulingPolicy], SchedulingPolicy]:
+    """Decorator: make ``fn`` available as ``get_policy(name)``."""
+
+    def deco(fn: SchedulingPolicy) -> SchedulingPolicy:
+        for key in (name, *aliases):
+            key = key.lower()        # lookups lowercase too
+            if key in _REGISTRY and _REGISTRY[key] is not fn:
+                raise ValueError(f"policy {key!r} already registered")
+            _REGISTRY[key] = fn
+        fn.policy_name = name.lower()   # type: ignore[attr-defined]
+        return fn
+
+    return deco
+
+
+def get_policy(name: str) -> SchedulingPolicy:
+    """Look up a registered policy by name (case-insensitive)."""
+    _load_builtins()
+    key = name.lower()
+    if key not in _REGISTRY:
+        raise KeyError(
+            f"unknown policy {name!r}; registered: {', '.join(list_policies())}")
+    return _REGISTRY[key]
+
+
+def list_policies() -> list[str]:
+    """Sorted names of every registered policy."""
+    _load_builtins()
+    return sorted(_REGISTRY)
+
+
+# --------------------------------------------------------------------------
+# Estimates (Table 1 / §5.1)
+# --------------------------------------------------------------------------
+
+
+def nominal_rho(cluster: Cluster, job: Job) -> float:
+    """Contention-free lower estimate (tau at b_intra, single server)."""
+    lo, _ = tau_bounds(cluster, job)
+    phi = max(1, int(np.floor(1.0 / lo)))
+    return float(int(np.ceil(job.iters / phi)))
+
+
+def rho_hat(cluster: Cluster, job: Job) -> float:
+    """Schedule-independent mid-bracket estimate, used by theory checks."""
+    lo, hi = tau_bounds(cluster, job)
+    tau = 0.5 * (lo + hi)
+    phi = max(1, int(np.floor(1.0 / tau)))
+    return float(int(np.ceil(job.iters / phi)))
+
+
+# --------------------------------------------------------------------------
+# Busy-time accounting (§5-3)
+# --------------------------------------------------------------------------
+
+
+class PlacementState:
+    """Per-attempt scheduler state: busy clocks U, real clocks R, and the
+    snapshot of placed jobs used for the rho_hat(y^k) refinement."""
+
+    def __init__(self, cluster: Cluster):
+        self.cluster = cluster
+        self.U = np.zeros(cluster.num_gpus)    # busy-time clock (Eq. 15/16)
+        self.R = np.zeros(cluster.num_gpus)    # real-time clock (gang start)
+        self.assignment: list[tuple[int, np.ndarray]] = []
+        self.placed_jobs: list[Job] = []
+        self.placed_y: list[np.ndarray] = []   # per-server GPU counts
+        self.est_start: dict[int, float] = {}
+        self.est_finish: dict[int, float] = {}
+
+    def _y_of(self, gpus: np.ndarray) -> np.ndarray:
+        y = np.zeros(self.cluster.num_servers, dtype=np.int64)
+        np.add.at(y, self.cluster.gpu_server[gpus], 1)
+        return y
+
+    def advance_to(self, t: float) -> None:
+        """Advance the real-time clocks to ``t`` (an arrival instant): a
+        GPU idle before the arrival cannot have been used earlier."""
+        np.maximum(self.R, float(t), out=self.R)
+
+    def refined_rho(self, job: Job, gpus: np.ndarray) -> tuple[float, float]:
+        """rho_hat_j(y^k): Eq. (8) against placed jobs overlapping the
+        estimated gang start.  Returns (rho_hat, est_start)."""
+        start = float(self.R[gpus].max()) if len(gpus) else 0.0
+        y_j = self._y_of(gpus)
+        overlap_jobs, overlap_y = [], []
+        for jb, y in zip(self.placed_jobs, self.placed_y):
+            if self.est_finish[jb.jid] > start + 1e-9:
+                overlap_jobs.append(jb)
+                overlap_y.append(y)
+        Y = np.vstack(overlap_y + [y_j]) if overlap_y else y_j[None, :]
+        model = evaluate(self.cluster, overlap_jobs + [job], Y)
+        tau = float(model.tau[-1])
+        phi = max(1, int(np.floor(1.0 / tau)))
+        return float(int(np.ceil(job.iters / phi))), start
+
+    def commit(self, job: Job, gpus: np.ndarray, rho: float, start: float,
+               u: float) -> None:
+        self.U[gpus] += rho / u
+        self.R[gpus] = start + rho
+        self.assignment.append((job.jid, gpus))
+        self.placed_jobs.append(job)
+        self.placed_y.append(self._y_of(gpus))
+        self.est_start[job.jid] = start
+        self.est_finish[job.jid] = start + rho
+
+
+# A picker maps (state, job, rho_nom, u, theta) -> gpu ids or None.
+Picker = Callable[[PlacementState, Job, float, float, float],
+                  "np.ndarray | None"]
+
+
+def try_place(state: PlacementState, job: Job, picker: Picker,
+              rho_nom: float, u: float, theta: float, tries: int = 4) -> bool:
+    """Pick GPUs with the nominal-estimate filter, refine rho_hat(y^k) for
+    the chosen set, and re-check the Eq. (16) budget.  If the refined charge
+    overflows theta on some GPU, re-filter with the refined estimate (which
+    excludes the marginal GPUs) and retry -- mirroring the paper's
+    "re-evaluate after the schedule is known" loop of Fig. 3."""
+    rho_try = rho_nom
+    for _ in range(tries):
+        gpus = picker(state, job, rho_try, u, theta)
+        if gpus is None:
+            return False
+        gpus = np.asarray(gpus)
+        rho, start = state.refined_rho(job, gpus)
+        if np.all(state.U[gpus] + rho / u <= theta + 1e-9):
+            state.commit(job, gpus, rho, start, u)
+            return True
+        rho_try = max(rho, rho_try * 1.05)
+    return False
+
+
+def finalize(state: PlacementState, n_jobs: int, theta: float,
+             kappa: int | None, policy: str) -> ScheduleResult:
+    """Freeze a placement attempt into a :class:`ScheduleResult`."""
+    est_start = np.full(n_jobs, -1.0)
+    est_finish = np.full(n_jobs, -1.0)
+    for j, s in state.est_start.items():
+        est_start[j] = s
+        est_finish[j] = state.est_finish[j]
+    return ScheduleResult(assignment=state.assignment, est_start=est_start,
+                          est_finish=est_finish,
+                          est_makespan=float(est_finish.max(initial=0.0)),
+                          theta=theta, kappa=kappa, policy=policy,
+                          max_busy_time=float(state.U.max(initial=0.0)))
+
+
+# --------------------------------------------------------------------------
+# Generic control loops
+# --------------------------------------------------------------------------
+
+
+def bisect_theta(attempt: Callable[[float], "ScheduleResult | None"],
+                 horizon: int, policy: str) -> ScheduleResult:
+    """Algorithm 1's outer loop: bisection on the busy-time budget theta_u.
+
+    ``attempt(theta)`` returns the best schedule feasible under that
+    budget, or None.  Feasible => tighten (search below theta);
+    infeasible => relax.  Matches the paper's "theta_u^f is the maximum
+    execution time limit returned by policy f" for the baselines too.
+    """
+    best: ScheduleResult | None = None
+    left, right = 1.0, float(horizon)
+    while left <= right:
+        theta = 0.5 * (left + right)
+        cand = attempt(theta)
+        if cand is not None:
+            if best is None or cand.est_makespan <= best.est_makespan:
+                best = cand
+            right = theta - 1.0
+        else:
+            left = theta + 1.0
+    if best is None:
+        raise RuntimeError(f"{policy}: no feasible schedule within horizon; "
+                           "increase T")
+    return best
+
+
+# An online chooser places (and commits) one arrived job, or returns False.
+Chooser = Callable[[PlacementState, Job, float], bool]
+
+
+def schedule_arrivals(request: ScheduleRequest, choose: Chooser,
+                      policy: str) -> ScheduleResult:
+    """The online epoch loop shared by every policy's ``arrivals`` path.
+
+    Jobs are visited in (arrival, G_j) order; the real-time clocks are
+    advanced to each arrival instant before the policy's ``choose``
+    places-and-commits the job against the live busy-time clocks.  There
+    is no theta bisection online (the stream is open-ended), so the
+    budget is the horizon, matching the paper's RAND convention.
+    """
+    order = sorted(request.arrival_items(),
+                   key=lambda it: (it[1], it[0].num_gpus, it[0].jid))
+    state = PlacementState(request.cluster)
+    theta = float(request.horizon)
+    for job, arrival in order:
+        state.advance_to(arrival)
+        if not choose(state, job, theta):
+            raise RuntimeError(f"{policy}: cannot place job {job.jid} "
+                               f"arriving at slot {arrival}")
+    return finalize(state, len(request.jobs), theta, None, policy)
+
+
+def pick_best_finish(state: PlacementState, job: Job, pickers: list[Picker],
+                     rho_nom: float, u: float, theta: float) -> bool:
+    """Adaptive pack-or-spread: evaluate every picker's placement with the
+    refined rho_hat(y^k) and commit whichever finishes earliest.  Shared by
+    SJF-BCO+ and the online path (where queueing delay IS the est-finish
+    penalty)."""
+    best = None  # (est_finish, gpus, rho, start)
+    for picker in pickers:
+        gpus = picker(state, job, rho_nom, u, theta)
+        if gpus is None:
+            continue
+        gpus = np.asarray(gpus)
+        rho, start = state.refined_rho(job, gpus)
+        if np.any(state.U[gpus] + rho / u > theta + 1e-9):
+            continue
+        if best is None or start + rho < best[0]:
+            best = (start + rho, gpus, rho, start)
+    if best is None:
+        return False
+    _, gpus, rho, start = best
+    state.commit(job, gpus, rho, start, u)
+    return True
+
+
+__all__ = [
+    "ScheduleRequest", "ScheduleResult", "SchedulingPolicy",
+    "register_policy", "get_policy", "list_policies",
+    "PlacementState", "Picker", "Chooser",
+    "try_place", "finalize", "bisect_theta", "schedule_arrivals",
+    "pick_best_finish", "nominal_rho", "rho_hat",
+]

@@ -1,7 +1,9 @@
-"""Baseline scheduling policies from §7-2: First-Fit, List-Scheduling, RAND.
+"""Baseline scheduling policies from §7-2: First-Fit, List-Scheduling, RAND,
+plus the GADGET-style reserved-bandwidth ablation.
 
 All baselines share SJF-BCO's busy-time accounting (U clocks, refined
-rho_hat(y^k)/u charging) so the comparison isolates the *placement policy*:
+rho_hat(y^k)/u charging, via :mod:`repro.core.api`) so the comparison
+isolates the *placement policy*:
 
   * FF   -- walk servers in id order, take the first G_j feasible GPUs
             (packs into fewest servers; fragmentation-averse but
@@ -13,20 +15,29 @@ rho_hat(y^k)/u charging) so the comparison isolates the *placement policy*:
 
 FF and LS bisect their own theta_u like SJF-BCO does, per the paper's
 "theta_u^f is the maximum execution time limit returned by policy f".
-Baselines keep the user-submitted arrival order (no SJF sort).
+Baselines keep the user-submitted arrival order (no SJF sort).  With
+``request.arrivals`` set, every baseline runs the shared online epoch loop
+with its own picker (theta_u = T, as online has no bisection).
 """
 from __future__ import annotations
 
+import warnings
+
 import numpy as np
 
+from repro.core.api import (PlacementState, Picker, ScheduleRequest,
+                            ScheduleResult, bisect_theta, finalize,
+                            nominal_rho, register_policy, schedule_arrivals,
+                            try_place)
 from repro.core.cluster import Cluster
 from repro.core.jobs import Job
-from repro.core.sjf_bco import (Schedule, _State, _finalize, _try_place,
-                                nominal_rho)
+
+__all__ = ["first_fit", "list_scheduling", "random_policy",
+           "reserved_bandwidth", "POLICIES"]
 
 
-def _ff_pick(state: _State, job: Job, rho_nom: float, u: float, theta: float
-             ) -> np.ndarray | None:
+def _ff_pick(state: PlacementState, job: Job, rho_nom: float, u: float,
+             theta: float) -> np.ndarray | None:
     # Server-major, GPU-id order == first fit from server to server.
     ids = np.flatnonzero(state.U + rho_nom / u <= theta + 1e-9)
     if len(ids) < job.num_gpus:
@@ -34,8 +45,8 @@ def _ff_pick(state: _State, job: Job, rho_nom: float, u: float, theta: float
     return ids[: job.num_gpus]
 
 
-def _ls_pick(state: _State, job: Job, rho_nom: float, u: float, theta: float
-             ) -> np.ndarray | None:
+def _ls_pick(state: PlacementState, job: Job, rho_nom: float, u: float,
+             theta: float) -> np.ndarray | None:
     feasible = np.flatnonzero(state.U + rho_nom / u <= theta + 1e-9)
     if len(feasible) < job.num_gpus:
         return None
@@ -43,49 +54,45 @@ def _ls_pick(state: _State, job: Job, rho_nom: float, u: float, theta: float
     return order[: job.num_gpus]
 
 
-def _run(cluster: Cluster, jobs: list[Job], picker, u: float, theta: float
-         ) -> _State | None:
-    state = _State(cluster)
-    for job in jobs:
-        if not _try_place(state, job, picker, nominal_rho(cluster, job), u, theta):
-            return None
-    return state
+def _picker_policy(request: ScheduleRequest, picker: Picker, name: str
+                   ) -> ScheduleResult:
+    """Shared FF/LS skeleton: online epoch loop or batch theta bisection."""
+    cluster, u = request.cluster, request.u
+    rho_noms = {j.jid: nominal_rho(cluster, j) for j in request.jobs}
+
+    if not request.is_batch:
+        def choose(state: PlacementState, job: Job, theta: float) -> bool:
+            return try_place(state, job, picker, rho_noms[job.jid], u, theta)
+        return schedule_arrivals(request, choose, name)
+
+    jobs = request.jobs
+
+    def attempt(theta: float) -> ScheduleResult | None:
+        state = PlacementState(cluster)
+        for job in jobs:
+            if not try_place(state, job, picker, rho_noms[job.jid], u, theta):
+                return None
+        return finalize(state, len(jobs), theta, None, name)
+
+    return bisect_theta(attempt, request.horizon, name)
 
 
-def _bisect(cluster: Cluster, jobs: list[Job], picker, horizon: int,
-            u: float, name: str) -> Schedule:
-    best: Schedule | None = None
-    left, right = 1.0, float(horizon)
-    while left <= right:
-        theta = 0.5 * (left + right)
-        state = _run(cluster, jobs, picker, u, theta)
-        if state is not None:
-            cand = _finalize(state, len(jobs), theta, None, name)
-            if best is None or cand.est_makespan <= best.est_makespan:
-                best = cand
-            right = theta - 1.0
-        else:
-            left = theta + 1.0
-    if best is None:
-        raise RuntimeError(f"{name}: no feasible schedule within horizon")
-    return best
+@register_policy("ff")
+def first_fit_policy(request: ScheduleRequest) -> ScheduleResult:
+    return _picker_policy(request, _ff_pick, "FF")
 
 
-def first_fit(cluster: Cluster, jobs: list[Job], horizon: int,
-              u: float = 1.5) -> Schedule:
-    return _bisect(cluster, jobs, _ff_pick, horizon, u, "FF")
+@register_policy("ls")
+def list_scheduling_policy(request: ScheduleRequest) -> ScheduleResult:
+    return _picker_policy(request, _ls_pick, "LS")
 
 
-def list_scheduling(cluster: Cluster, jobs: list[Job], horizon: int,
-                    u: float = 1.5) -> Schedule:
-    return _bisect(cluster, jobs, _ls_pick, horizon, u, "LS")
-
-
-def random_policy(cluster: Cluster, jobs: list[Job], horizon: int,
-                  u: float = 1.5, seed: int = 0) -> Schedule:
-    rng = np.random.default_rng(seed)
-    state = _State(cluster)
-    theta = float(horizon)
+@register_policy("rand")
+def random_policy_policy(request: ScheduleRequest) -> ScheduleResult:
+    """RAND with theta_u = T.  ``request.params``: ``seed`` (default 0)."""
+    cluster, u = request.cluster, request.u
+    rng = np.random.default_rng(request.params.get("seed", 0))
+    theta = float(request.horizon)
 
     def picker(st, job, rho_nom, uu, th):
         feasible = np.flatnonzero(st.U + rho_nom / uu <= th + 1e-9)
@@ -93,46 +100,99 @@ def random_policy(cluster: Cluster, jobs: list[Job], horizon: int,
             return None
         return rng.choice(feasible, size=job.num_gpus, replace=False)
 
-    for job in jobs:
-        if not _try_place(state, job, picker, nominal_rho(cluster, job), u, theta):
+    if not request.is_batch:
+        def choose(state: PlacementState, job: Job, th: float) -> bool:
+            return try_place(state, job, picker,
+                             nominal_rho(cluster, job), u, th)
+        return schedule_arrivals(request, choose, "RAND")
+
+    state = PlacementState(cluster)
+    for job in request.jobs:
+        if not try_place(state, job, picker, nominal_rho(cluster, job),
+                         u, theta):
             raise RuntimeError("RAND: no feasible schedule within horizon")
-    return _finalize(state, len(jobs), theta, None, "RAND")
+    return finalize(state, len(request.jobs), theta, None, "RAND")
 
 
-def reserved_bandwidth(cluster: Cluster, jobs: list[Job], horizon: int,
-                       u: float = 1.5) -> Schedule:
+@register_policy("reserved")
+def reserved_bandwidth_policy(request: ScheduleRequest) -> ScheduleResult:
     """GADGET-style ablation [22]: schedule as if each job had reserved,
     contention-free bandwidth (rho charged at its nominal lower estimate,
     placement = least-loaded GPUs).  The simulator *does* model contention,
     so the actual makespan of this schedule exposes the optimism the paper
     argues against."""
-    best: Schedule | None = None
-    left, right = 1.0, float(horizon)
-    while left <= right:
-        theta = 0.5 * (left + right)
-        state = _State(cluster)
-        ok = True
+    cluster, u = request.cluster, request.u
+
+    def place_nominal(state: PlacementState, job: Job, theta: float) -> bool:
+        rho = nominal_rho(cluster, job)
+        gpus = _ls_pick(state, job, rho, u, theta)
+        if gpus is None or np.any(state.U[gpus] + rho / u > theta + 1e-9):
+            return False
+        start = float(state.R[gpus].max()) if len(gpus) else 0.0
+        state.commit(job, np.asarray(gpus), rho, start, u)
+        return True
+
+    if not request.is_batch:
+        return schedule_arrivals(request, place_nominal, "RESERVED")
+
+    jobs = request.jobs
+
+    def attempt(theta: float) -> ScheduleResult | None:
+        state = PlacementState(cluster)
         for job in jobs:
-            rho = nominal_rho(cluster, job)
-            gpus = _ls_pick(state, job, rho, u, theta)
-            if gpus is None or np.any(state.U[gpus] + rho / u > theta + 1e-9):
-                ok = False
-                break
-            start = float(state.R[gpus].max()) if len(gpus) else 0.0
-            state.commit(job, np.asarray(gpus), rho, start, u)
-        if ok:
-            cand = _finalize(state, len(jobs), theta, None, "RESERVED")
-            if best is None or cand.est_makespan <= best.est_makespan:
-                best = cand
-            right = theta - 1.0
-        else:
-            left = theta + 1.0
-    assert best is not None
-    return best
+            if not place_nominal(state, job, theta):
+                return None
+        return finalize(state, len(jobs), theta, None, "RESERVED")
+
+    return bisect_theta(attempt, request.horizon, "RESERVED")
 
 
+# ---------------------------------------------------------------------------
+# Deprecated free-function shims (one release)
+# ---------------------------------------------------------------------------
+
+
+def _shim(policy_name: str, cluster: Cluster, jobs: list[Job], horizon: int,
+          u: float, params: dict | None = None) -> ScheduleResult:
+    warnings.warn(f"the free-function baseline API is deprecated; use "
+                  f"get_policy({policy_name!r})(ScheduleRequest(...))",
+                  DeprecationWarning, stacklevel=3)
+    from repro.core.api import get_policy
+    return get_policy(policy_name)(
+        ScheduleRequest(cluster=cluster, jobs=list(jobs), horizon=horizon,
+                        u=u, params=params or {}))
+
+
+def first_fit(cluster: Cluster, jobs: list[Job], horizon: int,
+              u: float = 1.5) -> ScheduleResult:
+    return _shim("ff", cluster, jobs, horizon, u)
+
+
+def list_scheduling(cluster: Cluster, jobs: list[Job], horizon: int,
+                    u: float = 1.5) -> ScheduleResult:
+    return _shim("ls", cluster, jobs, horizon, u)
+
+
+def random_policy(cluster: Cluster, jobs: list[Job], horizon: int,
+                  u: float = 1.5, seed: int = 0) -> ScheduleResult:
+    return _shim("rand", cluster, jobs, horizon, u, {"seed": seed})
+
+
+def reserved_bandwidth(cluster: Cluster, jobs: list[Job], horizon: int,
+                       u: float = 1.5) -> ScheduleResult:
+    return _shim("reserved", cluster, jobs, horizon, u)
+
+
+def _legacy_sjf_bco(cluster, jobs, horizon, u=1.5):
+    from repro.core.sjf_bco import sjf_bco
+    return sjf_bco(cluster, jobs, horizon, u)
+
+
+# Deprecated: the registry (api.get_policy / api.list_policies) owns policy
+# lookup now.  Kept fully populated for one release -- note "sjf-bco" no
+# longer needs the import-cycle patch that repro.core.__init__ used to apply.
 POLICIES = {
-    "sjf-bco": None,  # filled in repro.core.__init__ to avoid import cycle
+    "sjf-bco": _legacy_sjf_bco,
     "ff": first_fit,
     "ls": list_scheduling,
     "rand": random_policy,

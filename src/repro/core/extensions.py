@@ -1,7 +1,7 @@
 """Beyond-paper scheduler extensions (recorded separately from the
 faithful SJF-BCO in benchmarks/ablations).
 
-1. ``sjf_bco_adaptive`` — per-job *adaptive* subroutine choice: instead of
+1. ``sjf-bco-adaptive`` — per-job *adaptive* subroutine choice: instead of
    the paper's hard kappa threshold between FA-FFP (pack) and LBSGF
    (spread), evaluate BOTH placements with the refined rho_hat(y^k)
    estimate and commit whichever finishes earlier.  This removes kappa
@@ -16,79 +16,73 @@ faithful SJF-BCO in benchmarks/ablations).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
-import numpy as np
-
+from repro.core.api import (PlacementState, ScheduleRequest, ScheduleResult,
+                            bisect_theta, finalize, get_policy, nominal_rho,
+                            pick_best_finish, register_policy,
+                            schedule_arrivals)
 from repro.core.cluster import Cluster
 from repro.core.jobs import Job
 from repro.core.simulator import simulate
-from repro.core.sjf_bco import (Schedule, _State, _finalize, fa_ffp, lbsgf,
-                                nominal_rho)
+from repro.core.sjf_bco import fa_ffp, lbsgf
+
+__all__ = ["sjf_bco_adaptive", "sjf_bco_adaptive_policy", "contention_sweep"]
 
 
-def _adaptive_attempt(cluster: Cluster, jobs_sorted: list[Job],
-                      rho_noms: dict[int, float], u: float, theta: float
-                      ) -> _State | None:
-    state = _State(cluster)
-    for job in jobs_sorted:
-        rho_nom = rho_noms[job.jid]
-        best = None  # (est_finish, gpus, rho, start)
-        for picker in (fa_ffp, lbsgf):
-            gpus = picker(state, job, rho_nom, u, theta)
-            if gpus is None:
-                continue
-            gpus = np.asarray(gpus)
-            rho, start = state.refined_rho(job, gpus)
-            if np.any(state.U[gpus] + rho / u > theta + 1e-9):
-                continue
-            if best is None or start + rho < best[0]:
-                best = (start + rho, gpus, rho, start)
-        if best is None:
-            return None
-        _, gpus, rho, start = best
-        state.commit(job, gpus, rho, start, u)
-    return state
+@register_policy("sjf-bco-adaptive")
+def sjf_bco_adaptive_policy(request: ScheduleRequest) -> ScheduleResult:
+    """Bisection on theta_u with the adaptive pack-or-spread choice; with
+    arrivals, the same choice runs in the online epoch loop (identical to
+    SJF-BCO online, which is already adaptive)."""
+    cluster, u = request.cluster, request.u
+    rho_noms = {j.jid: nominal_rho(cluster, j) for j in request.jobs}
+
+    def choose(state: PlacementState, job: Job, theta: float) -> bool:
+        return pick_best_finish(state, job, [fa_ffp, lbsgf],
+                                rho_noms[job.jid], u, theta)
+
+    if not request.is_batch:
+        return schedule_arrivals(request, choose, "SJF-BCO+")
+
+    jobs_sorted = sorted(request.jobs, key=lambda j: (j.num_gpus, j.jid))
+
+    def attempt(theta: float) -> ScheduleResult | None:
+        state = PlacementState(cluster)
+        for job in jobs_sorted:
+            if not choose(state, job, theta):
+                return None
+        return finalize(state, len(request.jobs), theta, None, "SJF-BCO+")
+
+    return bisect_theta(attempt, request.horizon, "SJF-BCO+")
 
 
 def sjf_bco_adaptive(cluster: Cluster, jobs: list[Job], horizon: int,
-                     u: float = 1.5) -> Schedule:
-    """Bisection on theta_u with the adaptive pack-or-spread choice."""
-    jobs_sorted = sorted(jobs, key=lambda j: (j.num_gpus, j.jid))
-    rho_noms = {j.jid: nominal_rho(cluster, j) for j in jobs}
-    best: Schedule | None = None
-    left, right = 1.0, float(horizon)
-    while left <= right:
-        theta = 0.5 * (left + right)
-        state = _adaptive_attempt(cluster, jobs_sorted, rho_noms, u, theta)
-        if state is not None:
-            cand = _finalize(state, len(jobs), theta, None, "SJF-BCO+")
-            if best is None or cand.est_makespan <= best.est_makespan:
-                best = cand
-            right = theta - 1.0
-        else:
-            left = theta + 1.0
-    if best is None:
-        raise RuntimeError("SJF-BCO+: no feasible schedule within horizon")
-    return best
+                     u: float = 1.5) -> ScheduleResult:
+    """Deprecated shim: use ``get_policy("sjf-bco-adaptive")``."""
+    warnings.warn("sjf_bco_adaptive(cluster, jobs, ...) is deprecated; use "
+                  "get_policy('sjf-bco-adaptive')(ScheduleRequest(...))",
+                  DeprecationWarning, stacklevel=2)
+    return sjf_bco_adaptive_policy(
+        ScheduleRequest(cluster=cluster, jobs=list(jobs), horizon=horizon, u=u))
 
 
 def contention_sweep(seed: int = 1, xi1s=(0.2, 0.5, 0.7, 1.0),
                      horizon: int = 2400) -> list[dict]:
     """SJF-BCO vs LS (the strongest baseline) as contention intensifies."""
-    from repro.core.baselines import list_scheduling
     from repro.core.cluster import philly_cluster
     from repro.core.jobs import philly_workload
-    from repro.core.sjf_bco import sjf_bco
 
     base = philly_cluster(20, seed=seed)
     jobs = philly_workload(seed=seed)
     rows = []
     for xi1 in xi1s:
         cluster = dataclasses.replace(base, xi1=xi1)
+        request = ScheduleRequest(cluster=cluster, jobs=jobs, horizon=horizon)
         r = {"xi1": xi1}
-        for name, policy in (("sjf", sjf_bco), ("sjf+", sjf_bco_adaptive),
-                             ("ls", list_scheduling)):
-            sched = policy(cluster, jobs, horizon)
+        for name, policy in (("sjf", "sjf-bco"), ("sjf+", "sjf-bco-adaptive"),
+                             ("ls", "ls")):
+            sched = get_policy(policy)(request)
             sim = simulate(cluster, jobs, sched.assignment)
             r[f"{name}_makespan"] = sim.makespan
         r["advantage_vs_ls"] = r["ls_makespan"] / r["sjf_makespan"]

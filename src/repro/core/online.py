@@ -2,30 +2,36 @@
 
 The paper schedules a batch of jobs known at t=0 (§4: "In the beginning of
 a scheduling horizon T ... a set of jobs waiting to be scheduled").
-Production clusters see arrivals over time.  This wrapper runs the
-paper's machinery online:
+Production clusters see arrivals over time.  In the unified API this is
+simply a :class:`~repro.core.api.ScheduleRequest` with ``arrivals`` set:
+every registered policy then runs the shared epoch loop
+(:func:`~repro.core.api.schedule_arrivals`), which
 
-  * jobs arrive with timestamps;
-  * at each arrival epoch, the not-yet-started jobs are (re)scheduled with
-    SJF-BCO *around* the currently-running jobs (whose placements are
-    frozen — gang scheduling forbids migration, Eq. 3);
-  * running-job contention is accounted by pre-loading the busy-time
-    clocks U with the remaining work of running jobs.
+  * visits jobs in (arrival, G_j) order;
+  * advances the real-time clocks to each arrival instant (a GPU idle
+    before an arrival cannot have been used earlier);
+  * places each job against the live busy-time clocks — for SJF-BCO with
+    the finish-minimising pack-or-spread choice between FA-FFP and LBSGF
+    (gang scheduling forbids migration, Eq. 3, so placements are final).
 
-Epoch-batched rescheduling preserves the theta_u budget discipline, and
-each epoch's schedule inherits the paper's per-epoch guarantees; the
-end-to-end makespan is evaluated by the same contention simulator.
+The end-to-end makespan is evaluated by the same contention simulator
+(``simulate(..., arrivals=...)``).  This module keeps the arrival-stream
+helpers plus thin deprecated shims over the unified entrypoint.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
+from repro.core.api import ScheduleRequest, get_policy
 from repro.core.cluster import Cluster
 from repro.core.jobs import Job
 from repro.core.simulator import Assignment, simulate
-from repro.core.sjf_bco import _State, _try_place, fa_ffp, lbsgf, nominal_rho
+
+__all__ = ["ArrivingJob", "poisson_arrivals", "stream_request",
+           "schedule_online", "run_online"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,50 +49,41 @@ def poisson_arrivals(jobs: list[Job], rate: float = 0.5,
     return [ArrivingJob(j, int(t)) for j, t in zip(jobs, times)]
 
 
+def stream_request(cluster: Cluster, stream: list[ArrivingJob],
+                   horizon: int = 10**6, u: float = 1.5,
+                   params: dict | None = None) -> ScheduleRequest:
+    """Build a :class:`ScheduleRequest` from an arrival stream.
+
+    Jobs are ordered by jid so simulator indexing (``jobs[j]`` for
+    assignment entry j) lines up with the job ids."""
+    ordered = sorted(stream, key=lambda a: a.job.jid)
+    return ScheduleRequest(
+        cluster=cluster,
+        jobs=[a.job for a in ordered],
+        arrivals=np.asarray([a.arrival for a in ordered], dtype=np.int64),
+        horizon=horizon, u=u, params=params or {})
+
+
 def schedule_online(cluster: Cluster, stream: list[ArrivingJob],
                     horizon: int = 10**6, u: float = 1.5,
-                    kappa: int = 8) -> Assignment:
-    """Greedy epoch scheduler: place each arrival batch with the SJF-BCO
-    subroutines against the live busy-time clocks.  Returns the full
+                    kappa: int | None = None,
+                    policy: str = "sjf-bco") -> Assignment:
+    """Deprecated shim: schedule an arrival stream, returning the full
     assignment for the simulator (which recomputes actual contention)."""
-    stream = sorted(stream, key=lambda a: (a.arrival, a.job.num_gpus))
-    state = _State(cluster)
-    theta = float(horizon)
-    for arr in stream:
-        job = arr.job
-        # advance the real-time clocks to the arrival instant: a GPU idle
-        # before the arrival cannot have been used earlier
-        state.R = np.maximum(state.R, float(arr.arrival))
-        rho_nom = nominal_rho(cluster, job)
-        # finish-minimising pack-or-spread choice: under open-ended arrivals
-        # there is no theta bisection to spread load, so pick whichever
-        # subroutine's placement completes this job earlier (this balances
-        # naturally: queueing delay IS the est-finish penalty).
-        best = None
-        for picker in (fa_ffp, lbsgf):
-            gpus = picker(state, job, rho_nom, u, theta)
-            if gpus is None:
-                continue
-            gpus = np.asarray(gpus)
-            rho, start = state.refined_rho(job, gpus)
-            fin = max(start, float(arr.arrival)) + rho
-            if best is None or fin < best[0]:
-                best = (fin, gpus, rho, start)
-        if best is None:
-            raise RuntimeError(f"online: cannot place job {job.jid}")
-        _, gpus, rho, start = best
-        state.commit(job, gpus, rho, max(start, float(arr.arrival)), u)
-    # _State.commit appended in placement order
-    return state.assignment
+    warnings.warn("schedule_online is deprecated; use "
+                  "get_policy(name)(ScheduleRequest(..., arrivals=...))",
+                  DeprecationWarning, stacklevel=2)
+    request = stream_request(cluster, stream, horizon, u)
+    return get_policy(policy)(request).assignment
 
 
 def run_online(cluster: Cluster, stream: list[ArrivingJob],
-               horizon: int = 10**6):
-    """Schedule online and simulate (arrival-constrained);
+               horizon: int = 10**6, policy: str = "sjf-bco"
+               ) -> tuple[Assignment, "object"]:
+    """Schedule an arrival stream and simulate (arrival-constrained);
     returns (assignment, SimResult)."""
-    ordered = sorted(stream, key=lambda x: x.job.jid)
-    jobs = [a.job for a in ordered]
-    arrivals = np.asarray([a.arrival for a in ordered])
-    assignment = schedule_online(cluster, stream, horizon)
-    sim = simulate(cluster, jobs, assignment, arrivals=arrivals)
+    request = stream_request(cluster, stream, horizon)
+    assignment = get_policy(policy)(request).assignment
+    sim = simulate(cluster, request.jobs, assignment,
+                   arrivals=request.arrivals)
     return assignment, sim

@@ -29,6 +29,17 @@ from repro.core.jobs import Job
 Assignment = list[tuple[int, np.ndarray]]  # (job index, global GPU ids)
 
 
+@dataclasses.dataclass(frozen=True)
+class SimEvent:
+    """One piecewise-constant contention window of the execution."""
+
+    t: int                     # window start (slot)
+    dt: int                    # window length (slots)
+    active: int                # #concurrently running jobs
+    contention: int            # max p_j over the active set (Eq. 6)
+    busy_gpus: int             # #GPUs occupied during the window
+
+
 @dataclasses.dataclass
 class SimResult:
     start: np.ndarray          # a_j per job (slot), -1 if never started
@@ -38,12 +49,21 @@ class SimResult:
     completed: int
     horizon_hit: bool
     peak_contention: int       # max p_j[t] observed
-    busy_gpu_slots: float      # sum over jobs of duration * G_j
+    busy_gpu_slots: float      # sum over jobs of in-service duration * G_j
     total_gpu_slots: float     # makespan * N
+    events: list[SimEvent] = dataclasses.field(default_factory=list)
 
     @property
     def utilization(self) -> float:
         return self.busy_gpu_slots / max(self.total_gpu_slots, 1e-12)
+
+    @property
+    def mean_contention(self) -> float:
+        """Time-weighted mean of the per-window max contention level."""
+        total = sum(e.dt for e in self.events)
+        if not total:
+            return 0.0
+        return sum(e.contention * e.dt for e in self.events) / total
 
 
 def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
@@ -74,10 +94,14 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
     t = 0
     peak_p = 0
     busy_gpu_slots = 0.0
+    events: list[SimEvent] = []
 
     def ready_jobs(now: int) -> list[int]:
+        # Iterate in sorted job order: ``scheduled`` is a set, and set order
+        # would make start order -- hence FIFO tie-breaks -- depend on hash
+        # seeding rather than on the schedule.
         out = []
-        for j in scheduled:
+        for j in sorted(scheduled):
             if start[j] >= 0:
                 continue
             if arrivals is not None and now < arrivals[j]:
@@ -97,7 +121,9 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
             if arrivals is not None:
                 nxt = min(int(arrivals[j]) for j in pending)
                 if nxt > t:
-                    t = nxt          # idle until the next arrival
+                    # Idle until the next arrival, but never past the
+                    # horizon (the cutoff bounds makespan/total_gpu_slots).
+                    t = min(nxt, horizon)
                     continue
             # Unstartable remainder (should not happen with FIFO queues).
             break
@@ -112,8 +138,13 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
             phi = np.maximum(phi, 1.0 / model.tau)
         rem = remaining[active]
         slots_to_done = np.ceil(rem / phi)
-        dt = int(max(1, slots_to_done.min()))
+        # Clamp the event window at the horizon so a job cannot "finish"
+        # beyond it — horizon_hit runs stop exactly at the cutoff.
+        dt = int(max(1, min(slots_to_done.min(), horizon - t)))
         remaining[active] = rem - phi * dt
+        events.append(SimEvent(t=t, dt=dt, active=len(active),
+                               contention=int(model.p.max(initial=0)),
+                               busy_gpus=int(sum(j.num_gpus for j in sub_jobs))))
         t += dt
         done = [j for idx, j in enumerate(active) if remaining[j] <= 1e-9]
         for j in done:
@@ -123,15 +154,25 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
                 queues[int(g)].pop(0)
         active = [j for j in active if j not in done]
 
+    # Charge partial busy slots for jobs that started but never finished
+    # (horizon hit): without this, utilization is overstated because
+    # total_gpu_slots counts their window while busy_gpu_slots ignores it.
+    for j in sorted(scheduled):
+        if start[j] >= 0 and finish[j] < 0:
+            busy_gpu_slots += (t - start[j]) * jobs[j].num_gpus
+
     completed = int((finish >= 0).sum())
-    makespan = float(finish.max(initial=0))
+    horizon_hit = t >= horizon
+    makespan = float(finish.max(initial=0)) if not horizon_hit \
+        else float(max(t, finish.max(initial=0)))
     jct = finish[finish >= 0]
     return SimResult(
         start=start, finish=finish, makespan=makespan,
         avg_jct=float(jct.mean()) if len(jct) else float("inf"),
         completed=completed,
-        horizon_hit=t >= horizon,
+        horizon_hit=horizon_hit,
         peak_contention=peak_p,
         busy_gpu_slots=busy_gpu_slots,
         total_gpu_slots=makespan * cluster.num_gpus,
+        events=events,
     )

@@ -5,138 +5,48 @@ budget theta_u, sweep over the small/large-job threshold kappa), Algorithm 2
 (FA-FFP, fragment-aware first-fit packing, used when G_j <= kappa) and
 Algorithm 3 (LBSGF, least-busy-server-GPU-first, used when G_j > kappa).
 
-Accounting follows §5-3: every GPU g carries an accumulated *busy-time*
-clock U_s^g, charged rho_hat_j(y^k) / u per placed job (Eq. 15), and
+Accounting follows §5-3 and lives in :mod:`repro.core.api`
+(:class:`~repro.core.api.PlacementState`, :func:`~repro.core.api.try_place`,
+:func:`~repro.core.api.bisect_theta`): every GPU carries an accumulated
+busy-time clock U, charged rho_hat_j(y^k) / u per placed job (Eq. 15), and
 placement is feasible only while U stays within theta_u (Eq. 16) -- this is
-what Lemma 2 certifies.  Alongside U we keep a real-time clock R_g
-(estimated gang start = max R over the chosen GPUs) used to *estimate* the
-makespan of a candidate (theta_u, kappa) schedule; the actual makespan is
-later produced by ``repro.core.simulator`` which re-evaluates contention
-slot by slot.
-
-rho_hat_j(y^k) is schedule-dependent, exactly as in the paper's Table 1: we
-evaluate Eq. (8) against the snapshot of already-placed, time-overlapping
-jobs (the Fig. 3 "search -> evaluate" loop) and multiply by F_j.  A cheap
-contention-free *nominal* estimate pre-filters the feasible GPU pool; the
-refined estimate is what gets charged to U and re-checked against theta_u.
+what Lemma 2 certifies.  The actual makespan is later produced by
+``repro.core.simulator`` which re-evaluates contention slot by slot.
 
 The paper's "wait for some job to exit and retry" (Alg. 2 line 9, Alg. 3
 line 12) concerns run-time availability; in the static busy-time accounting
 waiting never reduces U, so an insufficient feasible-GPU set is reported as
 infeasible for the current (theta_u, kappa), matching Alg. 1 line 14.
+
+With ``request.arrivals`` set, the policy runs the online epoch loop
+(:func:`~repro.core.api.schedule_arrivals`): at each arrival the job is
+placed against the live busy-time clocks with the finish-minimising
+pack-or-spread choice between FA-FFP and LBSGF -- under open-ended
+arrivals there is no theta bisection to spread load, so queueing delay
+itself is the penalty that balances the two subroutines.
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 
 import numpy as np
 
+from repro.core.api import (PlacementState, ScheduleRequest, ScheduleResult,
+                            bisect_theta, finalize, nominal_rho,
+                            pick_best_finish, register_policy, rho_hat,
+                            schedule_arrivals, try_place)
 from repro.core.cluster import Cluster
-from repro.core.contention import evaluate, tau_bounds
 from repro.core.jobs import Job
 
+# Legacy alias: ``Schedule`` is now the unified ScheduleResult.
+Schedule = ScheduleResult
 
-@dataclasses.dataclass
-class Schedule:
-    """Result of a scheduling policy, ready for the simulator."""
-    assignment: list[tuple[int, np.ndarray]]   # (job idx, gpu ids), placement order
-    est_start: np.ndarray
-    est_finish: np.ndarray
-    est_makespan: float
-    theta: float
-    kappa: int | None = None
-    policy: str = ""
-    _max_busy: float = 0.0
-
-    @property
-    def max_busy_time(self) -> float:          # = W_max^Alg1 (Lemma 2)
-        return self._max_busy
+__all__ = ["Schedule", "fa_ffp", "lbsgf", "nominal_rho", "rho_hat",
+           "sjf_bco", "sjf_bco_policy"]
 
 
-def nominal_rho(cluster: Cluster, job: Job) -> float:
-    """Contention-free lower estimate (tau at b_intra, single server)."""
-    lo, _ = tau_bounds(cluster, job)
-    phi = max(1, int(np.floor(1.0 / lo)))
-    return float(int(np.ceil(job.iters / phi)))
-
-
-def rho_hat(cluster: Cluster, job: Job) -> float:
-    """Schedule-independent mid-bracket estimate, used by theory checks."""
-    lo, hi = tau_bounds(cluster, job)
-    tau = 0.5 * (lo + hi)
-    phi = max(1, int(np.floor(1.0 / tau)))
-    return float(int(np.ceil(job.iters / phi)))
-
-
-class _State:
-    """Per-attempt scheduler state: busy clocks U, real clocks R, and the
-    snapshot of placed jobs used for the rho_hat(y^k) refinement."""
-
-    def __init__(self, cluster: Cluster):
-        self.cluster = cluster
-        self.U = np.zeros(cluster.num_gpus)    # busy-time clock (Eq. 15/16)
-        self.R = np.zeros(cluster.num_gpus)    # real-time clock (gang start)
-        self.assignment: list[tuple[int, np.ndarray]] = []
-        self.placed_jobs: list[Job] = []
-        self.placed_y: list[np.ndarray] = []   # per-server GPU counts
-        self.est_start: dict[int, float] = {}
-        self.est_finish: dict[int, float] = {}
-
-    def _y_of(self, gpus: np.ndarray) -> np.ndarray:
-        y = np.zeros(self.cluster.num_servers, dtype=np.int64)
-        np.add.at(y, self.cluster.gpu_server[gpus], 1)
-        return y
-
-    def refined_rho(self, job: Job, gpus: np.ndarray) -> tuple[float, float]:
-        """rho_hat_j(y^k): Eq. (8) against placed jobs overlapping the
-        estimated gang start.  Returns (rho_hat, est_start)."""
-        start = float(self.R[gpus].max()) if len(gpus) else 0.0
-        y_j = self._y_of(gpus)
-        overlap_jobs, overlap_y = [], []
-        for jb, y in zip(self.placed_jobs, self.placed_y):
-            if self.est_finish[jb.jid] > start + 1e-9:
-                overlap_jobs.append(jb)
-                overlap_y.append(y)
-        Y = np.vstack(overlap_y + [y_j]) if overlap_y else y_j[None, :]
-        model = evaluate(self.cluster, overlap_jobs + [job], Y)
-        tau = float(model.tau[-1])
-        phi = max(1, int(np.floor(1.0 / tau)))
-        return float(int(np.ceil(job.iters / phi))), start
-
-    def commit(self, job: Job, gpus: np.ndarray, rho: float, start: float,
-               u: float) -> None:
-        self.U[gpus] += rho / u
-        self.R[gpus] = start + rho
-        self.assignment.append((job.jid, gpus))
-        self.placed_jobs.append(job)
-        self.placed_y.append(self._y_of(gpus))
-        self.est_start[job.jid] = start
-        self.est_finish[job.jid] = start + rho
-
-
-def _try_place(state: _State, job: Job, picker, rho_nom: float, u: float,
-               theta: float, tries: int = 4) -> bool:
-    """Pick GPUs with the nominal-estimate filter, refine rho_hat(y^k) for
-    the chosen set, and re-check the Eq. (16) budget.  If the refined charge
-    overflows theta on some GPU, re-filter with the refined estimate (which
-    excludes the marginal GPUs) and retry -- mirroring the paper's
-    "re-evaluate after the schedule is known" loop of Fig. 3."""
-    rho_try = rho_nom
-    for _ in range(tries):
-        gpus = picker(state, job, rho_try, u, theta)
-        if gpus is None:
-            return False
-        gpus = np.asarray(gpus)
-        rho, start = state.refined_rho(job, gpus)
-        if np.all(state.U[gpus] + rho / u <= theta + 1e-9):
-            state.commit(job, gpus, rho, start, u)
-            return True
-        rho_try = max(rho, rho_try * 1.05)
-    return False
-
-
-def fa_ffp(state: _State, job: Job, rho_nom: float, u: float, theta: float
-           ) -> np.ndarray | None:
+def fa_ffp(state: PlacementState, job: Job, rho_nom: float, u: float,
+           theta: float) -> np.ndarray | None:
     """Algorithm 2: Fragment-Aware First-Fit Packing (small jobs).
 
     Feasible pool = GPUs whose busy time stays within theta after the job
@@ -170,8 +80,8 @@ def fa_ffp(state: _State, job: Job, rho_nom: float, u: float, theta: float
     return order[: job.num_gpus]
 
 
-def lbsgf(state: _State, job: Job, rho_nom: float, u: float, theta: float
-          ) -> np.ndarray | None:
+def lbsgf(state: PlacementState, job: Job, rho_nom: float, u: float,
+          theta: float) -> np.ndarray | None:
     """Algorithm 3: Least-Busy-Server-GPU-First (large jobs).
 
     Sort servers by average GPU busy time; take the top-m least-busy servers
@@ -203,36 +113,38 @@ def lbsgf(state: _State, job: Job, rho_nom: float, u: float, theta: float
     return pool[order][: job.num_gpus]
 
 
-def _attempt(cluster: Cluster, jobs_sorted: list[Job], rho_noms: dict[int, float],
-             u: float, theta: float, kappa: int) -> _State | None:
+def _attempt(cluster: Cluster, jobs_sorted: list[Job],
+             rho_noms: dict[int, float], u: float, theta: float,
+             kappa: int) -> PlacementState | None:
     """One (theta, kappa) pass of Alg. 1 lines 8-16."""
-    state = _State(cluster)
+    state = PlacementState(cluster)
     for job in jobs_sorted:
         picker = fa_ffp if job.num_gpus <= kappa else lbsgf
-        if not _try_place(state, job, picker, rho_noms[job.jid], u, theta):
+        if not try_place(state, job, picker, rho_noms[job.jid], u, theta):
             return None
     return state
 
 
-def _finalize(state: _State, n_jobs: int, theta: float, kappa: int | None,
-              policy: str) -> Schedule:
-    est_start = np.full(n_jobs, -1.0)
-    est_finish = np.full(n_jobs, -1.0)
-    for j, s in state.est_start.items():
-        est_start[j] = s
-        est_finish[j] = state.est_finish[j]
-    return Schedule(assignment=state.assignment, est_start=est_start,
-                    est_finish=est_finish,
-                    est_makespan=float(est_finish.max(initial=0.0)),
-                    theta=theta, kappa=kappa, policy=policy,
-                    _max_busy=float(state.U.max(initial=0.0)))
+@register_policy("sjf-bco")
+def sjf_bco_policy(request: ScheduleRequest) -> ScheduleResult:
+    """Algorithm 1 (batch) / finish-minimising epoch scheduler (online).
 
+    ``request.params``:
+      * ``kappas`` -- candidate small/large thresholds to sweep (batch
+        only); defaults to the distinct job sizes, which is equivalent to
+        the paper's 1..max_j G_j sweep.
+    """
+    cluster, u = request.cluster, request.u
+    if not request.is_batch:
+        def choose(state: PlacementState, job: Job, theta: float) -> bool:
+            return pick_best_finish(state, job, [fa_ffp, lbsgf],
+                                    nominal_rho(cluster, job), u, theta)
+        return schedule_arrivals(request, choose, "SJF-BCO")
 
-def sjf_bco(cluster: Cluster, jobs: list[Job], horizon: int,
-            u: float = 1.5, kappas: list[int] | None = None) -> Schedule:
-    """Algorithm 1.  ``horizon`` is T, the bisection upper bound for theta_u."""
+    jobs = request.jobs
     jobs_sorted = sorted(jobs, key=lambda j: (j.num_gpus, j.jid))   # line 3
     rho_noms = {j.jid: nominal_rho(cluster, j) for j in jobs}
+    kappas = request.params.get("kappas")
     if kappas is None:
         # Only kappa values at distinct job sizes change the FA-FFP/LBSGF
         # split; sweeping them is equivalent to the paper's 1..max_j G_j.
@@ -240,25 +152,26 @@ def sjf_bco(cluster: Cluster, jobs: list[Job], horizon: int,
         if 1 not in kappas:
             kappas.insert(0, 1)
 
-    best: Schedule | None = None
-    left, right = 1.0, float(horizon)                              # line 4
-    while left <= right:                                           # line 5
-        theta = 0.5 * (left + right)                               # line 6
-        best_theta: Schedule | None = None
+    def attempt(theta: float) -> ScheduleResult | None:
+        best_theta: ScheduleResult | None = None
         for kappa in kappas:                                       # line 7
             state = _attempt(cluster, jobs_sorted, rho_noms, u, theta, kappa)
             if state is None:                                      # line 14
                 continue
-            cand = _finalize(state, len(jobs), theta, kappa, "SJF-BCO")
+            cand = finalize(state, len(jobs), theta, kappa, "SJF-BCO")
             if best_theta is None or cand.est_makespan < best_theta.est_makespan:
                 best_theta = cand                                  # lines 17-18
-        if best_theta is not None:                                 # lines 19-21
-            if best is None or best_theta.est_makespan <= best.est_makespan:
-                best = best_theta
-            right = theta - 1.0
-        else:
-            left = theta + 1.0                                     # line 23
-    if best is None:
-        raise RuntimeError("SJF-BCO: no feasible schedule within horizon; "
-                           "increase T")
-    return best
+        return best_theta
+
+    return bisect_theta(attempt, request.horizon, "SJF-BCO")
+
+
+def sjf_bco(cluster: Cluster, jobs: list[Job], horizon: int,
+            u: float = 1.5, kappas: list[int] | None = None) -> ScheduleResult:
+    """Deprecated shim: call ``get_policy("sjf-bco")(ScheduleRequest(...))``."""
+    warnings.warn("sjf_bco(cluster, jobs, ...) is deprecated; use "
+                  "get_policy('sjf-bco')(ScheduleRequest(...))",
+                  DeprecationWarning, stacklevel=2)
+    params = {} if kappas is None else {"kappas": kappas}
+    return sjf_bco_policy(ScheduleRequest(cluster=cluster, jobs=list(jobs),
+                                          horizon=horizon, u=u, params=params))

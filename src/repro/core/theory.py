@@ -16,10 +16,10 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.api import ScheduleResult, rho_hat
 from repro.core.cluster import Cluster
 from repro.core.jobs import Job
 from repro.core.simulator import SimResult
-from repro.core.sjf_bco import Schedule, rho_hat
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,7 +59,7 @@ def empirical_brackets(cluster: Cluster, jobs: list[Job], sim: SimResult
     return float(min(ls)), float(max(us))
 
 
-def report(cluster: Cluster, jobs: list[Job], schedule: Schedule,
+def report(cluster: Cluster, jobs: list[Job], schedule: ScheduleResult,
            sim: SimResult, varphi: float | None = None) -> TheoryReport:
     n_g = max(j.num_gpus for j in jobs)
     l, u = empirical_brackets(cluster, jobs, sim)
@@ -75,7 +75,7 @@ def report(cluster: Cluster, jobs: list[Job], schedule: Schedule,
     # A makespan lower bound for *any* schedule: total work on the busiest
     # possible GPU cannot be smaller than total_gpu_work / N, and no job can
     # finish faster than its contention-free execution time.
-    from repro.core.sjf_bco import nominal_rho
+    from repro.core.api import nominal_rho
     total_work = sum(nominal_rho(cluster, j) * j.num_gpus for j in jobs)
     lb = max(total_work / cluster.num_gpus,
              max(nominal_rho(cluster, j) for j in jobs))

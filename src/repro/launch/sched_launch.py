@@ -29,7 +29,8 @@ def main() -> None:
     ap.add_argument("--servers", type=int, default=2)
     ap.add_argument("--jobs", type=int, default=6)
     ap.add_argument("--policy", default="sjf-bco",
-                    choices=("sjf-bco", "ff", "ls", "rand"))
+                    choices=("sjf-bco", "ff", "ls", "rand", "reserved",
+                             "sjf-bco-adaptive"))
     ap.add_argument("--steps", type=int, default=4,
                     help="real train steps per job (F_j for the simulator "
                          "is scaled from this)")
@@ -44,10 +45,13 @@ def main() -> None:
     import numpy as np
     from jax.sharding import Mesh
 
+    from repro.core import Cluster, Job, ScheduleRequest, get_policy, simulate
+    try:
+        from repro.dist.steps import make_rar_train_step
+    except ImportError:
+        make_rar_train_step = None
     from repro.configs import ARCHS, get_config
-    from repro.core import (Cluster, Job, baselines, simulate, sjf_bco)
     from repro.data import DataConfig, make_batch
-    from repro.dist.steps import make_rar_train_step
     from repro.models import build_model
     from repro.models.config import InputShape
     from repro.optim import adamw
@@ -74,14 +78,22 @@ def main() -> None:
         job_archs.append(arch)
 
     # --- schedule -----------------------------------------------------------
-    policy = {"sjf-bco": sjf_bco, "ff": baselines.first_fit,
-              "ls": baselines.list_scheduling,
-              "rand": baselines.random_policy}[args.policy]
-    sched = policy(cluster, jobs, horizon=100000)
+    sched = get_policy(args.policy)(
+        ScheduleRequest(cluster=cluster, jobs=jobs, horizon=100000))
     sim = simulate(cluster, jobs, sched.assignment)
     print(f"[sched] policy={args.policy}: simulated makespan "
           f"{sim.makespan:.0f} slots, avg JCT {sim.avg_jct:.0f}, "
           f"peak contention {sim.peak_contention}")
+    if make_rar_train_step is None:
+        for j, gpu_ids in sched.assignment:
+            srvs = sorted({int(g) // per_srv for g in gpu_ids})
+            print(f"[sched] job {j:2d} ({job_archs[j]:18s} "
+                  f"w={len(gpu_ids)}) -> devices {list(map(int, gpu_ids))} "
+                  f"(servers {srvs}) [start slot {sim.start[j]}, "
+                  f"finish {sim.finish[j]}]")
+        print("[sched] repro.dist training substrate not present; "
+              "placements shown but not executed")
+        return
 
     # --- execute each job on its assigned device slice ---------------------
     devices = np.asarray(jax.devices())

@@ -1,0 +1,145 @@
+"""Tests for the unified scheduling API: registry, one-signature policies,
+batch == zero-arrival equivalence, and the declarative Scenario layer."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (ClusterSpec, Scenario, ScheduleRequest,
+                        ScheduleResult, SchedulingPolicy, WorkloadSpec,
+                        get_policy, list_policies, philly_cluster,
+                        philly_workload, register_policy, run_scenario,
+                        simulate)
+
+BUILTIN = {"sjf-bco", "ff", "ls", "rand", "reserved", "sjf-bco-adaptive"}
+
+
+def _small_instance(n_servers=6, n_jobs=24, seed=1):
+    cluster = philly_cluster(n_servers, seed=seed)
+    jobs = philly_workload(seed=seed)[:n_jobs]
+    jobs = [dataclasses.replace(j, jid=i) for i, j in enumerate(jobs)]
+    return cluster, jobs
+
+
+class TestRegistry:
+    def test_builtins_registered(self):
+        assert BUILTIN <= set(list_policies())
+
+    def test_get_policy_round_trip(self):
+        for name in BUILTIN:
+            policy = get_policy(name)
+            assert callable(policy)
+            assert isinstance(policy, SchedulingPolicy)
+
+    def test_unknown_policy_raises_with_listing(self):
+        with pytest.raises(KeyError, match="sjf-bco"):
+            get_policy("no-such-policy")
+
+    def test_case_insensitive_lookup(self):
+        assert get_policy("SJF-BCO") is get_policy("sjf-bco")
+
+    def test_custom_policy_registration(self):
+        @register_policy("test-only-greedy")
+        def greedy(request: ScheduleRequest) -> ScheduleResult:
+            return get_policy("ls")(request)
+
+        try:
+            assert "test-only-greedy" in list_policies()
+            cluster, jobs = _small_instance()
+            sched = get_policy("test-only-greedy")(
+                ScheduleRequest(cluster=cluster, jobs=jobs, horizon=1200))
+            assert len(sched.assignment) == len(jobs)
+        finally:
+            from repro.core import api
+            api._REGISTRY.pop("test-only-greedy", None)
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            @register_policy("sjf-bco")
+            def imposter(request):                     # pragma: no cover
+                raise AssertionError
+
+
+class TestUnifiedSignature:
+    def test_every_policy_runs_through_one_signature(self):
+        cluster, jobs = _small_instance()
+        request = ScheduleRequest(cluster=cluster, jobs=jobs, horizon=1200)
+        for name in BUILTIN:
+            sched = get_policy(name)(request)
+            assert isinstance(sched, ScheduleResult), name
+            assert {j for j, _ in sched.assignment} == set(range(len(jobs))), name
+            sim = simulate(cluster, jobs, sched.assignment)
+            assert sim.completed == len(jobs), name
+
+    def test_request_validates_arrivals_shape(self):
+        cluster, jobs = _small_instance()
+        with pytest.raises(ValueError, match="arrivals"):
+            ScheduleRequest(cluster=cluster, jobs=jobs,
+                            arrivals=np.zeros(3, dtype=np.int64))
+
+    def test_batch_equals_all_zero_arrivals(self):
+        """Batch scheduling is the arrivals=None special case: an all-zero
+        arrival vector must produce the identical schedule."""
+        cluster, jobs = _small_instance()
+        zeros = np.zeros(len(jobs), dtype=np.int64)
+        for name in ("sjf-bco", "ff", "ls", "rand"):
+            batch = get_policy(name)(
+                ScheduleRequest(cluster=cluster, jobs=jobs, horizon=1200))
+            online = get_policy(name)(
+                ScheduleRequest(cluster=cluster, jobs=jobs, arrivals=zeros,
+                                horizon=1200))
+            assert len(batch.assignment) == len(online.assignment), name
+            for (ja, ga), (jb, gb) in zip(batch.assignment, online.assignment):
+                assert ja == jb, name
+                assert np.array_equal(ga, gb), name
+
+    def test_params_reach_the_policy(self):
+        cluster, jobs = _small_instance()
+        fixed = get_policy("sjf-bco")(
+            ScheduleRequest(cluster=cluster, jobs=jobs, horizon=1200,
+                            params={"kappas": [4]}))
+        assert fixed.kappa == 4
+
+
+class TestScenario:
+    def test_run_scenario_smoke_sjf_beats_rand(self):
+        """Fig. 4 ranking on a small Philly cluster: SJF-BCO's simulated
+        makespan is no worse than RAND's."""
+        base = dict(cluster=ClusterSpec(num_servers=6, seed=1),
+                    workload=WorkloadSpec(num_jobs=24, seed=1),
+                    horizon=1200)
+        sjf = run_scenario(Scenario(policy="sjf-bco", **base))
+        rand = run_scenario(Scenario(policy="rand", **base))
+        assert sjf.sim.completed == 24
+        assert sjf.makespan <= rand.makespan
+        assert sjf.contention.peak <= rand.contention.peak
+
+    def test_scenario_is_reproducible(self):
+        sc = Scenario(cluster=ClusterSpec(num_servers=4, seed=2),
+                      workload=WorkloadSpec(num_jobs=12, seed=2),
+                      policy="rand", policy_params=(("seed", 7),),
+                      horizon=2400)
+        a, b = run_scenario(sc), run_scenario(sc)
+        assert a.makespan == b.makespan
+        assert np.array_equal(a.sim.finish, b.sim.finish)
+
+    def test_online_scenario(self):
+        from repro.core import ArrivalSpec
+        rep = run_scenario(Scenario(
+            cluster=ClusterSpec(num_servers=6, seed=1),
+            workload=WorkloadSpec(num_jobs=24, seed=1),
+            arrivals=ArrivalSpec(kind="poisson", rate=0.5, seed=1),
+            policy="sjf-bco", horizon=10**6))
+        assert rep.sim.completed == 24
+        arrivals = rep.scenario.arrivals.build(
+            rep.scenario.workload.build())
+        assert np.all(rep.sim.start >= arrivals)
+
+    def test_contention_stats_consistent(self):
+        rep = run_scenario(Scenario(
+            cluster=ClusterSpec(num_servers=4, seed=3),
+            workload=WorkloadSpec(num_jobs=16, seed=3),
+            policy="ls", horizon=2400))
+        assert rep.contention.peak == rep.sim.peak_contention
+        assert 0.0 <= rep.contention.contended_frac <= 1.0
+        assert rep.contention.mean <= rep.contention.peak

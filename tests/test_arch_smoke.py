@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytest.importorskip("repro.dist", reason="distributed substrate not present")
 from repro.configs import ARCHS, get_config
 from repro.data import make_batch
 from repro.dist.steps import make_serve_step, make_train_step

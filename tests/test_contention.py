@@ -1,6 +1,8 @@
 """Unit tests for the Eq. (6)-(8) analytical model (paper §4.1)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (Cluster, Job, contention_level, degradation, evaluate,

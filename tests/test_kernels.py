@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.gpu   # Pallas kernels; deselected on CPU CI runners
+
 from repro.kernels import ref
 from repro.kernels import ops
 from repro.kernels.flash_attention import flash_attention as fa_kernel

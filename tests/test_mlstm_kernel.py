@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.gpu   # Pallas kernels; deselected on CPU CI runners
+
 from repro.kernels import ref
 from repro.kernels.mlstm import mlstm_parallel
 

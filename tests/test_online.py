@@ -1,12 +1,14 @@
-"""Online (dynamic-arrival) scheduling extension + flash-kernel model path."""
+"""Online (dynamic-arrival) scheduling through the unified API + the
+flash-kernel model path."""
 import dataclasses
 
 import jax
 import numpy as np
 import pytest
 
-from repro.core import philly_cluster, philly_workload, simulate, sjf_bco
-from repro.core.online import poisson_arrivals, run_online, schedule_online
+from repro.core import (ScheduleRequest, get_policy, philly_cluster,
+                        philly_workload, simulate)
+from repro.core.online import poisson_arrivals, run_online, stream_request
 
 
 class TestOnlineScheduling:
@@ -27,8 +29,9 @@ class TestOnlineScheduling:
         (it lacks the theta bisection + SJF sort)."""
         cluster = philly_cluster(20, seed=1)
         jobs = philly_workload(seed=1)
+        request = ScheduleRequest(cluster=cluster, jobs=jobs, horizon=1200)
         offline = simulate(cluster, jobs,
-                           sjf_bco(cluster, jobs, 1200).assignment).makespan
+                           get_policy("sjf-bco")(request).assignment).makespan
         stream = poisson_arrivals(jobs, rate=50.0, seed=1)
         _, sim = run_online(cluster, stream)
         assert sim.makespan < 2.5 * offline
@@ -48,10 +51,37 @@ class TestOnlineScheduling:
         cluster = philly_cluster(4, seed=2)
         jobs = philly_workload(seed=2)[:20]
         stream = poisson_arrivals(jobs, rate=0.5, seed=2)
-        asg = schedule_online(cluster, stream)
+        request = stream_request(cluster, stream)
+        asg = get_policy("sjf-bco")(request).assignment
         for j, gpus in asg:
             assert len(np.unique(gpus)) == len(gpus)
             assert np.all(gpus < cluster.num_gpus)
+
+    def test_every_policy_handles_arrivals(self):
+        """The unified code path: each registered policy accepts an
+        arrival-carrying request through the same signature."""
+        from repro.core import list_policies
+        cluster = philly_cluster(6, seed=3)
+        jobs = philly_workload(seed=3)[:24]
+        jobs = [dataclasses.replace(j, jid=i) for i, j in enumerate(jobs)]
+        arrivals = np.arange(len(jobs), dtype=np.int64) * 2
+        request = ScheduleRequest(cluster=cluster, jobs=jobs,
+                                  arrivals=arrivals, horizon=10**6)
+        for name in list_policies():
+            sched = get_policy(name)(request)
+            sim = simulate(cluster, jobs, sched.assignment, arrivals=arrivals)
+            assert sim.completed == len(jobs), name
+            assert np.all(sim.start >= arrivals), name
+
+    def test_schedule_online_shim_warns(self):
+        cluster = philly_cluster(4, seed=2)
+        jobs = philly_workload(seed=2)[:10]
+        jobs = [dataclasses.replace(j, jid=i) for i, j in enumerate(jobs)]
+        stream = poisson_arrivals(jobs, rate=0.5, seed=2)
+        from repro.core.online import schedule_online
+        with pytest.deprecated_call():
+            asg = schedule_online(cluster, stream)
+        assert len(asg) == len(jobs)
 
 
 class TestFlashKernelModelPath:

@@ -12,6 +12,7 @@ import textwrap
 import numpy as np
 import pytest
 
+pytest.importorskip("repro.dist", reason="distributed substrate not present")
 from repro.dist.rar import exchange_bytes_per_worker
 
 

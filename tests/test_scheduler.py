@@ -1,9 +1,10 @@
-"""Behaviour tests for SJF-BCO (Algs. 1-3) and the §7 baselines."""
+"""Behaviour tests for SJF-BCO (Algs. 1-3) and the §7 baselines, driven
+through the unified scheduling API (registry + ScheduleRequest)."""
 import numpy as np
 import pytest
 
-from repro.core import (Cluster, Job, first_fit, list_scheduling, philly_cluster,
-                        philly_workload, random_policy, simulate, sjf_bco)
+from repro.core import (Cluster, Job, ScheduleRequest, get_policy,
+                        philly_cluster, philly_workload, simulate)
 
 
 @pytest.fixture(scope="module")
@@ -14,9 +15,14 @@ def philly():
 
 
 @pytest.fixture(scope="module")
-def sjf_schedule(philly):
+def philly_request(philly):
     cluster, jobs = philly
-    return sjf_bco(cluster, jobs, horizon=1200)
+    return ScheduleRequest(cluster=cluster, jobs=jobs, horizon=1200)
+
+
+@pytest.fixture(scope="module")
+def sjf_schedule(philly_request):
+    return get_policy("sjf-bco")(philly_request)
 
 
 def _check_valid(cluster, jobs, schedule):
@@ -35,10 +41,10 @@ class TestScheduleValidity:
         cluster, jobs = philly
         _check_valid(cluster, jobs, sjf_schedule)
 
-    def test_baselines_schedule_every_job_once(self, philly):
+    def test_baselines_schedule_every_job_once(self, philly, philly_request):
         cluster, jobs = philly
-        for fn in (first_fit, list_scheduling, random_policy):
-            _check_valid(cluster, jobs, fn(cluster, jobs, 1200))
+        for name in ("ff", "ls", "rand"):
+            _check_valid(cluster, jobs, get_policy(name)(philly_request))
 
     def test_server_capacity_never_exceeded(self, philly, sjf_schedule):
         # Each GPU hosts one worker at a time (FIFO queues) so per-server
@@ -49,6 +55,13 @@ class TestScheduleValidity:
         assert Y.shape[1] == cluster.num_servers
         assert (Y.sum(axis=1) == [jobs[j].num_gpus
                                   for j, _ in sjf_schedule.assignment]).all()
+
+    def test_legacy_shims_still_work(self, philly):
+        cluster, jobs = philly
+        from repro.core import sjf_bco
+        with pytest.deprecated_call():
+            sched = sjf_bco(cluster, jobs[:10], horizon=1200)
+        _check_valid(cluster, jobs[:10], sched)
 
 
 class TestSimulator:
@@ -99,6 +112,27 @@ class TestSimulator:
         b = simulate(cluster, jobs, sjf_schedule.assignment)
         assert a.makespan == b.makespan
         assert np.array_equal(a.finish, b.finish)
+        assert np.array_equal(a.start, b.start)
+
+    def test_horizon_hit_charges_partial_busy_slots(self):
+        # A job cut off by the horizon still occupied its GPUs: utilization
+        # must reflect the partial window, not report ~0.
+        cluster = Cluster(capacities=(4,))
+        job = Job(jid=0, num_gpus=4, iters=10**6, grad_size=1e-3, batch=32,
+                  dt_fwd=3e-4, dt_bwd=8e-3)
+        sim = simulate(cluster, [job], [(0, np.arange(4))], horizon=50)
+        assert sim.horizon_hit
+        assert sim.completed == 0
+        assert sim.busy_gpu_slots > 0
+        assert sim.utilization == pytest.approx(1.0)
+
+    def test_events_cover_the_run(self, philly, sjf_schedule):
+        cluster, jobs = philly
+        sim = simulate(cluster, jobs, sjf_schedule.assignment)
+        assert sim.events, "piecewise-constant windows recorded"
+        assert max(e.contention for e in sim.events) == sim.peak_contention
+        assert sim.events[-1].t + sim.events[-1].dt == sim.makespan
+        assert sim.mean_contention <= sim.peak_contention
 
 
 class TestPaperClaims:
@@ -108,20 +142,21 @@ class TestPaperClaims:
     def test_sjf_bco_beats_ff_and_rand(self, seed):
         cluster = philly_cluster(20, seed=seed)
         jobs = philly_workload(seed=seed)
+        request = ScheduleRequest(cluster=cluster, jobs=jobs, horizon=1200)
         mk = {}
-        for name, fn in [("sjf", sjf_bco), ("ff", first_fit),
-                         ("rand", random_policy)]:
-            sched = fn(cluster, jobs, 1200)
+        for name in ("sjf-bco", "ff", "rand"):
+            sched = get_policy(name)(request)
             mk[name] = simulate(cluster, jobs, sched.assignment).makespan
-        assert mk["sjf"] < mk["ff"]
-        assert mk["sjf"] < mk["rand"]
+        assert mk["sjf-bco"] < mk["ff"]
+        assert mk["sjf-bco"] < mk["rand"]
 
     @pytest.mark.parametrize("seed", [1, 2, 3])
     def test_sjf_bco_beats_or_matches_ls(self, seed):
         cluster = philly_cluster(20, seed=seed)
         jobs = philly_workload(seed=seed)
+        request = ScheduleRequest(cluster=cluster, jobs=jobs, horizon=1200)
         sjf = simulate(cluster, jobs,
-                       sjf_bco(cluster, jobs, 1200).assignment).makespan
+                       get_policy("sjf-bco")(request).assignment).makespan
         ls = simulate(cluster, jobs,
-                      list_scheduling(cluster, jobs, 1200).assignment).makespan
+                      get_policy("ls")(request).assignment).makespan
         assert sjf <= ls

@@ -6,6 +6,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+pytest.importorskip("repro.dist", reason="distributed substrate not present")
 from hypothesis import given, settings, strategies as st
 
 from repro import ckpt

@@ -1,9 +1,16 @@
 """Property-based checks of the §6 guarantees (Lemmas 2-4, Theorems 5-6)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (Cluster, Job, philly_cluster, philly_workload, report,
-                        simulate, sjf_bco)
+from repro.core import (Cluster, Job, ScheduleRequest, get_policy,
+                        philly_cluster, philly_workload, report, simulate)
+
+def _sjf(cluster, jobs, horizon):
+    return get_policy("sjf-bco")(
+        ScheduleRequest(cluster=cluster, jobs=jobs, horizon=horizon))
 
 job_st = st.builds(
     Job,
@@ -39,7 +46,7 @@ def test_theorem5_chain_holds(instance):
     makespan respects the certified n_g * varphi * (u/l) chain vs the
     work-conservation lower bound."""
     cluster, jobs = instance
-    sched = sjf_bco(cluster, jobs, horizon=20000)
+    sched = _sjf(cluster, jobs, 20000)
     sim = simulate(cluster, jobs, sched.assignment)
     assert sim.completed == len(jobs)
     rep = report(cluster, jobs, sched, sim)
@@ -53,7 +60,7 @@ def test_theorem5_chain_holds(instance):
 def test_lemma2_busy_time_within_theta(instance):
     """Lemma 2: no GPU's charged busy time exceeds the returned theta."""
     cluster, jobs = instance
-    sched = sjf_bco(cluster, jobs, horizon=20000)
+    sched = _sjf(cluster, jobs, 20000)
     assert sched.max_busy_time <= sched.theta + 1e-6
 
 
@@ -64,7 +71,7 @@ def test_lemma3_makespan_bound(instance):
     *actual* execution time (the busy clocks use estimates, so we bound by
     the simulated per-job durations placed on each GPU)."""
     cluster, jobs = instance
-    sched = sjf_bco(cluster, jobs, horizon=20000)
+    sched = _sjf(cluster, jobs, 20000)
     sim = simulate(cluster, jobs, sched.assignment)
     busy = np.zeros(cluster.num_gpus)
     for j, gpus in sched.assignment:
@@ -80,9 +87,9 @@ def test_theorem6_runtime_scales_with_log_horizon():
     cluster = philly_cluster(10, seed=0)
     jobs = philly_workload(seed=0)[:60]
     t0 = time.time()
-    sjf_bco(cluster, jobs, horizon=1200)
+    _sjf(cluster, jobs, 1200)
     t1 = time.time()
-    sjf_bco(cluster, jobs, horizon=2400)
+    _sjf(cluster, jobs, 2400)
     t2 = time.time()
     assert (t2 - t1) < 4 * max(t1 - t0, 0.05)
 
@@ -92,9 +99,9 @@ def test_iterations_conserved():
     finishing earlier than its contention-free optimum is impossible."""
     cluster = philly_cluster(8, seed=3)
     jobs = philly_workload(seed=3)[:40]
-    sched = sjf_bco(cluster, jobs, horizon=20000)
+    sched = _sjf(cluster, jobs, 20000)
     sim = simulate(cluster, jobs, sched.assignment)
-    from repro.core.sjf_bco import nominal_rho
+    from repro.core import nominal_rho
     for j in jobs:
         dur = sim.finish[j.jid] - sim.start[j.jid]
         assert dur >= nominal_rho(cluster, j) - 1
@@ -112,12 +119,11 @@ def test_contention_advantage_grows_with_xi1():
 def test_adaptive_variant_trades_makespan_for_jct():
     """SJF-BCO+ (greedy per-job pack-or-spread) must improve avg JCT; the
     paper's kappa-level control stays better on makespan."""
-    from repro.core import philly_cluster, philly_workload, simulate, sjf_bco
-    from repro.core.extensions import sjf_bco_adaptive
     cluster = philly_cluster(20, seed=1)
     jobs = philly_workload(seed=1)
-    base = simulate(cluster, jobs, sjf_bco(cluster, jobs, 1200).assignment)
+    request = ScheduleRequest(cluster=cluster, jobs=jobs, horizon=1200)
+    base = simulate(cluster, jobs, get_policy("sjf-bco")(request).assignment)
     plus = simulate(cluster, jobs,
-                    sjf_bco_adaptive(cluster, jobs, 1200).assignment)
+                    get_policy("sjf-bco-adaptive")(request).assignment)
     assert plus.avg_jct < base.avg_jct
     assert base.makespan <= plus.makespan
