@@ -1,0 +1,165 @@
+"""Microbenchmark for the batched/incremental contention-model engines.
+
+Two measurements per job count |J| (16 / 64 / 256 by default):
+
+  1. *Scheduler pass*: SJF-BCO (Alg. 1, theta bisection + kappa sweep) plus
+     the slot simulation, once per engine.  The "reference" engine is the
+     original per-candidate ``evaluate()`` loop; "incremental" replaces
+     every full [J, S] model pass with an O(S)-ish probe/row-update;
+     "batched" scores multi-candidate decisions via ``evaluate_many``.
+     Schedules are asserted identical across engines (they are bit-equal
+     by construction; see tests/test_batched_contention.py).
+  2. *Kernel microbench*: ``evaluate_many`` on a [C, J, S] stack vs a
+     Python loop of C ``evaluate()`` calls over the same placements.
+
+Emits ``BENCH_contention.json`` -- the first entry of the repo's perf
+trajectory -- with wall-clock numbers and the model-evaluation counters
+(the acceptance bar: >= 5x fewer full-model evaluations at |J| = 256).
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/bench_contention.py [--quick] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import (ScheduleRequest, eval_counts, evaluate,
+                        evaluate_many, get_policy, philly_cluster,
+                        philly_workload, reset_eval_counts, simulate)
+from repro.core.jobs import PHILLY_MIX
+
+ENGINES = ("reference", "incremental", "batched")
+
+
+def _mix_for(total: int) -> tuple[tuple[int, int], ...]:
+    """Scale the §7 Philly mix (160 jobs) to ``total`` jobs, preserving the
+    job-size shares; the remainder lands on the largest fractional parts."""
+    base = sum(c for _, c in PHILLY_MIX)
+    exact = [(g, total * c / base) for g, c in PHILLY_MIX]
+    counts = [int(x) for _, x in exact]
+    order = sorted(range(len(exact)),
+                   key=lambda i: exact[i][1] - counts[i], reverse=True)
+    for i in order[: total - sum(counts)]:
+        counts[i] += 1
+    return tuple((g, c) for (g, _), c in zip(exact, counts) if c > 0)
+
+
+def bench_scheduler(n_jobs: int, seed: int = 1) -> dict:
+    cluster = philly_cluster(20, seed=seed)
+    jobs = philly_workload(seed=seed, mix=_mix_for(n_jobs))
+    horizon = max(1200, 12 * n_jobs)
+    row: dict = {"J": n_jobs, "engines": {}}
+    schedules = {}
+    for engine in ENGINES:
+        request = ScheduleRequest(cluster=cluster, jobs=jobs,
+                                  horizon=horizon,
+                                  params={"engine": engine})
+        reset_eval_counts()
+        t0 = time.perf_counter()
+        sched = get_policy("sjf-bco")(request)
+        t_sched = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        sim = simulate(cluster, jobs, sched.assignment, engine=engine)
+        t_sim = time.perf_counter() - t0
+        counts = eval_counts()
+        schedules[engine] = sched
+        row["engines"][engine] = {
+            "schedule_s": round(t_sched, 4),
+            "simulate_s": round(t_sim, 4),
+            "est_makespan": sched.est_makespan,
+            "sim_makespan": sim.makespan,
+            **counts,
+        }
+    ref = schedules["reference"]
+    for engine in ENGINES[1:]:
+        other = schedules[engine]
+        same = (other.est_makespan == ref.est_makespan
+                and len(other.assignment) == len(ref.assignment)
+                and all(j1 == j2 and np.array_equal(g1, g2)
+                        for (j1, g1), (j2, g2)
+                        in zip(ref.assignment, other.assignment)))
+        # Hard failure, not just a report field: CI's bench-smoke step
+        # relies on this to catch engine divergence.
+        assert same, f"{engine} schedule diverged from reference at J={n_jobs}"
+        row["engines"][engine]["schedule_identical_to_reference"] = same
+    ref_e = row["engines"]["reference"]
+    inc_e = row["engines"]["incremental"]
+    # "Full-model evaluations": complete [J, S] passes.  The incremental
+    # engine replaces them with O(S) probes / row updates; evaluate_many
+    # calls count once each (one fused pass).
+    ref_full = ref_e["full"] + ref_e["batched_calls"]
+    inc_full = inc_e["full"] + inc_e["batched_calls"]
+    row["full_eval_reduction"] = round(ref_full / max(1, inc_full), 1)
+    row["wall_speedup"] = round(
+        (ref_e["schedule_s"] + ref_e["simulate_s"])
+        / max(1e-9, inc_e["schedule_s"] + inc_e["simulate_s"]), 2)
+    return row
+
+
+def bench_evaluate_many(n_jobs: int, n_cands: int = 64, seed: int = 0,
+                        repeats: int = 5) -> dict:
+    """evaluate_many on [C, J, S] vs a loop of C evaluate() calls."""
+    rng = np.random.default_rng(seed)
+    cluster = philly_cluster(20, seed=seed)
+    jobs = philly_workload(seed=seed, mix=_mix_for(n_jobs))
+    S = cluster.num_servers
+    stack = np.zeros((n_cands, len(jobs), S), dtype=np.int64)
+    for c in range(n_cands):
+        for i, job in enumerate(jobs):
+            for _ in range(job.num_gpus):
+                stack[c, i, rng.integers(S)] += 1
+    t_loop = t_many = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for c in range(n_cands):
+            evaluate(cluster, jobs, stack[c])
+        t_loop = min(t_loop, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        many = evaluate_many(cluster, jobs, stack)
+        t_many = min(t_many, time.perf_counter() - t0)
+    # sanity: the batch result matches the loop on the last candidate
+    assert np.array_equal(many.tau[-1],
+                          evaluate(cluster, jobs, stack[-1]).tau)
+    return {"J": n_jobs, "C": n_cands,
+            "loop_s": round(t_loop, 4), "batched_s": round(t_many, 4),
+            "speedup": round(t_loop / max(1e-9, t_many), 2)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: small sizes only")
+    ap.add_argument("--out", default="BENCH_contention.json")
+    args = ap.parse_args()
+
+    sizes = [16, 64] if args.quick else [16, 64, 256]
+    report = {"bench": "contention-engine",
+              "quick": args.quick,
+              "scheduler": [], "evaluate_many": []}
+    for n in sizes:
+        row = bench_scheduler(n)
+        report["scheduler"].append(row)
+        inc = row["engines"]["incremental"]
+        print(f"|J|={n:4d}  ref {row['engines']['reference']['schedule_s']:.2f}s"
+              f"  inc {inc['schedule_s']:.2f}s"
+              f"  wall x{row['wall_speedup']:.2f}"
+              f"  full-evals x{row['full_eval_reduction']:.0f} fewer"
+              f"  identical={inc['schedule_identical_to_reference']}")
+    for n in sizes:
+        row = bench_evaluate_many(n, n_cands=16 if args.quick else 64)
+        report["evaluate_many"].append(row)
+        print(f"evaluate_many |J|={n:4d} C={row['C']}: loop {row['loop_s']}s"
+              f" batched {row['batched_s']}s  x{row['speedup']:.1f}")
+
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

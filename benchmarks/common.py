@@ -20,13 +20,19 @@ POLICIES = {
 
 
 def run_policy(name: str, cluster, jobs, horizon: int,
-               params: dict | None = None):
+               params: dict | None = None, engine: str | None = None):
+    """``engine`` picks the contention-model engine for the policy and the
+    simulation (None = the repo default, "incremental"; all engines give
+    identical results, only speed differs)."""
     policy = get_policy(POLICIES.get(name, name))
+    params = dict(params or {})
+    if engine is not None:
+        params["engine"] = engine
     request = ScheduleRequest(cluster=cluster, jobs=list(jobs),
-                              horizon=horizon, params=params or {})
+                              horizon=horizon, params=params)
     t0 = time.time()
     sched = policy(request)
-    sim = simulate(cluster, jobs, sched.assignment)
+    sim = simulate(cluster, jobs, sched.assignment, engine=engine)
     return {
         "policy": name,
         "makespan": sim.makespan,

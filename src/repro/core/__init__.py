@@ -22,8 +22,12 @@ from repro.core.api import (PlacementState, ScheduleRequest, ScheduleResult,
                             nominal_rho, register_policy, rho_hat)
 from repro.core.cluster import Cluster, philly_cluster
 from repro.core.jobs import Job, philly_workload
-from repro.core.contention import (IterModel, contention_level, degradation,
-                                   evaluate, estimate_exec_time, tau_bounds)
+from repro.core.contention import (IncrementalEval, IterModel,
+                                   contention_level, degradation,
+                                   estimate_exec_time, eval_counts, evaluate,
+                                   evaluate_many, evaluation_engine,
+                                   predict_exec_time, reset_eval_counts,
+                                   slots_for, tau_bounds)
 from repro.core.simulator import SimEvent, SimResult, simulate
 from repro.core.sjf_bco import Schedule, fa_ffp, lbsgf, sjf_bco
 from repro.core import baselines
@@ -46,7 +50,9 @@ __all__ = [
     # problem model
     "Cluster", "philly_cluster", "Job", "philly_workload",
     "IterModel", "contention_level", "degradation", "evaluate",
-    "estimate_exec_time", "tau_bounds",
+    "evaluate_many", "IncrementalEval", "evaluation_engine",
+    "eval_counts", "reset_eval_counts", "slots_for",
+    "estimate_exec_time", "predict_exec_time", "tau_bounds",
     "SimEvent", "SimResult", "simulate",
     # algorithms + deprecated shims
     "Schedule", "fa_ffp", "lbsgf", "sjf_bco", "sjf_bco_adaptive",

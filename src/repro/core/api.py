@@ -47,13 +47,17 @@ A new policy is ~20 lines::
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import Callable, Protocol, runtime_checkable
 
 import numpy as np
 
+from repro.core import contention
 from repro.core.cluster import Cluster
-from repro.core.contention import evaluate, tau_bounds
+from repro.core.contention import (evaluate_many, predict_exec_time,
+                                   resolve_engine, scalar_tau, slots_for,
+                                   tau_bounds)
 from repro.core.jobs import Job
 
 # --------------------------------------------------------------------------
@@ -69,7 +73,13 @@ class ScheduleRequest:
     ``arrivals[i]``; ``None`` -- or an all-zero array -- is the batch
     setting where every job is available at t=0.  ``params`` carries
     policy-specific knobs (e.g. ``{"kappas": [8]}`` for SJF-BCO,
-    ``{"seed": 1}`` for RAND).
+    ``{"seed": 1}`` for RAND).  Every built-in policy honours
+    ``"engine"`` (contention-model engine: ``"incremental"``,
+    ``"batched"`` or ``"reference"`` -- all bit-identical, see
+    :mod:`repro.core.contention`); the try_place-based bisection policies
+    (``sjf-bco``, ``ff``, ``ls``) additionally honour ``"warm_start"``
+    (seed each theta of the bisection with the previous theta's
+    placements).
     """
 
     cluster: Cluster
@@ -205,16 +215,13 @@ def list_policies() -> list[str]:
 def nominal_rho(cluster: Cluster, job: Job) -> float:
     """Contention-free lower estimate (tau at b_intra, single server)."""
     lo, _ = tau_bounds(cluster, job)
-    phi = max(1, int(np.floor(1.0 / lo)))
-    return float(int(np.ceil(job.iters / phi)))
+    return slots_for(job.iters, lo)
 
 
 def rho_hat(cluster: Cluster, job: Job) -> float:
     """Schedule-independent mid-bracket estimate, used by theory checks."""
     lo, hi = tau_bounds(cluster, job)
-    tau = 0.5 * (lo + hi)
-    phi = max(1, int(np.floor(1.0 / tau)))
-    return float(int(np.ceil(job.iters / phi)))
+    return slots_for(job.iters, 0.5 * (lo + hi))
 
 
 # --------------------------------------------------------------------------
@@ -224,10 +231,28 @@ def rho_hat(cluster: Cluster, job: Job) -> float:
 
 class PlacementState:
     """Per-attempt scheduler state: busy clocks U, real clocks R, and the
-    snapshot of placed jobs used for the rho_hat(y^k) refinement."""
+    snapshot of placed jobs used for the rho_hat(y^k) refinement.
 
-    def __init__(self, cluster: Cluster):
+    ``engine`` selects how rho_hat(y^k) probes evaluate the Eq. (6)-(8)
+    model (default: the module-wide :data:`repro.core.contention.DEFAULT_ENGINE`):
+
+      * ``"incremental"`` -- per-server sorted lists of the est_finish
+        times of straddling placed jobs, updated once per commit; a probe's
+        contention level p is then a suffix count (jobs still running at
+        the candidate's start) per straddled server, so each rho_hat is
+        O(straddled servers * log placed) + scalar Eq. (8) instead of a
+        full [J, S] model pass;
+      * ``"batched"`` -- :meth:`refined_rho_many` scores all candidates of
+        a placement decision in one ``evaluate_many`` pass;
+      * ``"reference"`` -- the original per-candidate ``evaluate`` loop.
+
+    All three produce bit-identical estimates (and therefore identical
+    schedules); see ``tests/test_batched_contention.py``.
+    """
+
+    def __init__(self, cluster: Cluster, engine: str | None = None):
         self.cluster = cluster
+        self.engine = resolve_engine(engine)
         self.U = np.zeros(cluster.num_gpus)    # busy-time clock (Eq. 15/16)
         self.R = np.zeros(cluster.num_gpus)    # real-time clock (gang start)
         self.assignment: list[tuple[int, np.ndarray]] = []
@@ -235,6 +260,10 @@ class PlacementState:
         self.placed_y: list[np.ndarray] = []   # per-server GPU counts
         self.est_start: dict[int, float] = {}
         self.est_finish: dict[int, float] = {}
+        # Per-server sorted est_finish of straddling placed jobs (Eq. 6
+        # suffix counts for the incremental engine; maintained by commit).
+        self._straddle_fin: list[list[float]] = \
+            [[] for _ in range(cluster.num_servers)]
 
     def _y_of(self, gpus: np.ndarray) -> np.ndarray:
         y = np.zeros(self.cluster.num_servers, dtype=np.int64)
@@ -246,31 +275,82 @@ class PlacementState:
         GPU idle before the arrival cannot have been used earlier."""
         np.maximum(self.R, float(t), out=self.R)
 
+    def _overlaps(self, start: float) -> np.ndarray:
+        """Mask over placed jobs whose estimated window covers ``start``."""
+        return np.asarray([self.est_finish[jb.jid] > start + 1e-9
+                           for jb in self.placed_jobs], dtype=bool)
+
+    def _probe_rho(self, job: Job, y_j: np.ndarray, start: float) -> float:
+        """Incremental rho_hat(y^k): the candidate's Eq. (6) level is
+        1 + max over its straddled servers of the number of placed
+        straddling jobs still running at ``start`` (a suffix count on the
+        per-server sorted est_finish lists); tau_j needs nothing else."""
+        straddled = np.flatnonzero((y_j > 0) & (y_j < job.num_gpus))
+        p = 0
+        cut = start + 1e-9
+        for s in straddled:
+            fin = self._straddle_fin[s]
+            p = max(p, len(fin) - bisect.bisect_right(fin, cut) + 1)
+        contention.EVAL_COUNTS["probes"] += 1
+        tau = scalar_tau(self.cluster, job, p, len(np.flatnonzero(y_j)))
+        return slots_for(job.iters, tau)
+
     def refined_rho(self, job: Job, gpus: np.ndarray) -> tuple[float, float]:
         """rho_hat_j(y^k): Eq. (8) against placed jobs overlapping the
         estimated gang start.  Returns (rho_hat, est_start)."""
         start = float(self.R[gpus].max()) if len(gpus) else 0.0
         y_j = self._y_of(gpus)
-        overlap_jobs, overlap_y = [], []
-        for jb, y in zip(self.placed_jobs, self.placed_y):
-            if self.est_finish[jb.jid] > start + 1e-9:
-                overlap_jobs.append(jb)
-                overlap_y.append(y)
-        Y = np.vstack(overlap_y + [y_j]) if overlap_y else y_j[None, :]
-        model = evaluate(self.cluster, overlap_jobs + [job], Y)
-        tau = float(model.tau[-1])
-        phi = max(1, int(np.floor(1.0 / tau)))
-        return float(int(np.ceil(job.iters / phi))), start
+        if self.engine == "incremental":
+            return self._probe_rho(job, y_j, start), start
+        overlap = self._overlaps(start)
+        overlap_jobs = [jb for jb, ov in zip(self.placed_jobs, overlap) if ov]
+        overlap_y = [y for y, ov in zip(self.placed_y, overlap) if ov]
+        Y_snap = np.asarray(overlap_y, dtype=np.int64).reshape(
+            len(overlap_jobs), self.cluster.num_servers)
+        return predict_exec_time(self.cluster, job, overlap_jobs, Y_snap,
+                                 y_j), start
+
+    def refined_rho_many(self, job: Job, gpu_sets: list[np.ndarray]
+                         ) -> list[tuple[float, float]]:
+        """Batch form of :meth:`refined_rho` over C candidate GPU sets.
+
+        Under the ``"batched"`` engine all candidates are scored in a
+        single ``evaluate_many`` pass over one [C, P+1, S] stack (placed
+        jobs not overlapping a candidate's start are masked out, which is
+        equivalent to omitting their rows); the other engines fall back to
+        per-candidate probes.  Results are identical across engines."""
+        gpu_sets = [np.asarray(g) for g in gpu_sets]
+        if self.engine != "batched" or not gpu_sets:
+            return [self.refined_rho(job, g) for g in gpu_sets]
+        P = len(self.placed_jobs)
+        C = len(gpu_sets)
+        starts = [float(self.R[g].max()) if len(g) else 0.0 for g in gpu_sets]
+        Y = np.zeros((C, P + 1, self.cluster.num_servers), dtype=np.int64)
+        active = np.zeros((C, P + 1), dtype=bool)
+        placed_Y = np.asarray(self.placed_y, dtype=np.int64).reshape(
+            P, self.cluster.num_servers)
+        for c, (g, start) in enumerate(zip(gpu_sets, starts)):
+            active[c, :P] = self._overlaps(start)
+            Y[c, :P] = placed_Y
+            Y[c, P] = self._y_of(g)
+            active[c, P] = True
+        model = evaluate_many(self.cluster, self.placed_jobs + [job], Y,
+                              active=active)
+        return [(slots_for(job.iters, float(model.tau[c, P])), starts[c])
+                for c in range(C)]
 
     def commit(self, job: Job, gpus: np.ndarray, rho: float, start: float,
                u: float) -> None:
         self.U[gpus] += rho / u
         self.R[gpus] = start + rho
         self.assignment.append((job.jid, gpus))
+        y = self._y_of(gpus)
         self.placed_jobs.append(job)
-        self.placed_y.append(self._y_of(gpus))
+        self.placed_y.append(y)
         self.est_start[job.jid] = start
         self.est_finish[job.jid] = start + rho
+        for s in np.flatnonzero((y > 0) & (y < job.num_gpus)):
+            bisect.insort(self._straddle_fin[s], start + rho)
 
 
 # A picker maps (state, job, rho_nom, u, theta) -> gpu ids or None.
@@ -279,19 +359,62 @@ Picker = Callable[[PlacementState, Job, float, float, float],
 
 
 def try_place(state: PlacementState, job: Job, picker: Picker,
-              rho_nom: float, u: float, theta: float, tries: int = 4) -> bool:
+              rho_nom: float, u: float, theta: float, tries: int = 4,
+              hint: "np.ndarray | None" = None) -> bool:
     """Pick GPUs with the nominal-estimate filter, refine rho_hat(y^k) for
     the chosen set, and re-check the Eq. (16) budget.  If the refined charge
     overflows theta on some GPU, re-filter with the refined estimate (which
     excludes the marginal GPUs) and retry -- mirroring the paper's
-    "re-evaluate after the schedule is known" loop of Fig. 3."""
+    "re-evaluate after the schedule is known" loop of Fig. 3.
+
+    ``hint`` (optional) is a warm-start GPU set -- typically the job's
+    placement from the previous theta of :func:`bisect_theta` -- committed
+    directly if it passes the refined budget re-check, before the picker
+    runs at all.
+
+    rho_hat(y^k) is a pure function of the GPU set (the overlap snapshot is
+    fixed until a commit), so candidate scores are memoised across tries;
+    under the "batched" engine the escalation ladder's candidate sets are
+    additionally pre-scored in a single ``evaluate_many`` pass.  (The
+    ladder escalates by the plain 1.05 factor -- a lower bound on the real
+    escalation ``max(rho, rho_try * 1.05)`` -- so when a refined rho jumps
+    past it, the loop below falls back to scoring the unseen candidate
+    individually; the result is identical either way.)"""
+    scored: dict[tuple, tuple[float, float]] = {}
+    if hint is not None:
+        gpus = np.asarray(hint)
+        rho, start = state.refined_rho(job, gpus)
+        if np.all(state.U[gpus] + rho / u <= theta + 1e-9):
+            state.commit(job, gpus, rho, start, u)
+            return True
+        scored[tuple(gpus.tolist())] = (rho, start)
+    # The ladder pre-calls the picker speculatively, which would desync a
+    # stateful picker (e.g. RAND's rng): such pickers set ``stateful=True``
+    # and are scored per-try only.
+    if state.engine == "batched" and tries > 1 \
+            and not getattr(picker, "stateful", False):
+        ladder: dict[tuple, np.ndarray] = {}
+        r = rho_nom
+        for _ in range(tries):
+            g = picker(state, job, r, u, theta)
+            if g is None:
+                break
+            g = np.asarray(g)
+            ladder.setdefault(tuple(g.tolist()), g)
+            r *= 1.05
+        if len(ladder) > 1:
+            scored.update(zip(ladder, state.refined_rho_many(
+                job, list(ladder.values()))))
     rho_try = rho_nom
     for _ in range(tries):
         gpus = picker(state, job, rho_try, u, theta)
         if gpus is None:
             return False
         gpus = np.asarray(gpus)
-        rho, start = state.refined_rho(job, gpus)
+        key = tuple(gpus.tolist())
+        if key not in scored:
+            scored[key] = state.refined_rho(job, gpus)
+        rho, start = scored[key]
         if np.all(state.U[gpus] + rho / u <= theta + 1e-9):
             state.commit(job, gpus, rho, start, u)
             return True
@@ -319,21 +442,30 @@ def finalize(state: PlacementState, n_jobs: int, theta: float,
 # --------------------------------------------------------------------------
 
 
-def bisect_theta(attempt: Callable[[float], "ScheduleResult | None"],
-                 horizon: int, policy: str) -> ScheduleResult:
+def bisect_theta(attempt: Callable[..., "ScheduleResult | None"],
+                 horizon: int, policy: str,
+                 warm_start: bool = False) -> ScheduleResult:
     """Algorithm 1's outer loop: bisection on the busy-time budget theta_u.
 
     ``attempt(theta)`` returns the best schedule feasible under that
     budget, or None.  Feasible => tighten (search below theta);
     infeasible => relax.  Matches the paper's "theta_u^f is the maximum
     execution time limit returned by policy f" for the baselines too.
+
+    With ``warm_start=True`` the attempt is called as ``attempt(theta,
+    prev)`` where ``prev`` is the schedule committed at the previous
+    feasible theta (or None); policies use its placements as the initial
+    candidate set (see ``try_place``'s ``hint``), so each bisection step
+    starts from a known-good placement instead of searching from scratch.
     """
     best: ScheduleResult | None = None
+    prev: ScheduleResult | None = None
     left, right = 1.0, float(horizon)
     while left <= right:
         theta = 0.5 * (left + right)
-        cand = attempt(theta)
+        cand = attempt(theta, prev) if warm_start else attempt(theta)
         if cand is not None:
+            prev = cand
             if best is None or cand.est_makespan <= best.est_makespan:
                 best = cand
             right = theta - 1.0
@@ -361,7 +493,8 @@ def schedule_arrivals(request: ScheduleRequest, choose: Chooser,
     """
     order = sorted(request.arrival_items(),
                    key=lambda it: (it[1], it[0].num_gpus, it[0].jid))
-    state = PlacementState(request.cluster)
+    state = PlacementState(request.cluster,
+                           engine=request.params.get("engine"))
     theta = float(request.horizon)
     for job, arrival in order:
         state.advance_to(arrival)
@@ -377,13 +510,13 @@ def pick_best_finish(state: PlacementState, job: Job, pickers: list[Picker],
     refined rho_hat(y^k) and commit whichever finishes earliest.  Shared by
     SJF-BCO+ and the online path (where queueing delay IS the est-finish
     penalty)."""
-    best = None  # (est_finish, gpus, rho, start)
+    cands = []
     for picker in pickers:
         gpus = picker(state, job, rho_nom, u, theta)
-        if gpus is None:
-            continue
-        gpus = np.asarray(gpus)
-        rho, start = state.refined_rho(job, gpus)
+        if gpus is not None:
+            cands.append(np.asarray(gpus))
+    best = None  # (est_finish, gpus, rho, start)
+    for gpus, (rho, start) in zip(cands, state.refined_rho_many(job, cands)):
         if np.any(state.U[gpus] + rho / u > theta + 1e-9):
             continue
         if best is None or start + rho < best[0]:

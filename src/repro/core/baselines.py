@@ -58,6 +58,7 @@ def _picker_policy(request: ScheduleRequest, picker: Picker, name: str
                    ) -> ScheduleResult:
     """Shared FF/LS skeleton: online epoch loop or batch theta bisection."""
     cluster, u = request.cluster, request.u
+    engine = request.params.get("engine")
     rho_noms = {j.jid: nominal_rho(cluster, j) for j in request.jobs}
 
     if not request.is_batch:
@@ -67,14 +68,18 @@ def _picker_policy(request: ScheduleRequest, picker: Picker, name: str
 
     jobs = request.jobs
 
-    def attempt(theta: float) -> ScheduleResult | None:
-        state = PlacementState(cluster)
+    def attempt(theta: float,
+                prev: ScheduleResult | None = None) -> ScheduleResult | None:
+        hints = dict(prev.assignment) if prev is not None else {}
+        state = PlacementState(cluster, engine=engine)
         for job in jobs:
-            if not try_place(state, job, picker, rho_noms[job.jid], u, theta):
+            if not try_place(state, job, picker, rho_noms[job.jid], u, theta,
+                             hint=hints.get(job.jid)):
                 return None
         return finalize(state, len(jobs), theta, None, name)
 
-    return bisect_theta(attempt, request.horizon, name)
+    return bisect_theta(attempt, request.horizon, name,
+                        warm_start=bool(request.params.get("warm_start")))
 
 
 @register_policy("ff")
@@ -91,6 +96,7 @@ def list_scheduling_policy(request: ScheduleRequest) -> ScheduleResult:
 def random_policy_policy(request: ScheduleRequest) -> ScheduleResult:
     """RAND with theta_u = T.  ``request.params``: ``seed`` (default 0)."""
     cluster, u = request.cluster, request.u
+    engine = request.params.get("engine")
     rng = np.random.default_rng(request.params.get("seed", 0))
     theta = float(request.horizon)
 
@@ -100,13 +106,15 @@ def random_policy_policy(request: ScheduleRequest) -> ScheduleResult:
             return None
         return rng.choice(feasible, size=job.num_gpus, replace=False)
 
+    picker.stateful = True   # consumes rng draws; see try_place's ladder
+
     if not request.is_batch:
         def choose(state: PlacementState, job: Job, th: float) -> bool:
             return try_place(state, job, picker,
                              nominal_rho(cluster, job), u, th)
         return schedule_arrivals(request, choose, "RAND")
 
-    state = PlacementState(cluster)
+    state = PlacementState(cluster, engine=engine)
     for job in request.jobs:
         if not try_place(state, job, picker, nominal_rho(cluster, job),
                          u, theta):
@@ -122,6 +130,7 @@ def reserved_bandwidth_policy(request: ScheduleRequest) -> ScheduleResult:
     so the actual makespan of this schedule exposes the optimism the paper
     argues against."""
     cluster, u = request.cluster, request.u
+    engine = request.params.get("engine")
 
     def place_nominal(state: PlacementState, job: Job, theta: float) -> bool:
         rho = nominal_rho(cluster, job)
@@ -138,7 +147,7 @@ def reserved_bandwidth_policy(request: ScheduleRequest) -> ScheduleResult:
     jobs = request.jobs
 
     def attempt(theta: float) -> ScheduleResult | None:
-        state = PlacementState(cluster)
+        state = PlacementState(cluster, engine=engine)
         for job in jobs:
             if not place_nominal(state, job, theta):
                 return None

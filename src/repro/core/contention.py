@@ -10,9 +10,24 @@ Given a placement matrix Y[t] (rows = active jobs, cols = servers, entries =
   gamma_j           comm overhead, xi2 * #servers spanned
   tau_j[t] (Eq. 8)  per-iteration RAR time
   phi_j[t]          iterations completed per slot, floor(1/tau)
+
+Three evaluation engines share these formulas (and are bit-identical):
+
+  * :func:`evaluate` -- one placement [J, S], the reference path;
+  * :func:`evaluate_many` -- a stack of C candidate placements [C, J, S]
+    scored in a single vectorised pass (the straddle/per-server reductions
+    are shared across candidates; no per-candidate Python loop);
+  * :class:`IncrementalEval` -- maintains p/k/tau under single-row
+    add/remove in O(S + |affected rows|) instead of recomputing all J rows,
+    for hot loops (scheduler placement probes, the slot simulator) where
+    the active set changes one job at a time.
+
+``EVAL_COUNTS`` tallies how often each engine runs so benchmarks can report
+"full-model evaluations saved" (see ``benchmarks/bench_contention.py``).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 
 import numpy as np
@@ -20,30 +35,94 @@ import numpy as np
 from repro.core.cluster import Cluster
 from repro.core.jobs import Job
 
+# --------------------------------------------------------------------------
+# Engine selection + instrumentation
+# --------------------------------------------------------------------------
+
+ENGINES = ("incremental", "batched", "reference")
+
+# Module-wide default used by PlacementState and the simulator when no
+# explicit engine is requested.  "incremental" is the fast path;
+# "reference" is the original per-candidate evaluate() loop kept for
+# equivalence testing and as the semantics oracle.
+DEFAULT_ENGINE = "incremental"
+
+EVAL_COUNTS = {
+    "full": 0,              # evaluate() calls (one full [J, S] model pass)
+    "batched_calls": 0,     # evaluate_many() calls (one vectorised pass)
+    "batched_rows": 0,      # total candidates scored across those calls
+    "incremental_updates": 0,  # IncrementalEval row add/remove operations
+    "probes": 0,            # O(S) single-job tau probes (no full pass)
+}
+
+
+def reset_eval_counts() -> None:
+    for key in EVAL_COUNTS:
+        EVAL_COUNTS[key] = 0
+
+
+def eval_counts() -> dict[str, int]:
+    """Snapshot of the model-evaluation counters."""
+    return dict(EVAL_COUNTS)
+
+
+@contextlib.contextmanager
+def evaluation_engine(name: str):
+    """Temporarily set the module-wide default evaluation engine."""
+    global DEFAULT_ENGINE
+    if name not in ENGINES:
+        raise ValueError(f"unknown engine {name!r}; choose from {ENGINES}")
+    prev, DEFAULT_ENGINE = DEFAULT_ENGINE, name
+    try:
+        yield
+    finally:
+        DEFAULT_ENGINE = prev
+
+
+def resolve_engine(name: str | None) -> str:
+    """An explicit engine name, or the module-wide default."""
+    if name is None:
+        return DEFAULT_ENGINE
+    if name not in ENGINES:
+        raise ValueError(f"unknown engine {name!r}; choose from {ENGINES}")
+    return name
+
+
+# --------------------------------------------------------------------------
+# Model terms
+# --------------------------------------------------------------------------
+
 
 @dataclasses.dataclass(frozen=True)
 class IterModel:
-    """Per-slot evaluation of the Eq. (8) terms for a set of active jobs."""
+    """Per-slot evaluation of the Eq. (8) terms for a set of active jobs.
 
-    p: np.ndarray          # Eq. (6), int [J]
-    k: np.ndarray          # Eq. (7), float [J]
-    bandwidth: np.ndarray  # B_j(y[t]), float [J]
-    gamma: np.ndarray      # comm overhead, float [J]
-    exchange: np.ndarray   # information-exchange term, float [J]
-    reduce: np.ndarray     # reduction-compute term, float [J]
-    compute: np.ndarray    # Delta_f * M + Delta_b, float [J]
-    tau: np.ndarray        # Eq. (8), float [J]
-    phi: np.ndarray        # iterations per slot, int [J]
+    Arrays are [J] from :func:`evaluate` / :meth:`IncrementalEval.model`,
+    or [C, J] from :func:`evaluate_many` (leading candidate axis)."""
+
+    p: np.ndarray          # Eq. (6), int
+    k: np.ndarray          # Eq. (7), float
+    bandwidth: np.ndarray  # B_j(y[t]), float
+    gamma: np.ndarray      # comm overhead, float
+    exchange: np.ndarray   # information-exchange term, float
+    reduce: np.ndarray     # reduction-compute term, float
+    compute: np.ndarray    # Delta_f * M + Delta_b, float
+    tau: np.ndarray        # Eq. (8), float
+    phi: np.ndarray        # iterations per slot, int
 
 
-def degradation(alpha: float, k: np.ndarray) -> np.ndarray:
+def degradation(alpha: float, k):
     """Bandwidth-sharing degradation factor f(alpha, k).
 
     Linear model from §4.1: f = k + alpha * (k - 1); f(alpha, 1) = 1 and
-    increasing in k, as the paper requires.
+    increasing in k, as the paper requires.  Accepts scalars or arrays and
+    returns a matching float / ndarray.
     """
-    k = np.maximum(np.asarray(k, dtype=np.float64), 1.0)
-    return k + alpha * (k - 1.0)
+    arr = np.maximum(np.asarray(k, dtype=np.float64), 1.0)
+    out = arr + alpha * (arr - 1.0)
+    if np.ndim(k) == 0:
+        return float(out)
+    return out
 
 
 def contention_level(Y: np.ndarray, G: np.ndarray) -> np.ndarray:
@@ -62,20 +141,29 @@ def contention_level(Y: np.ndarray, G: np.ndarray) -> np.ndarray:
     return p.astype(np.int64)
 
 
-def evaluate(cluster: Cluster, jobs: list[Job], Y: np.ndarray) -> IterModel:
-    """Evaluate Eqs. (6)-(8) for the active-job placement ``Y`` [J, S]."""
-    J = len(jobs)
-    if Y.shape != (J, cluster.num_servers):
-        raise ValueError(f"Y shape {Y.shape} != ({J}, {cluster.num_servers})")
+def _job_terms(jobs: list[Job]) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Placement-independent per-job terms of Eq. (8): (G, share, compute)
+    where share = m(w-1)/w is the per-GPU exchanged volume."""
     G = np.asarray([j.num_gpus for j in jobs], dtype=np.int64)
-    if not np.array_equal(Y.sum(axis=1), G):
-        raise ValueError("placement does not cover every job's GPUs (Eq. 1)")
-
     m = np.asarray([j.grad_size for j in jobs], dtype=np.float64)
     w = G.astype(np.float64)
     M = np.asarray([j.batch for j in jobs], dtype=np.float64)
     dfw = np.asarray([j.dt_fwd for j in jobs], dtype=np.float64)
     dbw = np.asarray([j.dt_bwd for j in jobs], dtype=np.float64)
+    # Eq. (8): single-GPU jobs (w=1) have no exchange/reduction terms.
+    share = np.where(w > 1, (m / w) * (w - 1.0), 0.0)
+    compute = dfw * M + dbw
+    return G, share, compute
+
+
+def evaluate(cluster: Cluster, jobs: list[Job], Y: np.ndarray) -> IterModel:
+    """Evaluate Eqs. (6)-(8) for the active-job placement ``Y`` [J, S]."""
+    J = len(jobs)
+    if Y.shape != (J, cluster.num_servers):
+        raise ValueError(f"Y shape {Y.shape} != ({J}, {cluster.num_servers})")
+    G, share, compute = _job_terms(jobs)
+    if not np.array_equal(Y.sum(axis=1), G):
+        raise ValueError("placement does not cover every job's GPUs (Eq. 1)")
 
     p = contention_level(Y, G)
     k = np.maximum(cluster.xi1 * p, 1.0)
@@ -86,16 +174,297 @@ def evaluate(cluster: Cluster, jobs: list[Job], Y: np.ndarray) -> IterModel:
     n_srv = (Y > 0).sum(axis=1).astype(np.float64)
     gamma = cluster.xi2 * n_srv
 
-    # Eq. (8): single-GPU jobs (w=1) have no exchange/reduction terms.
-    share = np.where(w > 1, (m / w) * (w - 1.0), 0.0)
     exchange = 2.0 * share / bandwidth
     reduce_t = share / cluster.gpu_speed
-    compute = dfw * M + dbw
     tau = exchange + reduce_t + gamma + compute
     phi = np.floor(1.0 / tau).astype(np.int64)
+    EVAL_COUNTS["full"] += 1
     return IterModel(p=p, k=k, bandwidth=bandwidth, gamma=gamma,
                      exchange=exchange, reduce=reduce_t, compute=compute,
                      tau=tau, phi=phi)
+
+
+def evaluate_many(cluster: Cluster, jobs: list[Job], Y_stack: np.ndarray,
+                  active: np.ndarray | None = None) -> IterModel:
+    """Score a stack of C candidate placements [C, J, S] in one pass.
+
+    ``jobs`` is the shared row order across candidates.  ``active`` [C, J]
+    (optional) marks which rows participate in each candidate; inactive
+    rows are zeroed out, which leaves every other row's contention exactly
+    as if the row were absent (a zero row straddles nothing), so candidates
+    with different overlap subsets of the same job list can share a stack.
+
+    Bit-identical to running :func:`evaluate` per candidate: all reductions
+    run along the same axes with the same element values.  Inactive rows
+    still receive (meaningless) tau entries -- callers must only read
+    active rows.
+    """
+    Y = np.asarray(Y_stack)
+    if Y.ndim != 3 or Y.shape[1:] != (len(jobs), cluster.num_servers):
+        raise ValueError(
+            f"Y_stack shape {Y.shape} != (C, {len(jobs)}, {cluster.num_servers})")
+    G, share, compute = _job_terms(jobs)
+    if active is not None:
+        active = np.asarray(active, dtype=bool)
+        if active.shape != Y.shape[:2]:
+            raise ValueError(f"active shape {active.shape} != {Y.shape[:2]}")
+        Y = np.where(active[:, :, None], Y, 0)
+        expect = np.where(active, G[None, :], 0)
+    else:
+        expect = np.broadcast_to(G[None, :], Y.shape[:2])
+    if not np.array_equal(Y.sum(axis=2), expect):
+        raise ValueError("placement does not cover every job's GPUs (Eq. 1)")
+
+    straddle = (Y > 0) & (Y < G[None, :, None])    # [C, J, S]
+    per_server = straddle.sum(axis=1)              # [C, S]
+    p = np.where(straddle, per_server[:, None, :], 0).max(axis=2)
+    p = p.astype(np.int64)
+    k = np.maximum(cluster.xi1 * p, 1.0)
+    multi = (Y > 0).sum(axis=2) > 1
+    f = degradation(cluster.alpha, k)
+    bandwidth = np.where(multi, cluster.b_inter / f, cluster.b_intra)
+
+    n_srv = (Y > 0).sum(axis=2).astype(np.float64)
+    gamma = cluster.xi2 * n_srv
+
+    exchange = 2.0 * share[None, :] / bandwidth
+    reduce_t = np.broadcast_to(share / cluster.gpu_speed, p.shape)
+    compute_b = np.broadcast_to(compute, p.shape)
+    tau = exchange + reduce_t + gamma + compute_b
+    phi = np.floor(1.0 / tau).astype(np.int64)
+    EVAL_COUNTS["batched_calls"] += 1
+    EVAL_COUNTS["batched_rows"] += Y.shape[0]
+    return IterModel(p=p, k=k, bandwidth=bandwidth, gamma=gamma,
+                     exchange=exchange, reduce=reduce_t, compute=compute_b,
+                     tau=tau, phi=phi)
+
+
+# --------------------------------------------------------------------------
+# Incremental engine
+# --------------------------------------------------------------------------
+
+
+class IncrementalEval:
+    """Exact Eq. (6)-(8) maintenance under single-row placement changes.
+
+    Holds the straddle matrix and the per-server straddler counts for a
+    live set of rows.  :meth:`add` / :meth:`remove` update the counts for
+    the one changed row and recompute p (and, where p changed, k/B/tau/phi)
+    only for the rows straddling a server whose count moved -- O(S +
+    |affected|) per update instead of the O(J*S) of a fresh
+    :func:`evaluate`.  All terms are computed with the same expressions as
+    :func:`evaluate`, so the maintained state is bit-identical.
+    """
+
+    def __init__(self, cluster: Cluster, capacity: int = 16):
+        self.cluster = cluster
+        self._S = cluster.num_servers
+        cap = max(4, capacity)
+        self._jobs: list[Job | None] = [None] * cap
+        self._live = np.zeros(cap, dtype=bool)
+        self._Y = np.zeros((cap, self._S), dtype=np.int64)
+        self._straddle = np.zeros((cap, self._S), dtype=bool)
+        self._per_server = np.zeros(self._S, dtype=np.int64)
+        # Placement-independent per-row terms (cached at add).
+        self._share = np.zeros(cap)
+        self._reduce = np.zeros(cap)
+        self._compute = np.zeros(cap)
+        # Placement-dependent but row-local terms.
+        self._gamma = np.zeros(cap)
+        self._multi = np.zeros(cap, dtype=bool)
+        # Contention-dependent terms, maintained incrementally.
+        self._p = np.zeros(cap, dtype=np.int64)
+        self._k = np.zeros(cap)
+        self._bandwidth = np.zeros(cap)
+        self._exchange = np.zeros(cap)
+        self._tau = np.zeros(cap)
+        self._phi = np.zeros(cap, dtype=np.int64)
+        self._free = list(range(cap))
+
+    def __len__(self) -> int:
+        return int(self._live.sum())
+
+    def _grow(self) -> None:
+        cap = len(self._live)
+        new = cap * 2
+        self._jobs.extend([None] * cap)
+        for name in ("_live", "_share", "_reduce", "_compute", "_gamma",
+                     "_multi", "_p", "_k", "_bandwidth", "_exchange",
+                     "_tau", "_phi"):
+            old = getattr(self, name)
+            setattr(self, name, np.concatenate(
+                [old, np.zeros(cap, dtype=old.dtype)]))
+        self._Y = np.concatenate(
+            [self._Y, np.zeros((cap, self._S), dtype=np.int64)])
+        self._straddle = np.concatenate(
+            [self._straddle, np.zeros((cap, self._S), dtype=bool)])
+        self._free.extend(range(cap, new))
+
+    def add(self, job: Job, y: np.ndarray) -> int:
+        """Insert a placed job row ``y`` [S]; returns its row handle."""
+        y = np.asarray(y, dtype=np.int64)
+        if y.shape != (self._S,):
+            raise ValueError(f"y shape {y.shape} != ({self._S},)")
+        if int(y.sum()) != job.num_gpus:
+            raise ValueError("placement does not cover the job's GPUs (Eq. 1)")
+        if not self._free:
+            self._grow()
+        row = self._free.pop()
+        cl = self.cluster
+        self._jobs[row] = job
+        self._Y[row] = y
+        w = float(job.num_gpus)
+        share = (job.grad_size / w) * (w - 1.0) if w > 1 else 0.0
+        self._share[row] = share
+        self._reduce[row] = share / cl.gpu_speed
+        self._compute[row] = job.dt_fwd * float(job.batch) + job.dt_bwd
+        n_srv = int((y > 0).sum())
+        self._gamma[row] = cl.xi2 * float(n_srv)
+        self._multi[row] = n_srv > 1
+        row_straddle = (y > 0) & (y < job.num_gpus)
+        self._straddle[row] = row_straddle
+        self._live[row] = True
+        self._apply_count_delta(row, row_straddle, +1)
+        EVAL_COUNTS["incremental_updates"] += 1
+        return row
+
+    def remove(self, row: int) -> None:
+        """Remove a previously added row; its handle becomes invalid."""
+        if not self._live[row]:
+            raise KeyError(f"row {row} is not live")
+        row_straddle = self._straddle[row].copy()
+        self._live[row] = False
+        self._straddle[row] = False
+        self._Y[row] = 0
+        self._jobs[row] = None
+        self._apply_count_delta(row, row_straddle, -1)
+        self._free.append(row)
+        EVAL_COUNTS["incremental_updates"] += 1
+
+    def _apply_count_delta(self, row: int, row_straddle: np.ndarray,
+                           delta: int) -> None:
+        changed = np.flatnonzero(row_straddle)
+        if len(changed):
+            self._per_server[changed] += delta
+            affected = self._live & self._straddle[:, changed].any(axis=1)
+        else:
+            affected = np.zeros(len(self._live), dtype=bool)
+        if delta > 0:
+            affected[row] = True   # a new row always needs its own terms
+        rows = np.flatnonzero(affected)
+        if not len(rows):
+            return
+        sub = self._straddle[rows]
+        p_new = np.where(sub, self._per_server[None, :], 0).max(axis=1)
+        stale = p_new != self._p[rows]
+        if delta > 0:
+            stale |= rows == row
+        self._p[rows] = p_new
+        upd = rows[stale]
+        if not len(upd):
+            return
+        cl = self.cluster
+        k = np.maximum(cl.xi1 * self._p[upd], 1.0)
+        f = degradation(cl.alpha, k)
+        bandwidth = np.where(self._multi[upd], cl.b_inter / f, cl.b_intra)
+        exchange = 2.0 * self._share[upd] / bandwidth
+        tau = exchange + self._reduce[upd] + self._gamma[upd] + self._compute[upd]
+        self._k[upd] = k
+        self._bandwidth[upd] = bandwidth
+        self._exchange[upd] = exchange
+        self._tau[upd] = tau
+        self._phi[upd] = np.floor(1.0 / tau).astype(np.int64)
+
+    def tau_of(self, row: int) -> float:
+        if not self._live[row]:
+            raise KeyError(f"row {row} is not live")
+        return float(self._tau[row])
+
+    def probe_tau(self, job: Job, y: np.ndarray) -> float:
+        """tau of ``job`` if placed as ``y`` against the current live set,
+        WITHOUT mutating any state.  tau_j depends only on the job's own
+        contention level p_j = max over its straddled servers of the
+        straddler count including itself (Eq. 6) -- other rows' p values
+        don't enter Eq. (8) for j -- so a probe is a pure O(S) read."""
+        y = np.asarray(y, dtype=np.int64)
+        if int(y.sum()) != job.num_gpus:
+            raise ValueError("placement does not cover the job's GPUs (Eq. 1)")
+        straddle_row = (y > 0) & (y < job.num_gpus)
+        p = int((self._per_server[straddle_row] + 1).max()) \
+            if straddle_row.any() else 0
+        n_srv = int((y > 0).sum())
+        EVAL_COUNTS["probes"] += 1
+        return scalar_tau(self.cluster, job, p, n_srv)
+
+    def model(self, rows) -> IterModel:
+        """Gather the maintained terms for ``rows`` (in that order)."""
+        idx = np.asarray(rows, dtype=np.int64)
+        if idx.ndim != 1 or (len(idx) and not np.all(self._live[idx])):
+            raise KeyError("model() requires live row handles")
+        return IterModel(
+            p=self._p[idx].copy(), k=self._k[idx].copy(),
+            bandwidth=self._bandwidth[idx].copy(),
+            gamma=self._gamma[idx].copy(),
+            exchange=self._exchange[idx].copy(),
+            reduce=self._reduce[idx].copy(),
+            compute=self._compute[idx].copy(),
+            tau=self._tau[idx].copy(), phi=self._phi[idx].copy())
+
+
+# --------------------------------------------------------------------------
+# Estimate helpers (shared by every rho-hat consumer)
+# --------------------------------------------------------------------------
+
+
+def scalar_tau(cluster: Cluster, job: Job, p: int, n_srv: int) -> float:
+    """Eq. (8) for one job given its contention level ``p`` and server
+    spread ``n_srv`` -- the scalar core shared by the incremental probes.
+    Plain-float IEEE arithmetic, bit-identical to the vectorised engines.
+    """
+    w = float(job.num_gpus)
+    share = (job.grad_size / w) * (w - 1.0) if w > 1 else 0.0
+    k = max(cluster.xi1 * p, 1.0)
+    if n_srv > 1:
+        bandwidth = cluster.b_inter / degradation(cluster.alpha, k)
+    else:
+        bandwidth = cluster.b_intra
+    gamma = cluster.xi2 * float(n_srv)
+    exchange = 2.0 * share / bandwidth
+    reduce_t = share / cluster.gpu_speed
+    compute = job.dt_fwd * float(job.batch) + job.dt_bwd
+    return exchange + reduce_t + gamma + compute
+
+
+def slots_for(iters: int, tau: float) -> float:
+    """rho-hat slot count at per-iteration time ``tau``: ceil(F_j / phi)
+    with phi = floor(1/tau) clamped >= 1.  The one place this floor/ceil
+    pair lives -- PlacementState.refined_rho, estimate_exec_time and the
+    Table-1 estimates all route through it."""
+    phi = max(1, int(np.floor(1.0 / tau)))
+    return float(int(np.ceil(iters / phi)))
+
+
+def predict_exec_time(cluster: Cluster, job: Job, jobs_snapshot: list[Job],
+                      Y_snapshot: np.ndarray, y_j: np.ndarray) -> float:
+    """rho_hat(y^k): estimated execution time (slots) of ``job`` placed as
+    ``y_j`` [S] while ``jobs_snapshot`` are placed as ``Y_snapshot``
+    [J', S] -- the scheduler-side estimate of Fig. 3 (evaluate Eq. (8)
+    against the snapshot, convert tau to slots, multiply by F_j)."""
+    y_j = np.asarray(y_j)
+    if len(jobs_snapshot):
+        Y = np.vstack([np.asarray(Y_snapshot), y_j[None, :]])
+    else:
+        Y = y_j[None, :]
+    model = evaluate(cluster, list(jobs_snapshot) + [job], Y)
+    return slots_for(job.iters, float(model.tau[-1]))
+
+
+def estimate_exec_time(cluster: Cluster, job: Job, Y_snapshot: np.ndarray,
+                       jobs_snapshot: list[Job], y_j: np.ndarray) -> float:
+    """Back-compat wrapper for :func:`predict_exec_time` (older argument
+    order).  The true rho is later produced by the slot simulator
+    (contention evolves over time)."""
+    return predict_exec_time(cluster, job, jobs_snapshot, Y_snapshot, y_j)
 
 
 def tau_bounds(cluster: Cluster, job: Job) -> tuple[float, float]:
@@ -105,27 +474,9 @@ def tau_bounds(cluster: Cluster, job: Job) -> tuple[float, float]:
     share = (job.grad_size / w) * (w - 1.0) if w > 1 else 0.0
     compute = job.dt_fwd * job.batch + job.dt_bwd
     k_max = max(1.0, cluster.xi1 * max(cluster.capacities))
-    b_lo = cluster.b_inter / float(degradation(cluster.alpha, np.array(k_max)))
+    b_lo = cluster.b_inter / degradation(cluster.alpha, k_max)
     tau_lo = 2.0 * share / cluster.b_intra + share / cluster.gpu_speed \
         + cluster.xi2 * 1.0 + compute
     tau_hi = 2.0 * share / b_lo + share / cluster.gpu_speed \
         + cluster.xi2 * min(w, cluster.num_servers) + compute
     return tau_lo, tau_hi
-
-
-def estimate_exec_time(cluster: Cluster, job: Job, Y_snapshot: np.ndarray,
-                       jobs_snapshot: list[Job], y_j: np.ndarray) -> float:
-    """rho_hat(y^k): estimated execution time (slots) of ``job`` if placed as
-    ``y_j`` [S] while the jobs in ``jobs_snapshot`` are placed as
-    ``Y_snapshot`` [J', S].
-
-    This is the scheduler-side estimate of Fig. 3: evaluate Eq. (8) against
-    the current placement snapshot and multiply by F_j.  The true rho is
-    later produced by the slot simulator (contention evolves over time).
-    """
-    Y = np.vstack([Y_snapshot, y_j[None, :]]) if len(jobs_snapshot) else y_j[None, :]
-    model = evaluate(cluster, jobs_snapshot + [job], Y)
-    tau = float(model.tau[-1])
-    # slots needed at phi iterations/slot
-    phi = max(1, int(np.floor(1.0 / tau)))
-    return float(int(np.ceil(job.iters / phi)))

@@ -36,6 +36,7 @@ def sjf_bco_adaptive_policy(request: ScheduleRequest) -> ScheduleResult:
     arrivals, the same choice runs in the online epoch loop (identical to
     SJF-BCO online, which is already adaptive)."""
     cluster, u = request.cluster, request.u
+    engine = request.params.get("engine")
     rho_noms = {j.jid: nominal_rho(cluster, j) for j in request.jobs}
 
     def choose(state: PlacementState, job: Job, theta: float) -> bool:
@@ -48,7 +49,7 @@ def sjf_bco_adaptive_policy(request: ScheduleRequest) -> ScheduleResult:
     jobs_sorted = sorted(request.jobs, key=lambda j: (j.num_gpus, j.jid))
 
     def attempt(theta: float) -> ScheduleResult | None:
-        state = PlacementState(cluster)
+        state = PlacementState(cluster, engine=engine)
         for job in jobs_sorted:
             if not choose(state, job, theta):
                 return None

@@ -61,18 +61,17 @@ def fa_ffp(state: PlacementState, job: Job, rho_nom: float, u: float,
     if len(feasible) < job.num_gpus:
         return None
     srv_of = cl.gpu_server[feasible]
-    best_srv, best_key = -1, None
-    for s in range(cl.num_servers):
-        cnt = int((srv_of == s).sum())
-        if cnt < job.num_gpus:
-            continue
-        occupied = float(state.U[cl.server_gpu_ids(s)].sum())
-        # Best fit: fewest feasible slots left after placing; prefer servers
-        # that already carry work (pack, don't open fresh servers).
-        key = (cnt - job.num_gpus, -occupied)
-        if best_key is None or key < best_key:
-            best_srv, best_key = s, key
-    if best_srv >= 0:
+    # All candidate servers scored in one vectorised pass: feasible-GPU
+    # count and total occupancy per server, then best fit = fewest feasible
+    # slots left after placing, preferring servers that already carry work
+    # (pack, don't open fresh servers), lowest server id on ties.
+    cnt = np.bincount(srv_of, minlength=cl.num_servers)
+    occupied = np.zeros(cl.num_servers)
+    np.add.at(occupied, cl.gpu_server, state.U)
+    fits = np.flatnonzero(cnt >= job.num_gpus)
+    if len(fits):
+        order = np.lexsort((fits, -occupied[fits], cnt[fits] - job.num_gpus))
+        best_srv = int(fits[order[0]])
         pool = feasible[srv_of == best_srv]
         order = pool[np.argsort(state.U[pool], kind="stable")]
         return order[: job.num_gpus]
@@ -102,25 +101,30 @@ def lbsgf(state: PlacementState, job: Job, rho_nom: float, u: float,
     m = int(np.searchsorted(cum, need) + 1)
     m = min(m, cl.num_servers)
     selected = srv_order[:m]
-    srv_rank = {int(s): r for r, s in enumerate(selected)}
+    srv_rank = np.full(cl.num_servers, -1, dtype=np.int64)
+    srv_rank[selected] = np.arange(m)
 
     pool = np.flatnonzero(state.U + rho_nom / u <= theta + 1e-9)
-    pool = pool[np.isin(srv_of[pool], selected)]
+    pool = pool[srv_rank[srv_of[pool]] >= 0]
     if len(pool) < job.num_gpus:
         return None
-    ranks = np.asarray([srv_rank[int(srv_of[g])] for g in pool])
+    ranks = srv_rank[srv_of[pool]]
     order = np.lexsort((state.U[pool], ranks))   # server-major, then least U
     return pool[order][: job.num_gpus]
 
 
 def _attempt(cluster: Cluster, jobs_sorted: list[Job],
              rho_noms: dict[int, float], u: float, theta: float,
-             kappa: int) -> PlacementState | None:
+             kappa: int, engine: str | None = None,
+             hints: dict[int, np.ndarray] | None = None
+             ) -> PlacementState | None:
     """One (theta, kappa) pass of Alg. 1 lines 8-16."""
-    state = PlacementState(cluster)
+    state = PlacementState(cluster, engine=engine)
     for job in jobs_sorted:
         picker = fa_ffp if job.num_gpus <= kappa else lbsgf
-        if not try_place(state, job, picker, rho_noms[job.jid], u, theta):
+        hint = hints.get(job.jid) if hints else None
+        if not try_place(state, job, picker, rho_noms[job.jid], u, theta,
+                         hint=hint):
             return None
     return state
 
@@ -133,8 +137,14 @@ def sjf_bco_policy(request: ScheduleRequest) -> ScheduleResult:
       * ``kappas`` -- candidate small/large thresholds to sweep (batch
         only); defaults to the distinct job sizes, which is equivalent to
         the paper's 1..max_j G_j sweep.
+      * ``engine`` -- contention-model engine (see
+        :class:`~repro.core.api.PlacementState`).
+      * ``warm_start`` -- seed each theta's attempts with the placements
+        committed at the previous feasible theta (off by default; changes
+        the search trajectory, not the accounting).
     """
     cluster, u = request.cluster, request.u
+    engine = request.params.get("engine")
     if not request.is_batch:
         def choose(state: PlacementState, job: Job, theta: float) -> bool:
             return pick_best_finish(state, job, [fa_ffp, lbsgf],
@@ -152,10 +162,13 @@ def sjf_bco_policy(request: ScheduleRequest) -> ScheduleResult:
         if 1 not in kappas:
             kappas.insert(0, 1)
 
-    def attempt(theta: float) -> ScheduleResult | None:
+    def attempt(theta: float,
+                prev: ScheduleResult | None = None) -> ScheduleResult | None:
+        hints = dict(prev.assignment) if prev is not None else None
         best_theta: ScheduleResult | None = None
         for kappa in kappas:                                       # line 7
-            state = _attempt(cluster, jobs_sorted, rho_noms, u, theta, kappa)
+            state = _attempt(cluster, jobs_sorted, rho_noms, u, theta, kappa,
+                             engine=engine, hints=hints)
             if state is None:                                      # line 14
                 continue
             cand = finalize(state, len(jobs), theta, kappa, "SJF-BCO")
@@ -163,7 +176,8 @@ def sjf_bco_policy(request: ScheduleRequest) -> ScheduleResult:
                 best_theta = cand                                  # lines 17-18
         return best_theta
 
-    return bisect_theta(attempt, request.horizon, "SJF-BCO")
+    return bisect_theta(attempt, request.horizon, "SJF-BCO",
+                        warm_start=bool(request.params.get("warm_start")))
 
 
 def sjf_bco(cluster: Cluster, jobs: list[Job], horizon: int,

@@ -1,0 +1,15 @@
+"""Pallas-TPU version compatibility.
+
+``jax.experimental.pallas.tpu`` renamed ``TPUCompilerParams`` to
+``CompilerParams`` across jax releases.  Resolve whichever name this jax
+provides (preferring the new ``CompilerParams``) so the kernels build on
+either side of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _mlstm_kernel(q_ref, k_ref, v_ref, f_ref, fk_ref, i_ref, o_ref,
                   acc_ref, m_ref, den_ref, *, bq: int, bk: int, n_kv: int):
@@ -102,7 +104,7 @@ def mlstm_parallel(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, F, F, i_pre)   # F enters twice: q-row block and k-row block

@@ -1,0 +1,330 @@
+"""Equivalence tests for the batched / incremental contention engines.
+
+The acceptance bar is *bit-identity*: ``evaluate_many`` and
+``IncrementalEval`` must reproduce :func:`repro.core.contention.evaluate`
+exactly (same floats, same ints) on randomized placements, and every
+scheduling policy must emit the identical schedule (assignments and
+est_makespan) under all three engines.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (Cluster, IncrementalEval, Job, ScheduleRequest,
+                        contention_level, degradation, estimate_exec_time,
+                        eval_counts, evaluate, evaluate_many,
+                        evaluation_engine, get_policy, philly_cluster,
+                        philly_workload, predict_exec_time,
+                        reset_eval_counts, simulate, slots_for, tau_bounds)
+from repro.core.api import PlacementState
+from repro.core.contention import scalar_tau
+
+CL = Cluster(capacities=(4, 8, 4))
+
+
+def _job(jid, gpus, iters=1000, m=1.3e-3, M=32, dfw=3e-4, dbw=8e-3):
+    return Job(jid=jid, num_gpus=gpus, iters=iters, grad_size=m, batch=M,
+               dt_fwd=dfw, dt_bwd=dbw)
+
+
+def _random_jobs(rng, n):
+    return [_job(i, int(rng.choice([1, 2, 3, 4, 6, 8])),
+                 iters=int(rng.integers(500, 3000)),
+                 m=float(rng.uniform(0.5e-3, 2e-3)),
+                 M=int(rng.integers(16, 64)),
+                 dfw=float(rng.uniform(2e-4, 5e-4)),
+                 dbw=float(rng.uniform(4e-3, 1.2e-2))) for i in range(n)]
+
+
+def _random_placement(rng, job, n_servers):
+    """Random split of G_j across servers (capacity ignored, as in the
+    analytical-model tests: Eq. (2) is the schedulers' job)."""
+    y = np.zeros(n_servers, dtype=np.int64)
+    for _ in range(job.num_gpus):
+        y[rng.integers(n_servers)] += 1
+    return y
+
+
+def _assert_models_equal(a, b, idx=None):
+    """Exact (bitwise) equality of two IterModel slices."""
+    for field in ("p", "k", "bandwidth", "gamma", "exchange", "reduce",
+                  "compute", "tau", "phi"):
+        av, bv = getattr(a, field), getattr(b, field)
+        if idx is not None:
+            bv = bv[idx]
+        assert np.array_equal(av, bv), f"{field} differs"
+
+
+class TestEvaluateMany:
+    @pytest.mark.parametrize("seed", range(5))
+    def test_bit_identical_to_per_candidate_evaluate(self, seed):
+        rng = np.random.default_rng(seed)
+        J, C = int(rng.integers(1, 7)), int(rng.integers(1, 6))
+        jobs = _random_jobs(rng, J)
+        stack = np.stack([
+            np.stack([_random_placement(rng, j, CL.num_servers) for j in jobs])
+            for _ in range(C)])
+        many = evaluate_many(CL, jobs, stack)
+        assert many.tau.shape == (C, J)
+        for c in range(C):
+            _assert_models_equal(evaluate(CL, jobs, stack[c]), many, idx=c)
+
+    def test_active_mask_equals_row_omission(self):
+        rng = np.random.default_rng(7)
+        jobs = _random_jobs(rng, 5)
+        Y = np.stack([_random_placement(rng, j, CL.num_servers) for j in jobs])
+        active = np.array([[True, False, True, True, False]])
+        masked = evaluate_many(CL, jobs, Y[None, :, :], active=active)
+        sub = [jobs[i] for i in (0, 2, 3)]
+        direct = evaluate(CL, sub, Y[[0, 2, 3]])
+        # Active rows must match the model with the inactive rows omitted.
+        assert np.array_equal(masked.tau[0, [0, 2, 3]], direct.tau)
+        assert np.array_equal(masked.p[0, [0, 2, 3]], direct.p)
+
+    def test_rejects_bad_shapes_and_uncovered_placements(self):
+        jobs = [_job(0, 4)]
+        with pytest.raises(ValueError):
+            evaluate_many(CL, jobs, np.zeros((2, 1, CL.num_servers + 1),
+                                             dtype=np.int64))
+        with pytest.raises(ValueError):
+            evaluate_many(CL, jobs, np.zeros((1, 1, CL.num_servers),
+                                             dtype=np.int64))
+
+
+class TestIncrementalEval:
+    @pytest.mark.parametrize("seed", range(5))
+    def test_add_remove_sequence_matches_evaluate(self, seed):
+        rng = np.random.default_rng(100 + seed)
+        jobs = _random_jobs(rng, 12)
+        inc = IncrementalEval(CL, capacity=4)   # force growth too
+        live: list[tuple[int, Job, np.ndarray]] = []
+        for step in range(40):
+            if live and rng.random() < 0.4:
+                row, _, _ = live.pop(int(rng.integers(len(live))))
+                inc.remove(row)
+            else:
+                job = jobs[int(rng.integers(len(jobs)))]
+                y = _random_placement(rng, job, CL.num_servers)
+                live.append((inc.add(job, y), job, y))
+            if not live:
+                continue
+            rows = [r for r, _, _ in live]
+            sub_jobs = [dataclasses.replace(j, jid=i)
+                        for i, (_, j, _) in enumerate(live)]
+            Y = np.stack([y for _, _, y in live])
+            _assert_models_equal(inc.model(rows), evaluate(CL, sub_jobs, Y))
+
+    def test_probe_is_read_only_and_exact(self):
+        rng = np.random.default_rng(3)
+        jobs = _random_jobs(rng, 6)
+        inc = IncrementalEval(CL)
+        rows, ys = [], []
+        for job in jobs[:-1]:
+            y = _random_placement(rng, job, CL.num_servers)
+            rows.append(inc.add(job, y))
+            ys.append(y)
+        probe = jobs[-1]
+        y_p = _random_placement(rng, probe, CL.num_servers)
+        before = inc.model(rows)
+        tau = inc.probe_tau(probe, y_p)
+        _assert_models_equal(before, inc.model(rows))   # no mutation
+        full = evaluate(CL, jobs[:-1] + [probe], np.stack(ys + [y_p]))
+        assert tau == full.tau[-1]
+
+    def test_scalar_tau_matches_evaluate(self):
+        job = _job(0, 4)
+        for y in ([4, 0, 0], [2, 2, 0], [1, 1, 2]):
+            y = np.asarray(y)
+            model = evaluate(CL, [job], y[None, :])
+            p = int(contention_level(y[None, :],
+                                     np.array([job.num_gpus]))[0])
+            assert scalar_tau(CL, job, p, int((y > 0).sum())) == model.tau[0]
+
+
+def _philly_request(n_servers=12, seed=3, engine=None, **params):
+    cluster = philly_cluster(n_servers, seed=seed)
+    mix = ((1, 12), (2, 4), (4, 6), (8, 4), (16, 2))
+    jobs = philly_workload(seed=seed, mix=mix)
+    if engine is not None:
+        params["engine"] = engine
+    return cluster, jobs, ScheduleRequest(cluster=cluster, jobs=jobs,
+                                          horizon=1200, params=params)
+
+
+class TestScheduleEquivalence:
+    @pytest.mark.parametrize("policy", ["sjf-bco", "sjf-bco-adaptive",
+                                        "ff", "ls", "rand"])
+    def test_schedules_identical_across_engines(self, policy):
+        results = {}
+        for engine in ("reference", "incremental", "batched"):
+            _, _, request = _philly_request(engine=engine)
+            results[engine] = get_policy(policy)(request)
+        ref = results["reference"]
+        for engine in ("incremental", "batched"):
+            other = results[engine]
+            assert other.est_makespan == ref.est_makespan
+            assert other.max_busy_time == ref.max_busy_time
+            assert len(other.assignment) == len(ref.assignment)
+            for (j1, g1), (j2, g2) in zip(ref.assignment, other.assignment):
+                assert j1 == j2 and np.array_equal(g1, g2), \
+                    f"{policy}/{engine}: job {j1} placement differs"
+
+    def test_default_engine_context(self):
+        # evaluation_engine() switches the module default used when no
+        # explicit engine param is given.
+        _, _, request = _philly_request()
+        with evaluation_engine("reference"):
+            reset_eval_counts()
+            get_policy("ff")(request)
+            assert eval_counts()["full"] > 0
+            assert eval_counts()["probes"] == 0
+        with evaluation_engine("incremental"):
+            reset_eval_counts()
+            get_policy("ff")(request)
+            assert eval_counts()["full"] == 0
+            assert eval_counts()["probes"] > 0
+
+    def test_online_arrivals_identical_across_engines(self):
+        cluster = philly_cluster(10, seed=5)
+        jobs = philly_workload(seed=5, mix=((1, 8), (2, 4), (4, 4)))
+        arrivals = np.random.default_rng(5).integers(0, 60, size=len(jobs))
+        results = {}
+        for engine in ("reference", "incremental", "batched"):
+            request = ScheduleRequest(cluster=cluster, jobs=jobs,
+                                      arrivals=arrivals, horizon=2400,
+                                      params={"engine": engine})
+            results[engine] = get_policy("sjf-bco")(request)
+        ref = results["reference"]
+        for engine in ("incremental", "batched"):
+            assert results[engine].est_makespan == ref.est_makespan
+            for (j1, g1), (j2, g2) in zip(ref.assignment,
+                                          results[engine].assignment):
+                assert j1 == j2 and np.array_equal(g1, g2)
+
+
+class TestSimulatorEquivalence:
+    def test_simulation_identical_across_engines(self):
+        cluster, jobs, request = _philly_request(engine="incremental")
+        sched = get_policy("sjf-bco")(request)
+        ref = simulate(cluster, jobs, sched.assignment, engine="reference")
+        inc = simulate(cluster, jobs, sched.assignment, engine="incremental")
+        assert ref.makespan == inc.makespan
+        assert np.array_equal(ref.start, inc.start)
+        assert np.array_equal(ref.finish, inc.finish)
+        assert ref.peak_contention == inc.peak_contention
+        assert ref.busy_gpu_slots == inc.busy_gpu_slots
+        assert ref.events == inc.events
+
+    def test_incremental_simulation_runs_no_full_evals(self):
+        cluster, jobs, request = _philly_request(engine="incremental")
+        sched = get_policy("sjf-bco")(request)
+        reset_eval_counts()
+        simulate(cluster, jobs, sched.assignment, engine="incremental")
+        counts = eval_counts()
+        assert counts["full"] == 0
+        assert counts["incremental_updates"] > 0
+
+
+class TestWarmStart:
+    def test_warm_start_schedule_is_valid(self):
+        cluster, jobs, request = _philly_request(warm_start=True)
+        sched = get_policy("sjf-bco")(request)
+        seen = set()
+        for j, gpus in sched.assignment:
+            assert len(gpus) == jobs[j].num_gpus
+            assert len(np.unique(gpus)) == len(gpus)
+            seen.add(j)
+        assert seen == set(range(len(jobs)))
+        sim = simulate(cluster, jobs, sched.assignment)
+        assert sim.completed == len(jobs)
+
+    def test_warm_start_baselines_valid(self):
+        cluster, jobs, request = _philly_request(warm_start=True)
+        for policy in ("ff", "ls"):
+            sched = get_policy(policy)(request)
+            assert {j for j, _ in sched.assignment} == set(range(len(jobs)))
+
+
+class TestEstimateHelpers:
+    """The satellite bugfixes: dedupe + tau_bounds scalar handling."""
+
+    def test_refined_rho_routes_through_predict_exec_time(self):
+        # With no placed jobs and an empty-cluster snapshot, refined_rho,
+        # estimate_exec_time and predict_exec_time are the same number for
+        # every engine.
+        job = _job(0, 4)
+        y = np.array([2, 2, 0])
+        empty_Y = np.zeros((0, CL.num_servers), dtype=np.int64)
+        expected = predict_exec_time(CL, job, [], empty_Y, y)
+        assert estimate_exec_time(CL, job, empty_Y, [], y) == expected
+        for engine in ("reference", "incremental", "batched"):
+            state = PlacementState(CL, engine=engine)
+            gpus = np.array([0, 1, 4, 5])   # 2 GPUs on server 0, 2 on 1
+            rho, start = state.refined_rho(job, gpus)
+            assert (rho, start) == (expected, 0.0)
+
+    def test_slots_for_clamps_phi(self):
+        assert slots_for(1000, 0.01) == 10.0     # phi = 100
+        assert slots_for(1000, 2.0) == 1000.0    # tau > 1 slot: phi clamps to 1
+        assert slots_for(1, 0.3) == 1.0
+
+    def test_degradation_accepts_scalars(self):
+        out = degradation(0.3, 2.0)
+        assert isinstance(out, float)
+        assert out == pytest.approx(2.0 + 0.3 * 1.0)
+        # 0-d arrays also come back as plain floats now.
+        assert isinstance(degradation(0.3, np.float64(2.0)), float)
+        # array inputs still return arrays
+        arr = degradation(0.3, np.array([1.0, 2.0]))
+        assert isinstance(arr, np.ndarray)
+        # clamp below one contender
+        assert degradation(0.3, 0.5) == pytest.approx(1.0)
+
+    def test_tau_bounds_pinned_hand_computed(self):
+        cluster = Cluster(capacities=(4, 4), b_intra=300.0, b_inter=1.25,
+                          gpu_speed=50.0, xi1=0.7, xi2=0.002, alpha=0.3)
+        job = Job(jid=0, num_gpus=4, iters=1000, grad_size=2e-3, batch=32,
+                  dt_fwd=3e-4, dt_bwd=8e-3)
+        share = (2e-3 / 4) * 3                      # m(w-1)/w = 1.5e-3
+        compute = 3e-4 * 32 + 8e-3                  # 0.0176
+        lo, hi = tau_bounds(cluster, job)
+        # lower: intra bandwidth, one server
+        expect_lo = 2 * share / 300.0 + share / 50.0 + 0.002 + compute
+        assert lo == pytest.approx(expect_lo)
+        assert lo == pytest.approx(0.019640, abs=1e-6)
+        # upper: inter bandwidth degraded at k_max = xi1 * max O_s = 2.8,
+        # f = k + alpha (k - 1) = 2.8 + 0.3 * 1.8 = 3.34, spread over
+        # min(w, S) = 2 servers.
+        k_max = 0.7 * 4
+        f = k_max + 0.3 * (k_max - 1.0)
+        expect_hi = 2 * share / (1.25 / f) + share / 50.0 + 0.002 * 2 + compute
+        assert hi == pytest.approx(expect_hi)
+        assert hi == pytest.approx(0.029646, abs=1e-6)
+        assert lo < hi
+
+    def test_tau_bounds_single_gpu_job(self):
+        job = Job(jid=0, num_gpus=1, iters=100, grad_size=1e-3, batch=16,
+                  dt_fwd=3e-4, dt_bwd=8e-3)
+        lo, hi = tau_bounds(CL, job)
+        compute = 3e-4 * 16 + 8e-3
+        assert lo == pytest.approx(CL.xi2 + compute)   # no exchange terms
+        assert hi == pytest.approx(CL.xi2 * 1.0 + compute)
+
+
+class TestCounters:
+    def test_counters_track_engines(self):
+        rng = np.random.default_rng(0)
+        jobs = _random_jobs(rng, 3)
+        Y = np.stack([_random_placement(rng, j, CL.num_servers)
+                      for j in jobs])
+        reset_eval_counts()
+        evaluate(CL, jobs, Y)
+        assert eval_counts()["full"] == 1
+        evaluate_many(CL, jobs, np.stack([Y, Y]))
+        counts = eval_counts()
+        assert counts["batched_calls"] == 1 and counts["batched_rows"] == 2
+        inc = IncrementalEval(CL)
+        row = inc.add(jobs[0], Y[0])
+        inc.remove(row)
+        assert eval_counts()["incremental_updates"] == 2

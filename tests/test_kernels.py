@@ -7,7 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytestmark = pytest.mark.gpu   # Pallas kernels; deselected on CPU CI runners
+# These run in Pallas interpret mode on CPU (the kernels default to
+# interpret=True off-accelerator), so no `gpu` marker: CI runs them.
 
 from repro.kernels import ref
 from repro.kernels import ops

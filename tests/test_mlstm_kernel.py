@@ -4,7 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytestmark = pytest.mark.gpu   # Pallas kernels; deselected on CPU CI runners
+# Runs in Pallas interpret mode on CPU (mlstm_parallel defaults to
+# interpret=True off-accelerator), so no `gpu` marker: CI runs it.
 
 from repro.kernels import ref
 from repro.kernels.mlstm import mlstm_parallel
