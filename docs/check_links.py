@@ -1,0 +1,56 @@
+"""Markdown link checker for the docs gate (CI `docs` job).
+
+Scans the given markdown files (default: README.md + docs/*.md) for
+relative links/images and fails when a target file does not exist in the
+repo.  External (http/https/mailto) links and pure #anchors are skipped —
+the gate is about the repo not drifting, not about the internet.
+
+Usage:  python docs/check_links.py [file.md ...]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check(md: pathlib.Path) -> list[str]:
+    """Broken-link messages for one markdown file (empty = clean)."""
+    errors = []
+    for n, line in enumerate(md.read_text().splitlines(), 1):
+        for target in LINK_RE.findall(line):
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(REPO)}:{n}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    """Check argv paths (or the default doc set); exit code: 0 when clean,
+    1 when any link is broken."""
+    files = ([pathlib.Path(a) for a in argv] if argv else
+             [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))])
+    errors = []
+    for md in files:
+        if not md.exists():
+            errors.append(f"missing file: {md}")
+            continue
+        errors.extend(check(md))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"[check_links] {len(files)} files, {len(errors)} broken links")
+    return min(len(errors), 1)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -41,7 +41,8 @@ print("\n4) train a reduced llama3.2-1b (a real RAR-schedulable job)")
 try:
     from repro.dist.steps import make_train_step
 except ImportError:
-    print("   (skipped: repro.dist training substrate not present)")
+    print("   (skipped: repro.dist unavailable in this environment — see "
+          "docs/ARCHITECTURE.md §repro.dist for the substrate layout)")
     print("\nquickstart OK (scheduling)")
     raise SystemExit(0)
 from repro.configs import get_config

@@ -11,7 +11,12 @@ Run:  PYTHONPATH=src python examples/rar_cluster_training.py
 """
 import os
 
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+# CPU-runnable: force 4 host devices so the ring collectives are real.
+# Appends to (rather than clobbers) any XLA_FLAGS already in the env.
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4"
+                               ).strip()
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +29,7 @@ try:
     from repro.dist.steps import make_rar_train_step
 except ImportError:
     raise SystemExit("rar_cluster_training needs the repro.dist training "
-                     "substrate (not present in this checkout)")
+                     "substrate (see docs/ARCHITECTURE.md §repro.dist)")
 from repro.configs import get_config
 from repro.data import DataConfig, make_batch
 from repro.models import build_model

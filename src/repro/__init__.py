@@ -1,0 +1,16 @@
+"""Reproduction package for "On Scheduling Ring-All-Reduce Learning Jobs
+in Multi-Tenant GPU Clusters with Communication Contention".
+
+Subpackages:
+
+* ``repro.core``    -- contention model, policy registry, simulator, theory
+* ``repro.dist``    -- RAR collectives, sharding rules, train/serve steps
+* ``repro.models``  -- the 10 assigned architectures (6 families)
+* ``repro.kernels`` -- Pallas TPU kernels (interpret mode on CPU)
+* ``repro.launch``  -- dry-run / train / serve / scheduler-launch drivers
+
+Importing ``repro`` (or any submodule) applies the jax forward-compat
+shims in :mod:`repro._compat` so the whole tree is written once against
+the modern ``jax.shard_map`` / ``jax.set_mesh`` surface.
+"""
+from repro import _compat as _compat  # noqa: F401  (applies jax shims)

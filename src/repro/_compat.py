@@ -1,0 +1,75 @@
+"""Forward-compat shims for the jax API surface this repo targets.
+
+The substrate and its tests are written against the modern spelling
+(``jax.shard_map``, ``jax.set_mesh``, ``jax.sharding.get_abstract_mesh``,
+``jax.lax.axis_size``); the container pins an older jax where those names
+live elsewhere or do not exist.  Importing :mod:`repro` backfills each
+missing name onto jax — the same pattern as :mod:`repro.kernels.compat`
+for the ``pltpu.CompilerParams`` rename.  Every shim is guarded with
+``hasattr``, so on a jax that already provides the name this module is a
+no-op and the native implementation wins.
+
+When jax is not installed at all (the numpy-only scheduler-core install:
+``pip install rar-sched`` without the ``[jax]`` extra), this module is a
+silent no-op so ``repro.core`` keeps working.
+"""
+from __future__ import annotations
+
+import contextlib
+
+try:
+    import jax
+    import jax.sharding
+except ImportError:                       # numpy-only install
+    jax = None
+
+
+def _active_mesh():
+    """The mesh made ambient by ``with mesh:`` / ``jax.set_mesh`` (or None)."""
+    try:
+        from jax._src.mesh import thread_resources
+        mesh = thread_resources.env.physical_mesh
+        return None if mesh.empty else mesh
+    except Exception:  # pragma: no cover - internal layout drift
+        return None
+
+
+def _apply_shims() -> None:
+    """Backfill the missing modern names onto the imported jax."""
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        jax.shard_map = _shard_map
+
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        def _get_abstract_mesh():
+            """Old-jax stand-in: the context mesh doubles as the abstract
+            mesh (same ``axis_names`` / ``shape`` surface the in-model
+            sharding hints consult)."""
+            return _active_mesh()
+
+        jax.sharding.get_abstract_mesh = _get_abstract_mesh
+
+    if not hasattr(jax, "set_mesh"):
+        @contextlib.contextmanager
+        def _set_mesh(mesh):
+            """Context manager making ``mesh`` ambient, so bare
+            ``PartitionSpec`` sharding constraints (and
+            :func:`get_abstract_mesh`) resolve."""
+            with mesh:
+                yield mesh
+
+        jax.set_mesh = _set_mesh
+
+    if not hasattr(jax.lax, "axis_size"):
+        def _axis_size(axis_name) -> int:
+            """Static size of a named mapped axis (shard_map/pmap body)."""
+            import jax.core as jcore
+
+            return int(jcore.axis_frame(axis_name))
+
+        jax.lax.axis_size = _axis_size
+
+
+if jax is not None:
+    _apply_shims()

@@ -114,6 +114,7 @@ class ScheduleRequest:
         return self.arrivals is None or not np.any(self.arrivals > 0)
 
     def arrival_of(self, job: Job) -> int:
+        """Arrival slot of ``job`` (0 in the batch setting)."""
         if self.arrivals is None:
             return 0
         return int(self.arrivals[self.jobs.index(job)])
@@ -180,6 +181,7 @@ def register_policy(name: str, *aliases: str
     """Decorator: make ``fn`` available as ``get_policy(name)``."""
 
     def deco(fn: SchedulingPolicy) -> SchedulingPolicy:
+        """Register ``fn`` under ``name`` and every alias."""
         for key in (name, *aliases):
             key = key.lower()        # lookups lowercase too
             if key in _REGISTRY and _REGISTRY[key] is not fn:
@@ -341,6 +343,8 @@ class PlacementState:
 
     def commit(self, job: Job, gpus: np.ndarray, rho: float, start: float,
                u: float) -> None:
+        """Charge ``rho / u`` to the chosen GPUs and record the placement
+        (Eq. 15 accounting + the rho-hat snapshot)."""
         self.U[gpus] += rho / u
         self.R[gpus] = start + rho
         self.assignment.append((job.jid, gpus))

@@ -57,6 +57,7 @@ EVAL_COUNTS = {
 
 
 def reset_eval_counts() -> None:
+    """Zero the per-engine full-model-evaluation counters."""
     for key in EVAL_COUNTS:
         EVAL_COUNTS[key] = 0
 
@@ -376,6 +377,7 @@ class IncrementalEval:
         self._phi[upd] = np.floor(1.0 / tau).astype(np.int64)
 
     def tau_of(self, row: int) -> float:
+        """Current Eq. (8) tau of a live row."""
         if not self._live[row]:
             raise KeyError(f"row {row} is not live")
         return float(self._tau[row])

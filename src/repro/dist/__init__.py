@@ -1,0 +1,25 @@
+"""Distributed RAR training substrate (paper §3 made executable).
+
+* :mod:`repro.dist.rar`      — ring collectives on ``jax.lax.ppermute``
+  (the Share-Reduce / Share-Only phases of Fig. 1) + the §3 exchange-volume
+  formula;
+* :mod:`repro.dist.sharding` — mesh/PartitionSpec rules for the pjit path
+  (params/batch/cache specs consumed by ``launch/dryrun.py``);
+* :mod:`repro.dist.steps`    — train/serve step factories, including the
+  explicit RAR data-parallel step the scheduler launcher executes on each
+  placement.
+"""
+from repro.dist.rar import (exchange_bytes_per_worker, ring_all_gather,
+                            ring_all_reduce, ring_reduce_scatter)
+from repro.dist.steps import (make_rar_train_step, make_serve_step,
+                              make_train_step)
+
+__all__ = [
+    "exchange_bytes_per_worker",
+    "ring_all_gather",
+    "ring_all_reduce",
+    "ring_reduce_scatter",
+    "make_rar_train_step",
+    "make_serve_step",
+    "make_train_step",
+]

@@ -1,0 +1,171 @@
+"""Mesh / PartitionSpec rules for the pjit (GSPMD) production path.
+
+The launch drivers lower every (arch x input-shape) pair against the
+production meshes (``launch/mesh.py``) using three declarative rule sets:
+
+* :func:`param_specs`  — params and optimizer moments: tensor-parallel over
+  ``"model"`` on the largest divisible dim, then ZeRO-3-style over
+  ``"data"`` on the largest remaining divisible dim (moments shard exactly
+  like their params, which is what fits the per-chip HBM budget);
+* :func:`batch_specs`  — inputs: leading (batch) dim over the data-parallel
+  axes ``("pod", "data")``;
+* :func:`cache_specs`  — decode caches: batch dim over the data axes, KV
+  heads (or, for ``seq_shard`` long-context serving, the slot axis) over
+  ``"model"``.
+
+Every rule only applies an axis when it exists in the mesh and divides the
+dim, so the same code serves the 512-chip dry-run and a 2-device host mesh.
+``REPRO_NAIVE_SHARDING=1`` drops param/cache sharding to fully replicated —
+the baseline the dry-run compares against.  :func:`named` converts a spec
+pytree into :class:`~jax.sharding.NamedSharding` leaves for ``jax.jit``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+BATCH_AXES = ("pod", "data")
+MODEL_AXIS = "model"
+ZERO_AXIS = "data"          # ZeRO-3 shards params/moments over "data" only:
+                            # "pod" crosses DCN, too slow for weight gathers
+
+
+def _is_spec(x: Any) -> bool:
+    return isinstance(x, P)
+
+
+def _naive() -> bool:
+    return bool(os.environ.get("REPRO_NAIVE_SHARDING"))
+
+
+def _axis_sizes(mesh) -> dict[str, int]:
+    return {name: int(size) for name, size in
+            zip(mesh.axis_names, mesh.devices.shape)}
+
+
+def _largest_divisible(shape, size: int, used: set[int]) -> int | None:
+    """Index of the largest dim divisible by ``size`` (ties -> first),
+    excluding ``used``; None when nothing qualifies or ``size`` is 1."""
+    if size <= 1:
+        return None
+    best, best_dim = None, 0
+    for i, d in enumerate(shape):
+        if i in used or d % size != 0 or d < size:
+            continue
+        if d > best_dim:
+            best, best_dim = i, d
+    return best
+
+
+def leaf_spec(shape, mesh) -> P:
+    """Model-then-ZeRO spec for one parameter/moment leaf."""
+    sizes = _axis_sizes(mesh)
+    spec: list = [None] * len(shape)
+    used: set[int] = set()
+    mi = _largest_divisible(shape, sizes.get(MODEL_AXIS, 1), used)
+    if mi is not None:
+        spec[mi] = MODEL_AXIS
+        used.add(mi)
+    zi = _largest_divisible(shape, sizes.get(ZERO_AXIS, 1), used)
+    if zi is not None:
+        spec[zi] = ZERO_AXIS
+    return P(*spec)
+
+
+def param_specs(tree: Any, mesh, cfg=None) -> Any:
+    """PartitionSpec pytree for a params / optimizer-state pytree.
+
+    ``cfg`` is accepted for future per-arch overrides; the current rules
+    are purely shape-driven.  Under ``REPRO_NAIVE_SHARDING`` everything is
+    replicated (the dry-run baseline).
+    """
+    del cfg
+    if _naive():
+        return jax.tree.map(lambda leaf: P(), tree)
+    return jax.tree.map(lambda leaf: leaf_spec(leaf.shape, mesh), tree)
+
+
+def _batch_axes_for(dim: int, mesh) -> tuple[str, ...]:
+    """The prefix of ("pod", "data") present in the mesh whose product
+    divides ``dim`` (the largest usable data-parallel group)."""
+    sizes = _axis_sizes(mesh)
+    axes = [a for a in BATCH_AXES if sizes.get(a, 1) > 1]
+    while axes:
+        prod = 1
+        for a in axes:
+            prod *= sizes[a]
+        if prod <= dim and dim % prod == 0:
+            return tuple(axes)
+        axes.pop(0)          # drop "pod" first: keep intra-pod parallelism
+    return ()
+
+
+def batch_specs(tree: Any, mesh) -> Any:
+    """Shard the leading (global-batch) dim of every input leaf over the
+    data-parallel axes.  Works for train/prefill batch dicts and for the
+    decode ``{"tok": [B], "pos": [B]}`` pair alike."""
+
+    def spec(leaf):
+        """Batch-dim spec for one input leaf."""
+        axes = _batch_axes_for(leaf.shape[0], mesh) if leaf.ndim else ()
+        if not axes:
+            return P()
+        first = axes if len(axes) > 1 else axes[0]
+        return P(first, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(spec, tree)
+
+
+def _cache_leaf_spec(shape, mesh, *, seq_shard: bool) -> P:
+    """Spec for one stacked decode-cache leaf ``[L, B, ...rest]``.
+
+    dim 0 is the scanned layer axis (never sharded), dim 1 the batch; for
+    KV-shaped leaves dim 2 is the slot axis and dim 3 the KV heads.  The
+    ``"model"`` axis goes on the slot axis when ``seq_shard`` (long-context
+    rolling windows) else on the heads when they divide.
+    """
+    sizes = _axis_sizes(mesh)
+    spec: list = [None] * len(shape)
+    if len(shape) >= 2:
+        axes = _batch_axes_for(shape[1], mesh)
+        if axes:
+            spec[1] = axes if len(axes) > 1 else axes[0]
+    ms = sizes.get(MODEL_AXIS, 1)
+    if ms > 1:
+        if seq_shard and len(shape) >= 3 and shape[2] % ms == 0:
+            spec[2] = MODEL_AXIS
+        elif len(shape) >= 4 and shape[3] % ms == 0 and shape[3] >= ms:
+            spec[3] = MODEL_AXIS
+    return P(*spec)
+
+
+def cache_specs(cache: Any, mesh, *, seq_shard: bool = False) -> Any:
+    """PartitionSpec pytree for a ``Model.init_cache`` pytree.
+
+    Handles the stacked-layer subtrees (``"kv"``, ``"kv_dense"``, ``"ssm"``)
+    and the unstacked audio ``"enc_out"`` ``[B, frames, d]`` buffer.
+    """
+    if _naive():
+        return jax.tree.map(lambda leaf: P(), cache)
+
+    out = {}
+    for key, sub in cache.items():
+        if key == "enc_out":
+            axes = _batch_axes_for(sub.shape[0], mesh)
+            first = axes if len(axes) > 1 else (axes[0] if axes else None)
+            out[key] = P(first, *([None] * (sub.ndim - 1)))
+        else:
+            out[key] = jax.tree.map(
+                lambda leaf: _cache_leaf_spec(leaf.shape, mesh,
+                                              seq_shard=seq_shard), sub)
+    return out
+
+
+def named(spec_tree: Any, mesh) -> Any:
+    """Convert a PartitionSpec pytree into NamedSharding leaves on ``mesh``
+    (the form ``jax.jit``'s in/out_shardings consume)."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=_is_spec)

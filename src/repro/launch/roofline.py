@@ -90,8 +90,11 @@ def _crosses_pod(line: str, pod_size: int) -> bool:
 
 
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+# the while operand may be a bare name or carry the full printed tuple
+# type (XLA version dependent) — match non-greedily up to "), condition="
 _WHILE_RE = re.compile(
-    r"while\([^)]*\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+    r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_KNOWN_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w\.\-]+)")
 _CONST_RE = re.compile(r"constant\((\d+)\)")
 
@@ -140,7 +143,11 @@ def _multipliers(comps: dict[str, str]) -> dict[str, int]:
         m_cur = mult.get(cur, 1)
         for wm in _WHILE_RE.finditer(body):
             cond, wbody = wm.group(1), wm.group(2)
-            trip = _trip_count(comps.get(cond, ""))
+            # prefer XLA's own annotation; fall back to the cond heuristic
+            line_end = body.find("\n", wm.end())
+            tm = _KNOWN_TRIP_RE.search(
+                body[wm.end(): line_end if line_end != -1 else len(body)])
+            trip = int(tm.group(1)) if tm else _trip_count(comps.get(cond, ""))
             for child in (cond, wbody):
                 mult[child] = max(mult.get(child, 0), m_cur * trip)
                 if child not in seen:
@@ -156,8 +163,13 @@ def _multipliers(comps: dict[str, str]) -> dict[str, int]:
 
 
 _SHAPE_RE = re.compile(r"%([\w\.\-]+)\s*=\s*([a-z0-9]+)\[([\d,]*)\]")
+# optional "f32[64,64]{1,0} " operand-type prefix: some XLA versions print
+# typed operands ("dot(f32[..] %a, ..)"), others bare names ("dot(%a, ..)")
+_TYPE_PREFIX = r"(?:[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?\s+)?"
 _DOT_RE = re.compile(
-    r"=\s*([a-z0-9]+)\[([\d,]*)\][^=]*?\bdot\(%([\w\.\-]+),",)
+    r"=\s*([a-z0-9]+)\[([\d,]*)\][^=]*?\bdot\(" + _TYPE_PREFIX +
+    r"%([\w\.\-]+),")
+_OPND_RE = re.compile(r"[(,]\s*" + _TYPE_PREFIX + r"%([\w\.\-]+)")
 _LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]+)\}")
 
 
@@ -166,7 +178,8 @@ def _dims(s: str) -> list[int]:
 
 
 _GTE_RE = re.compile(
-    r"%([\w\.\-]+)\s*=\s*[^=]*get-tuple-element\(%([\w\.\-]+)\),\s*index=(\d+)")
+    r"%([\w\.\-]+)\s*=\s*[^=]*get-tuple-element\((?:\([^)]*\)\s*)?"
+    r"%([\w\.\-]+)\),\s*index=(\d+)")
 _ROOT_TUPLE_RE = re.compile(r"ROOT\s+%[\w\.\-]+\s*=\s*\([^=]*tuple\(([^)]*)\)")
 
 
@@ -183,7 +196,9 @@ def _invariant_names(body: str) -> set[str]:
     rm = _ROOT_TUPLE_RE.search(body)
     if not rm:
         return set()
-    operands = [o.strip().lstrip("%") for o in rm.group(1).split(",")]
+    # operands may be typed ("f32[8,8]{1,0} %w") or bare ("%w")
+    operands = [o.strip().split()[-1].lstrip("%")
+                for o in rm.group(1).split(",") if o.strip()]
     inv = set()
     for idx, name in gtes.items():
         if idx < len(operands) and operands[idx] == name:
@@ -244,7 +259,7 @@ def loop_cost_correction(hlo_text: str) -> tuple[float, float]:
                         if "dynamic-update-slice" in line:
                             # in-place slice write: charge the update slice,
                             # not the whole buffer (operands also skipped)
-                            upd = re.findall(r"[(,]\s*%([\w\.\-]+)", line)
+                            upd = _OPND_RE.findall(line)
                             out_b = 0
                             if len(upd) >= 2 and upd[1] in shapes:
                                 udt, udd = shapes[upd[1]]
@@ -256,7 +271,7 @@ def loop_cost_correction(hlo_text: str) -> tuple[float, float]:
                             continue
                         opnd_b = 0
                         is_fusion = "fusion(" in line
-                        for opname in re.findall(r"[(,]\s*%([\w\.\-]+)", line):
+                        for opname in _OPND_RE.findall(line):
                             if opname in invariant:
                                 continue
                             if opname in shapes:
@@ -305,7 +320,7 @@ def bytes_breakdown(hlo_text: str, top: int = 15) -> list[dict]:
                 n *= d
             total = n * _DTYPE_BYTES[dt]
             if "dynamic-update-slice" in line:
-                upd = re.findall(r"[(,]\s*%([\w\.\-]+)", line)
+                upd = _OPND_RE.findall(line)
                 total = 0
                 if len(upd) >= 2 and upd[1] in shapes:
                     udt, udd = shapes[upd[1]]
@@ -319,7 +334,7 @@ def bytes_breakdown(hlo_text: str, top: int = 15) -> list[dict]:
                 continue
             out_b0 = total
             is_fusion = "fusion(" in line
-            for opname in re.findall(r"[(,]\s*%([\w\.\-]+)", line):
+            for opname in _OPND_RE.findall(line):
                 if opname in invariant or opname not in shapes:
                     continue
                 odt, odd = shapes[opname]

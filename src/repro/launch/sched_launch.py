@@ -91,8 +91,9 @@ def main() -> None:
                   f"w={len(gpu_ids)}) -> devices {list(map(int, gpu_ids))} "
                   f"(servers {srvs}) [start slot {sim.start[j]}, "
                   f"finish {sim.finish[j]}]")
-        print("[sched] repro.dist training substrate not present; "
-              "placements shown but not executed")
+        print("[sched] repro.dist unavailable in this environment; "
+              "placements shown but not executed (see docs/ARCHITECTURE.md "
+              "§repro.dist for what the substrate provides)")
         return
 
     # --- execute each job on its assigned device slice ---------------------

@@ -1,0 +1,153 @@
+"""Edge cases beyond tests/test_rar.py: the w=1 degenerate ring, the §3
+exchange-volume formula at its boundaries, non-divisible tensor sizes
+through the ring_reduce_scatter zero-padding, and non-power-of-two rings.
+
+Multi-device cases run in subprocesses (same pattern as test_rar.py) so
+the forced host-device count never leaks into other tests."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+pytest.importorskip("repro.dist", reason="distributed substrate not present")
+from repro.dist.rar import exchange_bytes_per_worker
+
+
+def _run(code: str, devices: int) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert out.returncode == 0, out.stderr
+    return out.stdout
+
+
+class TestExchangeVolumeEdges:
+    def test_degenerate_single_worker_ring_is_free(self):
+        """w=1: no neighbours, no exchange — exactly 0 bytes."""
+        assert exchange_bytes_per_worker(1.0e9, 1) == 0.0
+
+    def test_invalid_ring_width_rejected(self):
+        with pytest.raises(ValueError):
+            exchange_bytes_per_worker(1.0, 0)
+        with pytest.raises(ValueError):
+            exchange_bytes_per_worker(1.0, -3)
+
+    @pytest.mark.parametrize("w", [2, 3, 5, 8, 64, 1024])
+    def test_closed_form(self, w):
+        d = 3.5e8
+        assert exchange_bytes_per_worker(d, w) == pytest.approx(
+            2.0 * d * (w - 1) / w)
+
+    def test_monotone_in_w_and_bounded(self):
+        d = 1.0
+        vols = [exchange_bytes_per_worker(d, w) for w in range(1, 200)]
+        assert all(b > a for a, b in zip(vols, vols[1:]))   # strictly up
+        assert all(v < 2 * d for v in vols)                 # sup = 2d
+
+    def test_zero_gradient(self):
+        assert exchange_bytes_per_worker(0.0, 8) == 0.0
+
+
+class TestDegenerateRingCollectives:
+    def test_w1_ring_is_identity(self):
+        """A 1-worker ring must not emit any collective-permute and must
+        return the input unchanged (reduce over one contributor)."""
+        out = _run("""
+            import jax, jax.numpy as jnp, numpy as np
+            from jax.sharding import PartitionSpec as P
+            from repro.dist.rar import ring_all_reduce
+            mesh = jax.make_mesh((1,), ("data",))
+            x = jnp.arange(7, dtype=jnp.float32)[None]
+            f = jax.jit(jax.shard_map(lambda x: ring_all_reduce(x, "data"),
+                mesh=mesh, in_specs=P("data"), out_specs=P("data")))
+            np.testing.assert_array_equal(np.asarray(f(x)), np.asarray(x))
+            txt = f.lower(x).compile().as_text()
+            print("PERMUTES", txt.count("collective-permute("))
+        """, devices=1)
+        assert "PERMUTES 0" in out
+
+
+class TestPaddingNonDivisible:
+    @pytest.mark.parametrize("n", [10, 37, 129])
+    def test_all_reduce_matches_psum_when_w_does_not_divide(self, n):
+        """ring sizes that do NOT divide the tensor exercise the zero-pad
+        path of ring_reduce_scatter; the result must still equal psum."""
+        out = _run(f"""
+            import jax, jax.numpy as jnp
+            from jax.sharding import PartitionSpec as P
+            from repro.dist.rar import ring_all_reduce
+            mesh = jax.make_mesh((4,), ("data",))
+            x = jnp.arange(4 * {n}, dtype=jnp.float32).reshape(4, {n})
+            def g(x):
+                return jax.lax.psum(x, "data") - ring_all_reduce(x, "data")
+            d = jax.jit(jax.shard_map(g, mesh=mesh, in_specs=P("data"),
+                                      out_specs=P("data")))(x)
+            print("MAXDIFF", float(jnp.abs(d).max()))
+        """, devices=4)
+        assert "MAXDIFF 0.0" in out
+
+    def test_reduce_scatter_chunks_cover_padded_sum(self):
+        """Worker i owns chunk i of the zero-padded flattened sum; the
+        trimmed concatenation reconstructs the full reduction."""
+        out = _run("""
+            import jax, jax.numpy as jnp, numpy as np
+            from jax.sharding import PartitionSpec as P
+            from repro.dist.rar import ring_reduce_scatter
+            w, n = 4, 10                      # ceil(10/4)=3 -> 2 pad zeros
+            mesh = jax.make_mesh((w,), ("data",))
+            x = jnp.arange(w * n, dtype=jnp.float32).reshape(w, n)
+            chunks = jax.jit(jax.shard_map(
+                lambda x: ring_reduce_scatter(x[0], "data")[None],
+                mesh=mesh, in_specs=P("data"), out_specs=P("data")))(x)
+            assert chunks.shape == (w, 3), chunks.shape
+            flat = np.asarray(chunks).reshape(-1)
+            np.testing.assert_allclose(flat[:n], np.asarray(x).sum(0))
+            np.testing.assert_array_equal(flat[n:], 0.0)   # the padding
+            print("PAD_OK")
+        """, devices=4)
+        assert "PAD_OK" in out
+
+    def test_multidim_tensor_keeps_shape(self):
+        out = _run("""
+            import jax, jax.numpy as jnp, numpy as np
+            from jax.sharding import PartitionSpec as P
+            from repro.dist.rar import ring_all_reduce
+            mesh = jax.make_mesh((4,), ("data",))
+            x = jnp.arange(4 * 5 * 3, dtype=jnp.float32).reshape(4, 5, 3)
+            def g(x):
+                y = ring_all_reduce(x[0], "data")
+                assert y.shape == (5, 3), y.shape
+                return (jax.lax.psum(x[0], "data") - y)[None]
+            d = jax.jit(jax.shard_map(g, mesh=mesh, in_specs=P("data"),
+                                      out_specs=P("data")))(x)
+            print("MAXDIFF", float(jnp.abs(d).max()))
+        """, devices=4)
+        assert "MAXDIFF 0.0" in out
+
+
+class TestNonPowerOfTwoRing:
+    def test_w3_matches_psum_and_permute_count(self):
+        """2(w-1) = 4 permutes at w=3, correctness included — rings are not
+        restricted to power-of-two widths."""
+        out = _run("""
+            import jax, jax.numpy as jnp
+            from jax.sharding import PartitionSpec as P
+            from repro.dist.rar import ring_all_reduce
+            mesh = jax.make_mesh((3,), ("data",))
+            x = jnp.arange(3 * 11, dtype=jnp.float32).reshape(3, 11)
+            f = jax.jit(jax.shard_map(
+                lambda x: jax.lax.psum(x, "data") - ring_all_reduce(x, "data"),
+                mesh=mesh, in_specs=P("data"), out_specs=P("data")))
+            print("MAXDIFF", float(jnp.abs(f(x)).max()))
+            g = jax.jit(jax.shard_map(lambda x: ring_all_reduce(x, "data"),
+                mesh=mesh, in_specs=P("data"), out_specs=P("data")))
+            print("PERMUTES", g.lower(x).compile().as_text()
+                  .count("collective-permute("))
+        """, devices=3)
+        assert "MAXDIFF 0.0" in out
+        assert "PERMUTES 4" in out

@@ -7,9 +7,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 pytest.importorskip("repro.dist", reason="distributed substrate not present")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # only the property test needs hypothesis
+    HAVE_HYPOTHESIS = False
 
 from repro import ckpt
 from repro.configs import get_config
@@ -178,10 +181,7 @@ class TestServingLoop:
         assert pos_arr.max() == 19 and pos_arr.min() >= 12
 
 
-@given(st.integers(0, 2**31 - 1))
-@settings(max_examples=10, deadline=None)
-def test_loss_finite_for_any_data_seed(seed):
-    """Property: the training loss is finite for arbitrary data."""
+def _loss_is_finite_for_seed(seed):
     cfg = get_config("llama3.2-1b").reduced()
     model = build_model(cfg, max_seq=16)
     params = model.init(jax.random.PRNGKey(0))
@@ -189,6 +189,19 @@ def test_loss_finite_for_any_data_seed(seed):
                        DataConfig(seed=seed))
     loss, _ = jax.jit(model.loss_fn)(params, jax.tree.map(jnp.asarray, batch))
     assert np.isfinite(float(loss))
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_loss_finite_for_any_data_seed(seed):
+        """Property: the training loss is finite for arbitrary data."""
+        _loss_is_finite_for_seed(seed)
+else:
+    @pytest.mark.parametrize("seed", [0, 1, 7, 2**31 - 1])
+    def test_loss_finite_for_any_data_seed(seed):
+        """Fallback sample of the property when hypothesis is absent."""
+        _loss_is_finite_for_seed(seed)
 
 
 class TestInt8KVCache:
