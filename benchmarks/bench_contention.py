@@ -1,6 +1,6 @@
 """Microbenchmark for the batched/incremental contention-model engines.
 
-Two measurements per job count |J| (16 / 64 / 256 by default):
+Three measurements per job count |J| (16 / 64 / 256 by default):
 
   1. *Scheduler pass*: SJF-BCO (Alg. 1, theta bisection + kappa sweep) plus
      the slot simulation, once per engine.  The "reference" engine is the
@@ -9,12 +9,17 @@ Two measurements per job count |J| (16 / 64 / 256 by default):
      "batched" scores multi-candidate decisions via ``evaluate_many``.
      Schedules are asserted identical across engines (they are bit-equal
      by construction; see tests/test_batched_contention.py).
-  2. *Kernel microbench*: ``evaluate_many`` on a [C, J, S] stack vs a
+  2. *Kappa sweep*: SJF-BCO end-to-end (schedule + simulate) with
+     ``params={"sweep": "batched"}`` (all kappa branches of a theta forked
+     off shared placed prefixes) vs ``"sequential"`` (one kappa at a time,
+     the reference).  Schedules are asserted identical -- CI's bench smoke
+     fails on divergence.  Acceptance bar: >= 2x end-to-end at |J| = 256.
+  3. *Kernel microbench*: ``evaluate_many`` on a [C, J, S] stack vs a
      Python loop of C ``evaluate()`` calls over the same placements.
 
-Emits ``BENCH_contention.json`` -- the first entry of the repo's perf
-trajectory -- with wall-clock numbers and the model-evaluation counters
-(the acceptance bar: >= 5x fewer full-model evaluations at |J| = 256).
+Emits ``BENCH_contention.json`` -- part of the repo's perf trajectory --
+with wall-clock numbers and the model-evaluation counters (engine
+acceptance bar: >= 5x fewer full-model evaluations at |J| = 256).
 
 Usage::
 
@@ -31,27 +36,17 @@ import numpy as np
 from repro.core import (ScheduleRequest, eval_counts, evaluate,
                         evaluate_many, get_policy, philly_cluster,
                         philly_workload, reset_eval_counts, simulate)
-from repro.core.jobs import PHILLY_MIX
+try:                                    # run as a module: -m benchmarks....
+    from benchmarks.common import mix_for
+except ImportError:                     # run as a script from benchmarks/
+    from common import mix_for
 
 ENGINES = ("reference", "incremental", "batched")
 
 
-def _mix_for(total: int) -> tuple[tuple[int, int], ...]:
-    """Scale the §7 Philly mix (160 jobs) to ``total`` jobs, preserving the
-    job-size shares; the remainder lands on the largest fractional parts."""
-    base = sum(c for _, c in PHILLY_MIX)
-    exact = [(g, total * c / base) for g, c in PHILLY_MIX]
-    counts = [int(x) for _, x in exact]
-    order = sorted(range(len(exact)),
-                   key=lambda i: exact[i][1] - counts[i], reverse=True)
-    for i in order[: total - sum(counts)]:
-        counts[i] += 1
-    return tuple((g, c) for (g, _), c in zip(exact, counts) if c > 0)
-
-
 def bench_scheduler(n_jobs: int, seed: int = 1) -> dict:
     cluster = philly_cluster(20, seed=seed)
-    jobs = philly_workload(seed=seed, mix=_mix_for(n_jobs))
+    jobs = philly_workload(seed=seed, mix=mix_for(n_jobs))
     horizon = max(1200, 12 * n_jobs)
     row: dict = {"J": n_jobs, "engines": {}}
     schedules = {}
@@ -101,12 +96,55 @@ def bench_scheduler(n_jobs: int, seed: int = 1) -> dict:
     return row
 
 
+def bench_sweep(n_jobs: int, seed: int = 1) -> dict:
+    """SJF-BCO end-to-end: batched (shared-prefix) vs sequential kappa
+    sweep, both on the default incremental engine."""
+    cluster = philly_cluster(20, seed=seed)
+    jobs = philly_workload(seed=seed, mix=mix_for(n_jobs))
+    horizon = max(1200, 12 * n_jobs)
+    row: dict = {"J": n_jobs, "modes": {}}
+    schedules = {}
+    for sweep in ("sequential", "batched"):
+        request = ScheduleRequest(cluster=cluster, jobs=jobs,
+                                  horizon=horizon,
+                                  params={"sweep": sweep})
+        t0 = time.perf_counter()
+        sched = get_policy("sjf-bco")(request)
+        t_sched = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        sim = simulate(cluster, jobs, sched.assignment)
+        t_sim = time.perf_counter() - t0
+        schedules[sweep] = sched
+        row["modes"][sweep] = {
+            "schedule_s": round(t_sched, 4),
+            "simulate_s": round(t_sim, 4),
+            "end_to_end_s": round(t_sched + t_sim, 4),
+            "est_makespan": sched.est_makespan,
+            "sim_makespan": sim.makespan,
+        }
+    ref, bat = schedules["sequential"], schedules["batched"]
+    same = (bat.est_makespan == ref.est_makespan
+            and bat.kappa == ref.kappa
+            and len(bat.assignment) == len(ref.assignment)
+            and all(j1 == j2 and np.array_equal(g1, g2)
+                    for (j1, g1), (j2, g2)
+                    in zip(ref.assignment, bat.assignment)))
+    # Hard failure, not just a report field: CI's bench-smoke step relies
+    # on this to catch batched-sweep divergence.
+    assert same, f"batched sweep diverged from sequential at J={n_jobs}"
+    row["batched_identical_to_sequential"] = same
+    row["end_to_end_speedup"] = round(
+        row["modes"]["sequential"]["end_to_end_s"]
+        / max(1e-9, row["modes"]["batched"]["end_to_end_s"]), 2)
+    return row
+
+
 def bench_evaluate_many(n_jobs: int, n_cands: int = 64, seed: int = 0,
                         repeats: int = 5) -> dict:
     """evaluate_many on [C, J, S] vs a loop of C evaluate() calls."""
     rng = np.random.default_rng(seed)
     cluster = philly_cluster(20, seed=seed)
-    jobs = philly_workload(seed=seed, mix=_mix_for(n_jobs))
+    jobs = philly_workload(seed=seed, mix=mix_for(n_jobs))
     S = cluster.num_servers
     stack = np.zeros((n_cands, len(jobs), S), dtype=np.int64)
     for c in range(n_cands):
@@ -140,7 +178,7 @@ def main() -> None:
     sizes = [16, 64] if args.quick else [16, 64, 256]
     report = {"bench": "contention-engine",
               "quick": args.quick,
-              "scheduler": [], "evaluate_many": []}
+              "scheduler": [], "sweep": [], "evaluate_many": []}
     for n in sizes:
         row = bench_scheduler(n)
         report["scheduler"].append(row)
@@ -150,6 +188,14 @@ def main() -> None:
               f"  wall x{row['wall_speedup']:.2f}"
               f"  full-evals x{row['full_eval_reduction']:.0f} fewer"
               f"  identical={inc['schedule_identical_to_reference']}")
+    for n in sizes:
+        row = bench_sweep(n)
+        report["sweep"].append(row)
+        print(f"sweep |J|={n:4d}: sequential "
+              f"{row['modes']['sequential']['end_to_end_s']:.2f}s"
+              f"  batched {row['modes']['batched']['end_to_end_s']:.2f}s"
+              f"  x{row['end_to_end_speedup']:.2f}"
+              f"  identical={row['batched_identical_to_sequential']}")
     for n in sizes:
         row = bench_evaluate_many(n, n_cands=16 if args.quick else 64)
         report["evaluate_many"].append(row)

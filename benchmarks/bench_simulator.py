@@ -1,0 +1,104 @@
+"""Microbenchmark for the simulator's incremental readiness tracking.
+
+Measures ``simulate()`` wall-clock, ``readiness="tracked"`` (per-GPU
+queue-head pointers + per-job GPUs-at-head counters, the default) vs
+``readiness="rescan"`` (the original per-event O(J * G) scan of every
+scheduled job), at |J| in {256, 1024} (``--quick``: {64, 256}):
+
+  * *batch*: every job available at t=0, seeded random G_j-GPU placements
+    -- heavy straddling and deep FIFO queues, the simulator-bound regime
+    the Fig. 3 loop hits at scale (scheduling cost is excluded by
+    construction, so this isolates the simulator);
+  * *online*: the same placements behind a staggered Poisson-gap arrival
+    stream (idle windows + arrival-constrained starts).
+
+Both modes must agree event-for-event (asserted here -- CI's bench smoke
+runs ``--quick`` and fails on divergence).  Emits ``BENCH_simulator.json``
+with the wall-clock numbers; the acceptance bar is >= 5x on the batch
+case at |J| = 1024.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/bench_simulator.py [--quick] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import philly_cluster, philly_workload, simulate
+
+try:                                    # run as a module: -m benchmarks....
+    from benchmarks.common import mix_for
+except ImportError:                     # run as a script from benchmarks/
+    from common import mix_for
+
+
+def bench_simulate(n_jobs: int, seed: int = 1, repeats: int = 5) -> dict:
+    cluster = philly_cluster(20, seed=seed)
+    jobs = philly_workload(seed=seed, mix=mix_for(n_jobs))
+    rng = np.random.default_rng(seed)
+    assignment = [(j.jid, np.sort(rng.choice(cluster.num_gpus,
+                                             size=j.num_gpus, replace=False)))
+                  for j in jobs]
+    arrivals = np.floor(np.cumsum(
+        rng.exponential(2.0, size=len(jobs)))).astype(np.int64)
+    row: dict = {"J": n_jobs, "cases": {}}
+    for case, arr in (("batch", None), ("online", arrivals)):
+        sims, times = {}, {}
+        for readiness in ("tracked", "rescan"):
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                sim = simulate(cluster, jobs, assignment, arrivals=arr,
+                               readiness=readiness)
+                best = min(best, time.perf_counter() - t0)
+            sims[readiness], times[readiness] = sim, best
+        a, b = sims["tracked"], sims["rescan"]
+        # Hard failure, not just a report field: CI's bench-smoke step
+        # relies on this to catch readiness-tracking divergence.
+        same = bool(a.events == b.events
+                    and np.array_equal(a.start, b.start)
+                    and np.array_equal(a.finish, b.finish)
+                    and a.avg_jct == b.avg_jct
+                    and a.busy_gpu_slots == b.busy_gpu_slots)
+        assert same, f"tracked readiness diverged from rescan at J={n_jobs}"
+        row["cases"][case] = {
+            "tracked_s": round(times["tracked"], 4),
+            "rescan_s": round(times["rescan"], 4),
+            "speedup": round(times["rescan"] / max(1e-9, times["tracked"]), 2),
+            "events": len(a.events),
+            "makespan": float(a.makespan),
+            "identical_to_rescan": same,
+        }
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: small sizes only")
+    ap.add_argument("--out", default="BENCH_simulator.json")
+    args = ap.parse_args()
+
+    sizes = [64, 256] if args.quick else [256, 1024]
+    report = {"bench": "simulator-readiness", "quick": args.quick,
+              "simulate": []}
+    for n in sizes:
+        row = bench_simulate(n)
+        report["simulate"].append(row)
+        for case, r in row["cases"].items():
+            print(f"|J|={n:5d} {case:6s}  rescan {r['rescan_s']:.3f}s"
+                  f"  tracked {r['tracked_s']:.3f}s  x{r['speedup']:.2f}"
+                  f"  events={r['events']}")
+
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

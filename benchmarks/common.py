@@ -9,6 +9,7 @@ from __future__ import annotations
 import time
 
 from repro.core import ScheduleRequest, get_policy, simulate
+from repro.core.jobs import PHILLY_MIX
 
 # Display name -> registry name for the §7 figures.
 POLICIES = {
@@ -17,6 +18,19 @@ POLICIES = {
     "LS": "ls",
     "RAND": "rand",
 }
+
+
+def mix_for(total: int) -> tuple[tuple[int, int], ...]:
+    """Scale the §7 Philly mix (160 jobs) to ``total`` jobs, preserving the
+    job-size shares; the remainder lands on the largest fractional parts."""
+    base = sum(c for _, c in PHILLY_MIX)
+    exact = [(g, total * c / base) for g, c in PHILLY_MIX]
+    counts = [int(x) for _, x in exact]
+    order = sorted(range(len(exact)),
+                   key=lambda i: exact[i][1] - counts[i], reverse=True)
+    for i in order[: total - sum(counts)]:
+        counts[i] += 1
+    return tuple((g, c) for (g, _), c in zip(exact, counts) if c > 0)
 
 
 def run_policy(name: str, cluster, jobs, horizon: int,

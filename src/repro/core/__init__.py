@@ -14,8 +14,10 @@ Public surface (new code should use the unified API):
   * :mod:`repro.core.scenario` -- declarative ``Scenario`` experiments and
     ``run_scenario``.
 
-The legacy free-function entrypoints (``sjf_bco``, ``first_fit``, ...)
-remain importable as deprecated shims for one release.
+The legacy free-function entrypoints (``sjf_bco``, ``first_fit``,
+``schedule_online``, ``baselines.POLICIES``, ...) are gone after their
+one-release deprecation overlap: use
+``get_policy(name)(ScheduleRequest(...))``.
 """
 from repro.core.api import (PlacementState, ScheduleRequest, ScheduleResult,
                             SchedulingPolicy, get_policy, list_policies,
@@ -27,13 +29,9 @@ from repro.core.contention import (IncrementalEval, IterModel,
                                    estimate_exec_time, eval_counts, evaluate,
                                    evaluate_many, evaluation_engine,
                                    predict_exec_time, reset_eval_counts,
-                                   slots_for, tau_bounds)
+                                   scalar_tau_many, slots_for, tau_bounds)
 from repro.core.simulator import SimEvent, SimResult, simulate
-from repro.core.sjf_bco import Schedule, fa_ffp, lbsgf, sjf_bco
-from repro.core import baselines
-from repro.core.baselines import (first_fit, list_scheduling, random_policy,
-                                  reserved_bandwidth)
-from repro.core.extensions import sjf_bco_adaptive
+from repro.core.sjf_bco import fa_ffp, lbsgf
 from repro.core.scenario import (ArrivalSpec, ClusterSpec, ContentionStats,
                                  RunReport, Scenario, WorkloadSpec,
                                  run_scenario)
@@ -51,11 +49,10 @@ __all__ = [
     "Cluster", "philly_cluster", "Job", "philly_workload",
     "IterModel", "contention_level", "degradation", "evaluate",
     "evaluate_many", "IncrementalEval", "evaluation_engine",
-    "eval_counts", "reset_eval_counts", "slots_for",
+    "eval_counts", "reset_eval_counts", "scalar_tau_many", "slots_for",
     "estimate_exec_time", "predict_exec_time", "tau_bounds",
     "SimEvent", "SimResult", "simulate",
-    # algorithms + deprecated shims
-    "Schedule", "fa_ffp", "lbsgf", "sjf_bco", "sjf_bco_adaptive",
-    "first_fit", "list_scheduling", "random_policy", "reserved_bandwidth",
+    # algorithm subroutines
+    "fa_ffp", "lbsgf",
     "TheoryReport", "report",
 ]

@@ -272,6 +272,24 @@ class PlacementState:
         np.add.at(y, self.cluster.gpu_server[gpus], 1)
         return y
 
+    def clone(self) -> "PlacementState":
+        """Independent copy of the attempt state: committing to the clone
+        leaves the original untouched.  The batched (theta, kappa) sweep
+        (``sjf-bco`` with ``params={"sweep": "batched"}``) forks each kappa
+        branch off the shared placed prefix with this."""
+        new = PlacementState.__new__(PlacementState)
+        new.cluster = self.cluster
+        new.engine = self.engine
+        new.U = self.U.copy()
+        new.R = self.R.copy()
+        new.assignment = list(self.assignment)
+        new.placed_jobs = list(self.placed_jobs)
+        new.placed_y = list(self.placed_y)
+        new.est_start = dict(self.est_start)
+        new.est_finish = dict(self.est_finish)
+        new._straddle_fin = [list(fin) for fin in self._straddle_fin]
+        return new
+
     def advance_to(self, t: float) -> None:
         """Advance the real-time clocks to ``t`` (an arrival instant): a
         GPU idle before the arrival cannot have been used earlier."""
@@ -282,19 +300,26 @@ class PlacementState:
         return np.asarray([self.est_finish[jb.jid] > start + 1e-9
                            for jb in self.placed_jobs], dtype=bool)
 
-    def _probe_rho(self, job: Job, y_j: np.ndarray, start: float) -> float:
-        """Incremental rho_hat(y^k): the candidate's Eq. (6) level is
-        1 + max over its straddled servers of the number of placed
-        straddling jobs still running at ``start`` (a suffix count on the
-        per-server sorted est_finish lists); tau_j needs nothing else."""
+    def _probe_p(self, job: Job, y_j: np.ndarray, start: float
+                 ) -> tuple[int, int]:
+        """(p, n_srv) of a candidate placement against the placed jobs:
+        the Eq. (6) level is 1 + max over its straddled servers of the
+        number of placed straddling jobs still running at ``start`` (a
+        suffix count on the per-server sorted est_finish lists)."""
         straddled = np.flatnonzero((y_j > 0) & (y_j < job.num_gpus))
         p = 0
         cut = start + 1e-9
         for s in straddled:
             fin = self._straddle_fin[s]
             p = max(p, len(fin) - bisect.bisect_right(fin, cut) + 1)
+        return p, len(np.flatnonzero(y_j))
+
+    def _probe_rho(self, job: Job, y_j: np.ndarray, start: float) -> float:
+        """Incremental rho_hat(y^k): Eq. (6) via :meth:`_probe_p`, then
+        the scalar Eq. (8); tau_j needs nothing else."""
+        p, n_srv = self._probe_p(job, y_j, start)
         contention.EVAL_COUNTS["probes"] += 1
-        tau = scalar_tau(self.cluster, job, p, len(np.flatnonzero(y_j)))
+        tau = scalar_tau(self.cluster, job, p, n_srv)
         return slots_for(job.iters, tau)
 
     def refined_rho(self, job: Job, gpus: np.ndarray) -> tuple[float, float]:
@@ -319,10 +344,27 @@ class PlacementState:
         Under the ``"batched"`` engine all candidates are scored in a
         single ``evaluate_many`` pass over one [C, P+1, S] stack (placed
         jobs not overlapping a candidate's start are masked out, which is
-        equivalent to omitting their rows); the other engines fall back to
-        per-candidate probes.  Results are identical across engines."""
+        equivalent to omitting their rows).  Under ``"incremental"`` the
+        per-candidate contention levels come from the suffix counts and
+        one vectorised :func:`~repro.core.contention.scalar_tau_many` call
+        scores every candidate at once.  ``"reference"`` falls back to
+        per-candidate :meth:`refined_rho`.  Results are identical across
+        engines."""
         gpu_sets = [np.asarray(g) for g in gpu_sets]
-        if self.engine != "batched" or not gpu_sets:
+        if not gpu_sets:
+            return []
+        if self.engine == "incremental":
+            starts = [float(self.R[g].max()) if len(g) else 0.0
+                      for g in gpu_sets]
+            ps = np.empty(len(gpu_sets), dtype=np.int64)
+            n_srv = np.empty(len(gpu_sets), dtype=np.int64)
+            for c, (g, start) in enumerate(zip(gpu_sets, starts)):
+                ps[c], n_srv[c] = self._probe_p(job, self._y_of(g), start)
+            contention.EVAL_COUNTS["probes"] += len(gpu_sets)
+            taus = contention.scalar_tau_many(self.cluster, job, ps, n_srv)
+            return [(slots_for(job.iters, float(tau)), start)
+                    for tau, start in zip(taus, starts)]
+        if self.engine != "batched":
             return [self.refined_rho(job, g) for g in gpu_sets]
         P = len(self.placed_jobs)
         C = len(gpu_sets)

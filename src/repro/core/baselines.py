@@ -21,19 +21,16 @@ with its own picker (theta_u = T, as online has no bisection).
 """
 from __future__ import annotations
 
-import warnings
-
 import numpy as np
 
 from repro.core.api import (PlacementState, Picker, ScheduleRequest,
                             ScheduleResult, bisect_theta, finalize,
                             nominal_rho, register_policy, schedule_arrivals,
                             try_place)
-from repro.core.cluster import Cluster
 from repro.core.jobs import Job
 
-__all__ = ["first_fit", "list_scheduling", "random_policy",
-           "reserved_bandwidth", "POLICIES"]
+__all__ = ["first_fit_policy", "list_scheduling_policy", "random_policy_policy",
+           "reserved_bandwidth_policy"]
 
 
 def _ff_pick(state: PlacementState, job: Job, rho_nom: float, u: float,
@@ -154,56 +151,3 @@ def reserved_bandwidth_policy(request: ScheduleRequest) -> ScheduleResult:
         return finalize(state, len(jobs), theta, None, "RESERVED")
 
     return bisect_theta(attempt, request.horizon, "RESERVED")
-
-
-# ---------------------------------------------------------------------------
-# Deprecated free-function shims (one release)
-# ---------------------------------------------------------------------------
-
-
-def _shim(policy_name: str, cluster: Cluster, jobs: list[Job], horizon: int,
-          u: float, params: dict | None = None) -> ScheduleResult:
-    warnings.warn(f"the free-function baseline API is deprecated; use "
-                  f"get_policy({policy_name!r})(ScheduleRequest(...))",
-                  DeprecationWarning, stacklevel=3)
-    from repro.core.api import get_policy
-    return get_policy(policy_name)(
-        ScheduleRequest(cluster=cluster, jobs=list(jobs), horizon=horizon,
-                        u=u, params=params or {}))
-
-
-def first_fit(cluster: Cluster, jobs: list[Job], horizon: int,
-              u: float = 1.5) -> ScheduleResult:
-    return _shim("ff", cluster, jobs, horizon, u)
-
-
-def list_scheduling(cluster: Cluster, jobs: list[Job], horizon: int,
-                    u: float = 1.5) -> ScheduleResult:
-    return _shim("ls", cluster, jobs, horizon, u)
-
-
-def random_policy(cluster: Cluster, jobs: list[Job], horizon: int,
-                  u: float = 1.5, seed: int = 0) -> ScheduleResult:
-    return _shim("rand", cluster, jobs, horizon, u, {"seed": seed})
-
-
-def reserved_bandwidth(cluster: Cluster, jobs: list[Job], horizon: int,
-                       u: float = 1.5) -> ScheduleResult:
-    return _shim("reserved", cluster, jobs, horizon, u)
-
-
-def _legacy_sjf_bco(cluster, jobs, horizon, u=1.5):
-    from repro.core.sjf_bco import sjf_bco
-    return sjf_bco(cluster, jobs, horizon, u)
-
-
-# Deprecated: the registry (api.get_policy / api.list_policies) owns policy
-# lookup now.  Kept fully populated for one release -- note "sjf-bco" no
-# longer needs the import-cycle patch that repro.core.__init__ used to apply.
-POLICIES = {
-    "sjf-bco": _legacy_sjf_bco,
-    "ff": first_fit,
-    "ls": list_scheduling,
-    "rand": random_policy,
-    "reserved": reserved_bandwidth,
-}

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import math
 
 import numpy as np
 
@@ -319,10 +320,11 @@ class IncrementalEval:
         self._share[row] = share
         self._reduce[row] = share / cl.gpu_speed
         self._compute[row] = job.dt_fwd * float(job.batch) + job.dt_bwd
-        n_srv = int((y > 0).sum())
+        pos = y > 0
+        n_srv = int(pos.sum())
         self._gamma[row] = cl.xi2 * float(n_srv)
         self._multi[row] = n_srv > 1
-        row_straddle = (y > 0) & (y < job.num_gpus)
+        row_straddle = pos & (y < job.num_gpus)
         self._straddle[row] = row_straddle
         self._live[row] = True
         self._apply_count_delta(row, row_straddle, +1)
@@ -342,27 +344,29 @@ class IncrementalEval:
         self._free.append(row)
         EVAL_COUNTS["incremental_updates"] += 1
 
-    def _apply_count_delta(self, row: int, row_straddle: np.ndarray,
-                           delta: int) -> None:
-        changed = np.flatnonzero(row_straddle)
-        if len(changed):
-            self._per_server[changed] += delta
-            affected = self._live & self._straddle[:, changed].any(axis=1)
-        else:
-            affected = np.zeros(len(self._live), dtype=bool)
-        if delta > 0:
-            affected[row] = True   # a new row always needs its own terms
-        rows = np.flatnonzero(affected)
-        if not len(rows):
-            return
-        sub = self._straddle[rows]
-        p_new = np.where(sub, self._per_server[None, :], 0).max(axis=1)
-        stale = p_new != self._p[rows]
-        if delta > 0:
-            stale |= rows == row
-        self._p[rows] = p_new
-        upd = rows[stale]
-        if not len(upd):
+    def _refresh_terms_scalar(self, r: int) -> None:
+        """Recompute k/B/exchange/tau/phi for one row from its current p.
+        Plain float64 arithmetic with the same operation order as the
+        vector path, so bit-identical results."""
+        cl = self.cluster
+        k = cl.xi1 * float(self._p[r])
+        if k < 1.0:
+            k = 1.0
+        f = k + cl.alpha * (k - 1.0)
+        bandwidth = (cl.b_inter / f) if self._multi[r] else cl.b_intra
+        exchange = 2.0 * float(self._share[r]) / bandwidth
+        tau = exchange + float(self._reduce[r]) \
+            + float(self._gamma[r]) + float(self._compute[r])
+        self._k[r] = k
+        self._bandwidth[r] = bandwidth
+        self._exchange[r] = exchange
+        self._tau[r] = tau
+        self._phi[r] = math.floor(1.0 / tau)
+
+    def _refresh_terms(self, upd: np.ndarray) -> None:
+        """Recompute k/B/exchange/tau/phi for the rows whose p changed."""
+        if len(upd) == 1:
+            self._refresh_terms_scalar(int(upd[0]))
             return
         cl = self.cluster
         k = np.maximum(cl.xi1 * self._p[upd], 1.0)
@@ -375,6 +379,56 @@ class IncrementalEval:
         self._exchange[upd] = exchange
         self._tau[upd] = tau
         self._phi[upd] = np.floor(1.0 / tau).astype(np.int64)
+
+    def _apply_count_delta(self, row: int, row_straddle: np.ndarray,
+                           delta: int) -> None:
+        # Contention moves monotonically with the per-server counts, so
+        # other rows never need a full O(S) p recompute on add (their p can
+        # only grow, and only through a changed server: an O(|changed|) max
+        # suffices), and on remove only rows whose old p sat exactly on a
+        # changed server's old count can shrink.
+        changed = np.flatnonzero(row_straddle)
+        n_changed = len(changed)
+        counts_c = None
+        if n_changed:
+            self._per_server[changed] += delta
+            counts_c = self._per_server[changed]
+            affected = self._live & self._straddle[:, changed].any(axis=1)
+            affected[row] = False       # the changed row is handled below
+            rows = np.flatnonzero(affected)
+        else:
+            rows = ()
+        if len(rows):
+            if n_changed == 1:
+                # Every affected row straddles the single changed server.
+                cand = counts_c[0]
+            else:
+                cand = (self._straddle[np.ix_(rows, changed)]
+                        * counts_c).max(axis=1)
+            if delta > 0:
+                grew = cand > self._p[rows]
+                upd = rows[grew]
+                if len(upd):
+                    self._p[upd] = cand[grew] if n_changed > 1 else cand
+                    self._refresh_terms(upd)
+            else:
+                # Old count at a changed server = new count + 1; rows whose
+                # p exceeds every changed server's old count peak elsewhere.
+                maybe = rows[self._p[rows] == cand + 1]
+                if len(maybe):
+                    p_new = (self._straddle[maybe]
+                             * self._per_server).max(axis=1)
+                    shrunk = p_new != self._p[maybe]
+                    upd = maybe[shrunk]
+                    if len(upd):
+                        self._p[upd] = p_new[shrunk]
+                        self._refresh_terms(upd)
+        if delta > 0:
+            # The new row always needs its own full terms; its straddled
+            # servers are exactly ``changed``, so its Eq. (6) level is the
+            # max of their (fresh) counts.
+            self._p[row] = int(counts_c.max()) if n_changed else 0
+            self._refresh_terms_scalar(row)
 
     def tau_of(self, row: int) -> float:
         """Current Eq. (8) tau of a live row."""
@@ -397,6 +451,31 @@ class IncrementalEval:
         n_srv = int((y > 0).sum())
         EVAL_COUNTS["probes"] += 1
         return scalar_tau(self.cluster, job, p, n_srv)
+
+    def probe_tau_many(self, job: Job, Y_stack: np.ndarray) -> np.ndarray:
+        """Batched :meth:`probe_tau`: tau of ``job`` for each candidate
+        placement row of ``Y_stack`` [C, S], scored against the current
+        live set in one vectorised pass (no per-candidate Python loop) and
+        without mutating any state.  Bit-identical to C scalar probes."""
+        Y = np.asarray(Y_stack, dtype=np.int64)
+        if Y.ndim != 2 or Y.shape[1] != self._S:
+            raise ValueError(f"Y_stack shape {Y.shape} != (C, {self._S})")
+        if not np.all(Y.sum(axis=1) == job.num_gpus):
+            raise ValueError("placement does not cover the job's GPUs (Eq. 1)")
+        straddle = (Y > 0) & (Y < job.num_gpus)              # [C, S]
+        p = np.where(straddle, (self._per_server + 1)[None, :], 0).max(axis=1)
+        n_srv = (Y > 0).sum(axis=1)
+        EVAL_COUNTS["probes"] += Y.shape[0]
+        return scalar_tau_many(self.cluster, job, p, n_srv)
+
+    def window(self, rows) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(p, tau, phi) for live ``rows`` -- the simulator's per-window
+        gather.  Fancy indexing already copies, so this is three array
+        gathers instead of :meth:`model`'s nine."""
+        idx = np.asarray(rows, dtype=np.int64)
+        if idx.ndim != 1 or (len(idx) and not np.all(self._live[idx])):
+            raise KeyError("window() requires live row handles")
+        return self._p[idx], self._tau[idx], self._phi[idx]
 
     def model(self, rows) -> IterModel:
         """Gather the maintained terms for ``rows`` (in that order)."""
@@ -431,6 +510,29 @@ def scalar_tau(cluster: Cluster, job: Job, p: int, n_srv: int) -> float:
     else:
         bandwidth = cluster.b_intra
     gamma = cluster.xi2 * float(n_srv)
+    exchange = 2.0 * share / bandwidth
+    reduce_t = share / cluster.gpu_speed
+    compute = job.dt_fwd * float(job.batch) + job.dt_bwd
+    return exchange + reduce_t + gamma + compute
+
+
+def scalar_tau_many(cluster: Cluster, job: Job, p: np.ndarray,
+                    n_srv: np.ndarray) -> np.ndarray:
+    """Batched :func:`scalar_tau`: Eq. (8) for one job at C hypothesised
+    (contention level, server spread) pairs in one vectorised pass -- the
+    batched probe entry point shared by :meth:`IncrementalEval.probe_tau_many`
+    and the scheduler's multi-candidate rho-hat probes
+    (:meth:`repro.core.api.PlacementState.refined_rho_many`).  Elementwise
+    float64 with the same operation order as the scalar form, so the
+    results are bit-identical per candidate."""
+    p = np.asarray(p, dtype=np.float64)
+    n_srv = np.asarray(n_srv)
+    w = float(job.num_gpus)
+    share = (job.grad_size / w) * (w - 1.0) if w > 1 else 0.0
+    k = np.maximum(cluster.xi1 * p, 1.0)
+    f = degradation(cluster.alpha, k)
+    bandwidth = np.where(n_srv > 1, cluster.b_inter / f, cluster.b_intra)
+    gamma = cluster.xi2 * n_srv.astype(np.float64)
     exchange = 2.0 * share / bandwidth
     reduce_t = share / cluster.gpu_speed
     compute = job.dt_fwd * float(job.batch) + job.dt_bwd

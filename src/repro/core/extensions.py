@@ -16,18 +16,16 @@ faithful SJF-BCO in benchmarks/ablations).
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 from repro.core.api import (PlacementState, ScheduleRequest, ScheduleResult,
                             bisect_theta, finalize, get_policy, nominal_rho,
                             pick_best_finish, register_policy,
                             schedule_arrivals)
-from repro.core.cluster import Cluster
 from repro.core.jobs import Job
 from repro.core.simulator import simulate
 from repro.core.sjf_bco import fa_ffp, lbsgf
 
-__all__ = ["sjf_bco_adaptive", "sjf_bco_adaptive_policy", "contention_sweep"]
+__all__ = ["sjf_bco_adaptive_policy", "contention_sweep"]
 
 
 @register_policy("sjf-bco-adaptive")
@@ -56,16 +54,6 @@ def sjf_bco_adaptive_policy(request: ScheduleRequest) -> ScheduleResult:
         return finalize(state, len(request.jobs), theta, None, "SJF-BCO+")
 
     return bisect_theta(attempt, request.horizon, "SJF-BCO+")
-
-
-def sjf_bco_adaptive(cluster: Cluster, jobs: list[Job], horizon: int,
-                     u: float = 1.5) -> ScheduleResult:
-    """Deprecated shim: use ``get_policy("sjf-bco-adaptive")``."""
-    warnings.warn("sjf_bco_adaptive(cluster, jobs, ...) is deprecated; use "
-                  "get_policy('sjf-bco-adaptive')(ScheduleRequest(...))",
-                  DeprecationWarning, stacklevel=2)
-    return sjf_bco_adaptive_policy(
-        ScheduleRequest(cluster=cluster, jobs=list(jobs), horizon=horizon, u=u))
 
 
 def contention_sweep(seed: int = 1, xi1s=(0.2, 0.5, 0.7, 1.0),

@@ -16,12 +16,11 @@ every registered policy then runs the shared epoch loop
 
 The end-to-end makespan is evaluated by the same contention simulator
 (``simulate(..., arrivals=...)``).  This module keeps the arrival-stream
-helpers plus thin deprecated shims over the unified entrypoint.
+helpers (Poisson streams, request building, the run_online convenience).
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 import numpy as np
 
@@ -30,8 +29,7 @@ from repro.core.cluster import Cluster
 from repro.core.jobs import Job
 from repro.core.simulator import Assignment, simulate
 
-__all__ = ["ArrivingJob", "poisson_arrivals", "stream_request",
-           "schedule_online", "run_online"]
+__all__ = ["ArrivingJob", "poisson_arrivals", "stream_request", "run_online"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,19 +60,6 @@ def stream_request(cluster: Cluster, stream: list[ArrivingJob],
         jobs=[a.job for a in ordered],
         arrivals=np.asarray([a.arrival for a in ordered], dtype=np.int64),
         horizon=horizon, u=u, params=params or {})
-
-
-def schedule_online(cluster: Cluster, stream: list[ArrivingJob],
-                    horizon: int = 10**6, u: float = 1.5,
-                    kappa: int | None = None,
-                    policy: str = "sjf-bco") -> Assignment:
-    """Deprecated shim: schedule an arrival stream, returning the full
-    assignment for the simulator (which recomputes actual contention)."""
-    warnings.warn("schedule_online is deprecated; use "
-                  "get_policy(name)(ScheduleRequest(..., arrivals=...))",
-                  DeprecationWarning, stacklevel=2)
-    request = stream_request(cluster, stream, horizon, u)
-    return get_policy(policy)(request).assignment
 
 
 def run_online(cluster: Cluster, stream: list[ArrivingJob],

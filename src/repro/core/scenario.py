@@ -111,12 +111,17 @@ class Scenario:
 @dataclasses.dataclass(frozen=True)
 class ContentionStats:
     """Per-slot contention summary of a simulated run (from the
-    piecewise-constant simulator events)."""
+    piecewise-constant simulator events).
+
+    The event stream includes zero-active idle windows (waiting for the
+    next arrival), so every time-weighted statistic here is weighted by
+    wall-clock time over the whole run -- an idle cluster pulls
+    ``mean_active``/``mean`` down instead of being silently skipped."""
 
     peak: int                  # max p_j[t] over the run (Eq. 6)
     mean: float                # time-weighted mean of per-window max p
     mean_active: float         # time-weighted mean #concurrent jobs
-    contended_frac: float      # fraction of busy time with p >= 2
+    contended_frac: float      # fraction of wall-clock time with p >= 2
 
     @classmethod
     def from_sim(cls, sim: SimResult) -> "ContentionStats":

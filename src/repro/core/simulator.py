@@ -20,10 +20,27 @@ by an :class:`~repro.core.contention.IncrementalEval` across windows --
 each start/finish is one O(S + affected) row update instead of a full
 [J, S] re-evaluation -- with bit-identical results to the ``"reference"``
 per-window :func:`~repro.core.contention.evaluate`.
+
+Readiness tracking (which queued jobs may start at an event boundary) also
+has two bit-identical modes, selected with ``readiness``:
+
+  * ``"tracked"`` (default) -- incremental: per-GPU queue-head pointers and
+    a per-job "GPUs-at-head" counter, updated only when a job finishes
+    (O(G_j) per completion), plus arrival-sorted heaps.  Each event touches
+    only the jobs it affects.
+  * ``"rescan"`` -- the reference O(J * G) per-event rescan of every
+    scheduled job against every queue head, kept as the semantics oracle
+    (``tests/test_simulator_equivalence.py`` pins event-for-event
+    equality).
+
+Both modes start ready jobs in sorted job-id order (the FIFO tie-break),
+so the SimEvent stream, start/finish arrays and all derived metrics are
+identical.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 
 import numpy as np
 
@@ -33,14 +50,21 @@ from repro.core.jobs import Job
 
 Assignment = list[tuple[int, np.ndarray]]  # (job index, global GPU ids)
 
+READINESS_MODES = ("tracked", "rescan")
+
 
 @dataclasses.dataclass(frozen=True)
 class SimEvent:
-    """One piecewise-constant contention window of the execution."""
+    """One piecewise-constant contention window of the execution.
+
+    Idle windows (the cluster waiting for the next arrival) are recorded
+    too, with ``active == 0`` and ``busy_gpus == 0``, so time-weighted
+    statistics over the event stream cover the whole run, not just busy
+    time."""
 
     t: int                     # window start (slot)
     dt: int                    # window length (slots)
-    active: int                # #concurrently running jobs
+    active: int                # #concurrently running jobs (0 = idle gap)
     contention: int            # max p_j over the active set (Eq. 6)
     busy_gpus: int             # #GPUs occupied during the window
 
@@ -50,7 +74,7 @@ class SimResult:
     start: np.ndarray          # a_j per job (slot), -1 if never started
     finish: np.ndarray         # T_j per job (slot), -1 if never finished
     makespan: float
-    avg_jct: float
+    avg_jct: float             # mean(finish - arrival) over completed jobs
     completed: int
     horizon_hit: bool
     peak_contention: int       # max p_j[t] observed
@@ -64,7 +88,10 @@ class SimResult:
 
     @property
     def mean_contention(self) -> float:
-        """Time-weighted mean of the per-window max contention level."""
+        """Time-weighted mean of the per-window max contention level.
+
+        Weighted over the full event stream -- including zero-active idle
+        windows -- so the mean reflects wall-clock time, not busy time."""
         total = sum(e.dt for e in self.events)
         if not total:
             return 0.0
@@ -74,18 +101,31 @@ class SimResult:
 def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
              horizon: int = 10**7,
              arrivals: np.ndarray | None = None,
-             engine: str | None = None) -> SimResult:
+             engine: str | None = None,
+             readiness: str = "tracked") -> SimResult:
     """Execute ``assignment`` on ``cluster`` and return actual timings.
 
     ``arrivals[j]`` (optional) forbids starting job j before its arrival
-    slot (online scheduling, core/online.py).  ``engine`` selects the
-    contention-model evaluation strategy: ``"reference"`` re-evaluates
-    each window from scratch; anything else (``"incremental"``, and
-    ``"batched"`` -- which has no meaning for the one-placement-per-window
-    simulator) maintains the active set incrementally across windows.
-    Results are identical either way."""
+    slot (online scheduling, core/online.py); ``avg_jct`` is then the mean
+    of ``finish - arrival`` over completed jobs (with ``arrivals=None``
+    every job arrives at slot 0, so it reduces to the mean finish slot).
+
+    ``engine`` selects the contention-model evaluation strategy:
+    ``"reference"`` re-evaluates each window from scratch; anything else
+    (``"incremental"``, and ``"batched"`` -- which has no meaning for the
+    one-placement-per-window simulator) maintains the active set
+    incrementally across windows.  ``readiness`` selects how queue-ready
+    jobs are discovered (``"tracked"`` incremental counters, the default,
+    vs the ``"rescan"`` reference; see the module docstring).  Results are
+    identical across engines and readiness modes."""
     n_jobs = len(jobs)
     incremental = resolve_engine(engine) != "reference"
+    if readiness not in READINESS_MODES:
+        raise ValueError(
+            f"unknown readiness mode {readiness!r}; choose from {READINESS_MODES}")
+    tracked = readiness == "tracked"
+    if arrivals is not None:
+        arrivals = np.asarray(arrivals)
     queues: list[list[int]] = [[] for _ in range(cluster.num_gpus)]
     gpu_sets: dict[int, np.ndarray] = {}
     srv_of = cluster.gpu_server
@@ -112,73 +152,153 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
     rows: dict[int, int] = {}            # job -> IncrementalEval row handle
     t = 0
     peak_p = 0
+    busy_now = 0                         # GPUs occupied by active jobs
     busy_gpu_slots = 0.0
     events: list[SimEvent] = []
 
-    def ready_jobs(now: int) -> list[int]:
-        # Iterate in sorted job order: ``scheduled`` is a set, and set order
-        # would make start order -- hence FIFO tie-breaks -- depend on hash
-        # seeding rather than on the schedule.
-        out = []
+    def _arrival_of(j: int) -> int:
+        return int(arrivals[j]) if arrivals is not None else 0
+
+    if tracked:
+        # Incremental readiness: head pointer per GPU queue, and for each
+        # unstarted job the count of its GPUs where it is at the head.
+        # A job is queue-ready when that count reaches G_j, which happens
+        # exactly once; it then waits (if needed) in an arrival-sorted
+        # heap until its arrival slot.  Startable jobs pop in ascending
+        # jid order -- the same FIFO tie-break as the rescan reference.
+        qpos = [0] * cluster.num_gpus
+        n_gpus_of = {j: len(gpu_sets[j]) for j in scheduled}
+        at_head = dict.fromkeys(scheduled, 0)
+        for q in queues:
+            if q:
+                at_head[q[0]] += 1
+        startable: list[int] = []              # jid min-heap: ready + arrived
+        arrival_wait: list[tuple[int, int]] = []   # (arrival, jid) min-heap
         for j in sorted(scheduled):
-            if start[j] >= 0:
-                continue
-            if arrivals is not None and now < arrivals[j]:
-                continue
-            if all(queues[int(g)] and queues[int(g)][0] == j for g in gpu_sets[j]):
-                out.append(j)
-        return out
+            if at_head[j] == n_gpus_of[j]:
+                heapq.heappush(arrival_wait, (_arrival_of(j), j))
+        # All unstarted jobs, arrival-sorted, for the idle-gap jump; started
+        # entries are discarded lazily.
+        pending_heap = [(_arrival_of(j), j) for j in scheduled]
+        heapq.heapify(pending_heap)
+        n_unstarted = len(scheduled)
+
+        def ready_jobs(now: int) -> list[int]:
+            while arrival_wait and arrival_wait[0][0] <= now:
+                heapq.heappush(startable, heapq.heappop(arrival_wait)[1])
+            out = []
+            while startable:
+                out.append(heapq.heappop(startable))
+            return out
+
+        def release_gpus(j: int) -> None:
+            # Advance the head pointer on each freed GPU; the new head job
+            # gains one GPU-at-head (it cannot already be running: it was
+            # not at the head of this queue until now).
+            for g in gpu_sets[j]:
+                gi = int(g)
+                qpos[gi] += 1
+                q = queues[gi]
+                if qpos[gi] < len(q):
+                    j2 = q[qpos[gi]]
+                    at_head[j2] += 1
+                    if at_head[j2] == n_gpus_of[j2]:
+                        heapq.heappush(arrival_wait, (_arrival_of(j2), j2))
+
+        def next_pending_arrival() -> int:
+            while pending_heap and start[pending_heap[0][1]] >= 0:
+                heapq.heappop(pending_heap)
+            return pending_heap[0][0]
+    else:
+        def ready_jobs(now: int) -> list[int]:
+            # Iterate in sorted job order: ``scheduled`` is a set, and set
+            # order would make start order -- hence FIFO tie-breaks --
+            # depend on hash seeding rather than on the schedule.
+            out = []
+            for j in sorted(scheduled):
+                if start[j] >= 0:
+                    continue
+                if arrivals is not None and now < arrivals[j]:
+                    continue
+                if all(queues[int(g)] and queues[int(g)][0] == j
+                       for g in gpu_sets[j]):
+                    out.append(j)
+            return out
+
+        def release_gpus(j: int) -> None:
+            for g in gpu_sets[j]:
+                queues[int(g)].pop(0)
+
+        def next_pending_arrival() -> int:
+            return min(_arrival_of(j) for j in scheduled if start[j] < 0)
 
     while t < horizon:
         for j in ready_jobs(t):
             start[j] = t
             active.append(j)
+            busy_now += jobs[j].num_gpus
+            if tracked:
+                n_unstarted -= 1
             if inc is not None:
                 rows[j] = inc.add(jobs[j], y_rows[j])
         if not active:
-            pending = [j for j in scheduled if start[j] < 0]
-            if not pending:
+            has_pending = (n_unstarted > 0) if tracked \
+                else any(start[j] < 0 for j in scheduled)
+            if not has_pending:
                 break
             if arrivals is not None:
-                nxt = min(int(arrivals[j]) for j in pending)
+                nxt = next_pending_arrival()
                 if nxt > t:
                     # Idle until the next arrival, but never past the
                     # horizon (the cutoff bounds makespan/total_gpu_slots).
-                    t = min(nxt, horizon)
+                    # Recorded as a zero-active window so time-weighted
+                    # stats cover the gap.
+                    nt = min(nxt, horizon)
+                    events.append(SimEvent(t=t, dt=nt - t, active=0,
+                                           contention=0, busy_gpus=0))
+                    t = nt
                     continue
             # Unstartable remainder (should not happen with FIFO queues).
             break
-        sub_jobs = [jobs[j] for j in active]
         if inc is not None:
-            model = inc.model([rows[j] for j in active])
+            p_arr, tau_arr, phi_raw = inc.window([rows[j] for j in active])
         else:
+            sub_jobs = [jobs[j] for j in active]
             Y = cluster.placement_matrix([gpu_sets[j] for j in active])
             model = evaluate(cluster, sub_jobs, Y)
-        peak_p = max(peak_p, int(model.p.max(initial=0)))
-        phi = model.phi.astype(np.float64)
+            p_arr, tau_arr, phi_raw = model.p, model.tau, model.phi
+        pmax = int(p_arr.max(initial=0))
+        peak_p = max(peak_p, pmax)
+        phi = phi_raw.astype(np.float64)
         if np.any(phi < 1):
             # tau > 1 slot/iteration: degenerate calibration; progress
             # fractionally so the simulation still terminates.
-            phi = np.maximum(phi, 1.0 / model.tau)
-        rem = remaining[active]
+            phi = np.maximum(phi, 1.0 / tau_arr)
+        act = np.asarray(active, dtype=np.int64)
+        rem = remaining[act]
         slots_to_done = np.ceil(rem / phi)
         # Clamp the event window at the horizon so a job cannot "finish"
         # beyond it — horizon_hit runs stop exactly at the cutoff.
         dt = int(max(1, min(slots_to_done.min(), horizon - t)))
-        remaining[active] = rem - phi * dt
+        rem_after = rem - phi * dt
+        remaining[act] = rem_after
         events.append(SimEvent(t=t, dt=dt, active=len(active),
-                               contention=int(model.p.max(initial=0)),
-                               busy_gpus=int(sum(j.num_gpus for j in sub_jobs))))
+                               contention=pmax, busy_gpus=busy_now))
         t += dt
-        done = [j for idx, j in enumerate(active) if remaining[j] <= 1e-9]
-        for j in done:
-            finish[j] = t
-            busy_gpu_slots += (t - start[j]) * jobs[j].num_gpus
-            for g in gpu_sets[j]:
-                queues[int(g)].pop(0)
-            if inc is not None:
-                inc.remove(rows.pop(j))
-        active = [j for j in active if j not in done]
+        done_mask = rem_after <= 1e-9
+        if done_mask.any():
+            keep: list[int] = []
+            for j, done in zip(active, done_mask):
+                if not done:
+                    keep.append(j)
+                    continue
+                finish[j] = t
+                busy_gpu_slots += (t - start[j]) * jobs[j].num_gpus
+                busy_now -= jobs[j].num_gpus
+                release_gpus(j)
+                if inc is not None:
+                    inc.remove(rows.pop(j))
+            active = keep
 
     # Charge partial busy slots for jobs that started but never finished
     # (horizon hit): without this, utilization is overstated because
@@ -187,11 +307,18 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
         if start[j] >= 0 and finish[j] < 0:
             busy_gpu_slots += (t - start[j]) * jobs[j].num_gpus
 
-    completed = int((finish >= 0).sum())
+    completed_mask = finish >= 0
+    completed = int(completed_mask.sum())
     horizon_hit = t >= horizon
     makespan = float(finish.max(initial=0)) if not horizon_hit \
         else float(max(t, finish.max(initial=0)))
-    jct = finish[finish >= 0]
+    if arrivals is not None:
+        # JCT is time-in-system: finish minus arrival, not the absolute
+        # finish slot (those only coincide when everything arrives at 0).
+        jct = (finish[completed_mask]
+               - arrivals[completed_mask]).astype(np.float64)
+    else:
+        jct = finish[completed_mask]
     return SimResult(
         start=start, finish=finish, makespan=makespan,
         avg_jct=float(jct.mean()) if len(jct) else float("inf"),

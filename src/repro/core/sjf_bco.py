@@ -27,8 +27,6 @@ itself is the penalty that balances the two subroutines.
 """
 from __future__ import annotations
 
-import warnings
-
 import numpy as np
 
 from repro.core.api import (PlacementState, ScheduleRequest, ScheduleResult,
@@ -38,11 +36,7 @@ from repro.core.api import (PlacementState, ScheduleRequest, ScheduleResult,
 from repro.core.cluster import Cluster
 from repro.core.jobs import Job
 
-# Legacy alias: ``Schedule`` is now the unified ScheduleResult.
-Schedule = ScheduleResult
-
-__all__ = ["Schedule", "fa_ffp", "lbsgf", "nominal_rho", "rho_hat",
-           "sjf_bco", "sjf_bco_policy"]
+__all__ = ["fa_ffp", "lbsgf", "nominal_rho", "rho_hat", "sjf_bco_policy"]
 
 
 def fa_ffp(state: PlacementState, job: Job, rho_nom: float, u: float,
@@ -129,6 +123,54 @@ def _attempt(cluster: Cluster, jobs_sorted: list[Job],
     return state
 
 
+def _sweep_batched(cluster: Cluster, jobs_sorted: list[Job],
+                   rho_noms: dict[int, float], u: float, theta: float,
+                   kappas: list[int], engine: str | None,
+                   hints: dict[int, np.ndarray] | None
+                   ) -> dict[int, ScheduleResult | None]:
+    """Every kappa branch of one theta, sharing placed prefixes.
+
+    In sorted-job order the branch for kappa places jobs with G_j <= kappa
+    via FA-FFP and the rest via LBSGF, so for ascending kappas the FA-FFP
+    prefix of one branch is a prefix of the next branch's: each prefix
+    segment is placed ONCE into a shared :class:`PlacementState` and every
+    branch forks off it (:meth:`PlacementState.clone`) for its LBSGF
+    suffix.  Placement is deterministic given the state, so each branch's
+    schedule -- and a prefix placement failure, which dooms every kappa at
+    or above the failing job's size -- is bit-identical to running
+    :func:`_attempt` per kappa from scratch."""
+    n = len(jobs_sorted)
+    shared = PlacementState(cluster, engine=engine)
+    results: dict[int, ScheduleResult | None] = {}
+    idx = 0                       # next job to absorb into the shared prefix
+    prefix_ok = True
+    for kappa in sorted(set(kappas)):
+        while prefix_ok and idx < n and jobs_sorted[idx].num_gpus <= kappa:
+            job = jobs_sorted[idx]
+            hint = hints.get(job.jid) if hints else None
+            if not try_place(shared, job, fa_ffp, rho_noms[job.jid], u,
+                             theta, hint=hint):
+                prefix_ok = False                              # line 14
+                break
+            idx += 1
+        if not prefix_ok:
+            results[kappa] = None
+            continue
+        # All jobs placed already: later branches add nothing, so the
+        # shared state needs no fork (it is never committed to again).
+        state = shared.clone() if idx < n else shared
+        ok = True
+        for job in jobs_sorted[idx:]:
+            hint = hints.get(job.jid) if hints else None
+            if not try_place(state, job, lbsgf, rho_noms[job.jid], u, theta,
+                             hint=hint):
+                ok = False                                     # line 14
+                break
+        results[kappa] = finalize(state, n, theta, kappa, "SJF-BCO") \
+            if ok else None
+    return results
+
+
 @register_policy("sjf-bco")
 def sjf_bco_policy(request: ScheduleRequest) -> ScheduleResult:
     """Algorithm 1 (batch) / finish-minimising epoch scheduler (online).
@@ -139,12 +181,22 @@ def sjf_bco_policy(request: ScheduleRequest) -> ScheduleResult:
         the paper's 1..max_j G_j sweep.
       * ``engine`` -- contention-model engine (see
         :class:`~repro.core.api.PlacementState`).
+      * ``sweep`` -- ``"batched"`` (default) runs all kappa branches of a
+        theta off shared placed prefixes (jobs below a branch's kappa
+        place identically in every branch at or above it, so each FA-FFP
+        prefix segment is placed once); ``"sequential"`` is the reference
+        one-kappa-at-a-time loop.  Both produce bit-identical schedules
+        (pinned by tests and the CI bench smoke).
       * ``warm_start`` -- seed each theta's attempts with the placements
         committed at the previous feasible theta (off by default; changes
         the search trajectory, not the accounting).
     """
     cluster, u = request.cluster, request.u
     engine = request.params.get("engine")
+    sweep = request.params.get("sweep", "batched")
+    if sweep not in ("batched", "sequential"):
+        raise ValueError(
+            f"unknown sweep mode {sweep!r}; choose 'batched' or 'sequential'")
     if not request.is_batch:
         def choose(state: PlacementState, job: Job, theta: float) -> bool:
             return pick_best_finish(state, job, [fa_ffp, lbsgf],
@@ -165,27 +217,23 @@ def sjf_bco_policy(request: ScheduleRequest) -> ScheduleResult:
     def attempt(theta: float,
                 prev: ScheduleResult | None = None) -> ScheduleResult | None:
         hints = dict(prev.assignment) if prev is not None else None
+        if sweep == "batched":
+            sweep_results = _sweep_batched(cluster, jobs_sorted, rho_noms,
+                                           u, theta, kappas, engine, hints)
         best_theta: ScheduleResult | None = None
         for kappa in kappas:                                       # line 7
-            state = _attempt(cluster, jobs_sorted, rho_noms, u, theta, kappa,
-                             engine=engine, hints=hints)
-            if state is None:                                      # line 14
+            if sweep == "batched":
+                cand = sweep_results[kappa]
+            else:
+                state = _attempt(cluster, jobs_sorted, rho_noms, u, theta,
+                                 kappa, engine=engine, hints=hints)
+                cand = finalize(state, len(jobs), theta, kappa, "SJF-BCO") \
+                    if state is not None else None                 # line 14
+            if cand is None:
                 continue
-            cand = finalize(state, len(jobs), theta, kappa, "SJF-BCO")
             if best_theta is None or cand.est_makespan < best_theta.est_makespan:
                 best_theta = cand                                  # lines 17-18
         return best_theta
 
     return bisect_theta(attempt, request.horizon, "SJF-BCO",
                         warm_start=bool(request.params.get("warm_start")))
-
-
-def sjf_bco(cluster: Cluster, jobs: list[Job], horizon: int,
-            u: float = 1.5, kappas: list[int] | None = None) -> ScheduleResult:
-    """Deprecated shim: call ``get_policy("sjf-bco")(ScheduleRequest(...))``."""
-    warnings.warn("sjf_bco(cluster, jobs, ...) is deprecated; use "
-                  "get_policy('sjf-bco')(ScheduleRequest(...))",
-                  DeprecationWarning, stacklevel=2)
-    params = {} if kappas is None else {"kappas": kappas}
-    return sjf_bco_policy(ScheduleRequest(cluster=cluster, jobs=list(jobs),
-                                          horizon=horizon, u=u, params=params))

@@ -226,6 +226,170 @@ class TestSimulatorEquivalence:
         assert counts["incremental_updates"] > 0
 
 
+class TestBatchedSweep:
+    """The batched (theta, kappa) sweep must be bit-identical to the
+    sequential reference: shared placed prefixes + forked suffixes change
+    the work, never the schedule."""
+
+    @pytest.mark.parametrize("seed", [3, 5, 9])
+    def test_batched_sweep_identical_to_sequential(self, seed):
+        cluster = philly_cluster(12, seed=seed)
+        mix = ((1, 12), (2, 4), (4, 6), (8, 4), (16, 2))
+        jobs = philly_workload(seed=seed, mix=mix)
+        results = {}
+        for sweep in ("sequential", "batched"):
+            request = ScheduleRequest(cluster=cluster, jobs=jobs,
+                                      horizon=1200,
+                                      params={"sweep": sweep})
+            results[sweep] = get_policy("sjf-bco")(request)
+        ref, bat = results["sequential"], results["batched"]
+        assert bat.est_makespan == ref.est_makespan
+        assert bat.max_busy_time == ref.max_busy_time
+        assert bat.kappa == ref.kappa
+        assert len(bat.assignment) == len(ref.assignment)
+        for (j1, g1), (j2, g2) in zip(ref.assignment, bat.assignment):
+            assert j1 == j2 and np.array_equal(g1, g2)
+
+    @pytest.mark.parametrize("kappas", [[1], [4, 1, 16], [3, 5], [8, 8, 2]])
+    def test_explicit_kappas_preserve_tie_breaks(self, kappas):
+        # Unsorted/duplicate kappa lists: the batched sweep still picks
+        # the same winner (first-best in the user's order) as the
+        # sequential loop.
+        cluster = philly_cluster(10, seed=4)
+        jobs = philly_workload(seed=4, mix=((1, 8), (2, 4), (4, 6), (8, 2)))
+        results = {}
+        for sweep in ("sequential", "batched"):
+            request = ScheduleRequest(cluster=cluster, jobs=jobs,
+                                      horizon=1200,
+                                      params={"sweep": sweep,
+                                              "kappas": list(kappas)})
+            results[sweep] = get_policy("sjf-bco")(request)
+        ref, bat = results["sequential"], results["batched"]
+        assert bat.kappa == ref.kappa
+        assert bat.est_makespan == ref.est_makespan
+        for (j1, g1), (j2, g2) in zip(ref.assignment, bat.assignment):
+            assert j1 == j2 and np.array_equal(g1, g2)
+
+    def test_sweep_composes_with_engines_and_warm_start(self):
+        cluster = philly_cluster(12, seed=3)
+        jobs = philly_workload(seed=3, mix=((1, 12), (2, 4), (4, 6), (8, 4)))
+        ref = None
+        for engine in ("reference", "incremental", "batched"):
+            for sweep in ("sequential", "batched"):
+                for warm in (False, True):
+                    request = ScheduleRequest(
+                        cluster=cluster, jobs=jobs, horizon=1200,
+                        params={"engine": engine, "sweep": sweep,
+                                "warm_start": warm})
+                    sched = get_policy("sjf-bco")(request)
+                    if not warm:
+                        # warm_start legitimately changes the search
+                        # trajectory; cold runs must all coincide.
+                        if ref is None:
+                            ref = sched
+                        assert sched.est_makespan == ref.est_makespan
+                        for (j1, g1), (j2, g2) in zip(ref.assignment,
+                                                      sched.assignment):
+                            assert j1 == j2 and np.array_equal(g1, g2)
+                    assert {j for j, _ in sched.assignment} \
+                        == set(range(len(jobs)))
+
+    def test_unknown_sweep_mode_rejected(self):
+        cluster = philly_cluster(6, seed=1)
+        jobs = philly_workload(seed=1, mix=((1, 4), (2, 2)))
+        request = ScheduleRequest(cluster=cluster, jobs=jobs, horizon=1200,
+                                  params={"sweep": "bogus"})
+        with pytest.raises(ValueError, match="sweep"):
+            get_policy("sjf-bco")(request)
+
+    def test_placement_state_clone_is_independent(self):
+        from repro.core import nominal_rho
+        from repro.core.api import try_place
+        from repro.core.sjf_bco import fa_ffp
+        cluster = philly_cluster(6, seed=2)
+        jobs = philly_workload(seed=2, mix=((2, 4), (4, 2)))
+        state = PlacementState(cluster)
+        for job in jobs[:3]:
+            assert try_place(state, job, fa_ffp,
+                             nominal_rho(cluster, job), 1.5, 1e6)
+        fork = state.clone()
+        snapshot = (state.U.copy(), state.R.copy(), len(state.assignment),
+                    dict(state.est_finish),
+                    [list(f) for f in state._straddle_fin])
+        for job in jobs[3:]:
+            assert try_place(fork, job, fa_ffp,
+                             nominal_rho(cluster, job), 1.5, 1e6)
+        # Committing into the fork left the original untouched.
+        assert np.array_equal(state.U, snapshot[0])
+        assert np.array_equal(state.R, snapshot[1])
+        assert len(state.assignment) == snapshot[2]
+        assert state.est_finish == snapshot[3]
+        assert [list(f) for f in state._straddle_fin] == snapshot[4]
+        assert len(fork.assignment) == len(jobs)
+
+
+class TestBatchedProbes:
+    """scalar_tau_many / probe_tau_many: the vectorised probe entry points
+    must be bit-identical to their scalar forms."""
+
+    @pytest.mark.parametrize("seed", range(3))
+    def test_probe_tau_many_matches_scalar_probes(self, seed):
+        rng = np.random.default_rng(300 + seed)
+        jobs = _random_jobs(rng, 8)
+        inc = IncrementalEval(CL)
+        for job in jobs[:-1]:
+            inc.add(job, _random_placement(rng, job, CL.num_servers))
+        probe = jobs[-1]
+        cands = np.stack([_random_placement(rng, probe, CL.num_servers)
+                          for _ in range(6)])
+        many = inc.probe_tau_many(probe, cands)
+        assert many.shape == (6,)
+        for c in range(6):
+            assert many[c] == inc.probe_tau(probe, cands[c])
+
+    def test_scalar_tau_many_matches_scalar_tau(self):
+        from repro.core import scalar_tau_many
+        job = _job(0, 4)
+        p = np.array([0, 1, 2, 5, 9])
+        n_srv = np.array([1, 2, 1, 3, 4])
+        many = scalar_tau_many(CL, job, p, n_srv)
+        for i in range(len(p)):
+            assert many[i] == scalar_tau(CL, job, int(p[i]), int(n_srv[i]))
+
+    def test_probe_tau_many_rejects_bad_stacks(self):
+        job = _job(0, 4)
+        inc = IncrementalEval(CL)
+        with pytest.raises(ValueError):
+            inc.probe_tau_many(job, np.zeros((2, CL.num_servers + 1),
+                                             dtype=np.int64))
+        with pytest.raises(ValueError):
+            inc.probe_tau_many(job, np.zeros((2, CL.num_servers),
+                                             dtype=np.int64))
+
+    @pytest.mark.parametrize("engine", ["reference", "incremental", "batched"])
+    def test_refined_rho_many_identical_across_engines(self, engine):
+        rng = np.random.default_rng(11)
+        cluster = philly_cluster(6, seed=11)
+        jobs = philly_workload(seed=11, mix=((2, 6), (4, 3)))
+        from repro.core import nominal_rho
+        from repro.core.api import try_place
+        from repro.core.sjf_bco import fa_ffp
+        state = PlacementState(cluster, engine=engine)
+        for job in jobs[:-1]:
+            assert try_place(state, job, fa_ffp,
+                             nominal_rho(cluster, job), 1.5, 1e6)
+        probe = jobs[-1]
+        cands = [np.sort(rng.choice(cluster.num_gpus, size=probe.num_gpus,
+                                    replace=False)) for _ in range(5)]
+        got = state.refined_rho_many(probe, cands)
+        ref_state = PlacementState(cluster, engine="reference")
+        for job in jobs[:-1]:
+            assert try_place(ref_state, job, fa_ffp,
+                             nominal_rho(cluster, job), 1.5, 1e6)
+        expected = [ref_state.refined_rho(probe, g) for g in cands]
+        assert got == expected
+
+
 class TestWarmStart:
     def test_warm_start_schedule_is_valid(self):
         cluster, jobs, request = _philly_request(warm_start=True)

@@ -6,8 +6,8 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core import (ScheduleRequest, get_policy, philly_cluster,
-                        philly_workload, simulate)
+from repro.core import (Cluster, Job, ScheduleRequest, get_policy,
+                        philly_cluster, philly_workload, simulate)
 from repro.core.online import poisson_arrivals, run_online, stream_request
 
 
@@ -73,14 +73,59 @@ class TestOnlineScheduling:
             assert sim.completed == len(jobs), name
             assert np.all(sim.start >= arrivals), name
 
-    def test_schedule_online_shim_warns(self):
+    def test_avg_jct_measures_time_in_system(self):
+        """avg_jct under arrivals is mean(finish - arrival), not the mean
+        absolute finish slot (the two only coincide when everything
+        arrives at t=0)."""
+        cluster = Cluster(capacities=(2,))
+        jobs = [Job(jid=i, num_gpus=2, iters=100, grad_size=1e-3, batch=32,
+                    dt_fwd=3e-4, dt_bwd=8e-3) for i in range(2)]
+        arrivals = np.array([0, 500])
+        asg = [(0, np.arange(2)), (1, np.arange(2))]
+        sim = simulate(cluster, jobs, asg, arrivals=arrivals)
+        assert sim.completed == 2
+        per_job = (sim.finish - arrivals).astype(float)
+        assert sim.avg_jct == pytest.approx(per_job.mean())
+        # Staggered arrivals: the absolute-finish average is way off
+        # (here each job takes ~2 slots but job 1 finishes after slot 500).
+        absolute = sim.finish.astype(float).mean()
+        assert abs(sim.avg_jct - absolute) > 100
+        # Batch runs keep the old definition (arrival == 0 for all).
+        batch = simulate(cluster, jobs, asg)
+        assert batch.avg_jct == pytest.approx(
+            batch.finish.astype(float).mean())
+
+    def test_idle_gap_emits_zero_active_event(self):
+        """Idling to the next arrival is a recorded zero-active window, so
+        time-weighted stats (ContentionStats.mean_active/mean) cover
+        wall-clock time instead of silently weighting busy windows only."""
+        from repro.core import ContentionStats
+        cluster = Cluster(capacities=(2,))
+        jobs = [Job(jid=i, num_gpus=2, iters=100, grad_size=1e-3, batch=32,
+                    dt_fwd=3e-4, dt_bwd=8e-3) for i in range(2)]
+        arrivals = np.array([0, 500])
+        asg = [(0, np.arange(2)), (1, np.arange(2))]
+        sim = simulate(cluster, jobs, asg, arrivals=arrivals)
+        idle = [e for e in sim.events if e.active == 0]
+        assert idle, "the arrival gap must appear in the event stream"
+        assert all(e.busy_gpus == 0 and e.contention == 0 for e in idle)
+        # The windows now tile the whole run, start to makespan.
+        assert sum(e.dt for e in sim.events) == sim.makespan
+        stats = ContentionStats.from_sim(sim)
+        # ~496 of ~502 slots are idle: the wall-clock mean_active is tiny,
+        # where busy-only weighting would have reported ~1.
+        assert stats.mean_active < 0.1
+
+    def test_stream_request_replaces_schedule_online(self):
+        # schedule_online is gone (deprecation overlap over); the
+        # registry path over a stream_request covers the same ground.
         cluster = philly_cluster(4, seed=2)
         jobs = philly_workload(seed=2)[:10]
         jobs = [dataclasses.replace(j, jid=i) for i, j in enumerate(jobs)]
         stream = poisson_arrivals(jobs, rate=0.5, seed=2)
-        from repro.core.online import schedule_online
-        with pytest.deprecated_call():
-            asg = schedule_online(cluster, stream)
+        import repro.core.online as online
+        assert not hasattr(online, "schedule_online")
+        asg = get_policy("sjf-bco")(stream_request(cluster, stream)).assignment
         assert len(asg) == len(jobs)
 
 

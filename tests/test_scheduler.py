@@ -56,12 +56,35 @@ class TestScheduleValidity:
         assert (Y.sum(axis=1) == [jobs[j].num_gpus
                                   for j, _ in sjf_schedule.assignment]).all()
 
-    def test_legacy_shims_still_work(self, philly):
+    def test_legacy_shims_removed(self):
+        # The one-release deprecation overlap is over: the free-function
+        # entrypoints and the POLICIES dict are gone; the registry is the
+        # only policy lookup.
+        import repro.core
+        import repro.core.baselines as baselines
+        import repro.core.extensions as extensions
+        import repro.core.online as online
+        import repro.core.sjf_bco as sjf_bco_mod
+        for name in ("sjf_bco", "Schedule", "first_fit", "list_scheduling",
+                     "random_policy", "reserved_bandwidth",
+                     "sjf_bco_adaptive"):
+            assert name not in repro.core.__all__, name
+        assert not hasattr(sjf_bco_mod, "sjf_bco")
+        assert not hasattr(sjf_bco_mod, "Schedule")
+        for name in ("POLICIES", "first_fit", "list_scheduling",
+                     "random_policy", "reserved_bandwidth"):
+            assert not hasattr(baselines, name), name
+        assert not hasattr(extensions, "sjf_bco_adaptive")
+        assert not hasattr(online, "schedule_online")
+
+    def test_registry_covers_every_policy(self, philly):
+        from repro.core import list_policies
+        assert set(list_policies()) >= {"sjf-bco", "sjf-bco-adaptive",
+                                        "ff", "ls", "rand", "reserved"}
         cluster, jobs = philly
-        from repro.core import sjf_bco
-        with pytest.deprecated_call():
-            sched = sjf_bco(cluster, jobs[:10], horizon=1200)
-        _check_valid(cluster, jobs[:10], sched)
+        request = ScheduleRequest(cluster=cluster, jobs=jobs[:10],
+                                  horizon=1200)
+        _check_valid(cluster, jobs[:10], get_policy("sjf-bco")(request))
 
 
 class TestSimulator:

@@ -1,0 +1,115 @@
+"""The readiness-tracking simulator vs the rescan reference: event-for-event
+bit-identity across seeded Philly scenarios, engines, arrival patterns,
+pathological queue interleavings and horizon cutoffs.
+
+The acceptance bar mirrors the contention-engine one: ``readiness="tracked"``
+(incremental queue-head counters, the default) must reproduce
+``readiness="rescan"`` (the original per-event O(J * G) scan) exactly --
+same SimEvent list, same start/finish arrays, same derived metrics.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ScheduleRequest, get_policy, philly_cluster,
+                        philly_workload, simulate)
+
+
+def _assert_sims_equal(a, b):
+    assert a.events == b.events
+    assert np.array_equal(a.start, b.start)
+    assert np.array_equal(a.finish, b.finish)
+    assert a.makespan == b.makespan
+    assert a.avg_jct == b.avg_jct
+    assert a.completed == b.completed
+    assert a.horizon_hit == b.horizon_hit
+    assert a.peak_contention == b.peak_contention
+    assert a.busy_gpu_slots == b.busy_gpu_slots
+    assert a.total_gpu_slots == b.total_gpu_slots
+
+
+def _philly_case(seed, n_jobs=48, n_servers=10):
+    cluster = philly_cluster(n_servers, seed=seed)
+    mix = ((1, n_jobs // 3), (2, n_jobs // 6), (4, n_jobs // 4),
+           (8, n_jobs // 6), (16, n_jobs // 12))
+    jobs = philly_workload(seed=seed, mix=mix)
+    return cluster, jobs
+
+
+class TestReadinessEquivalence:
+    @pytest.mark.parametrize("seed", range(4))
+    @pytest.mark.parametrize("engine", ["incremental", "reference"])
+    def test_batch_schedules_match_event_for_event(self, seed, engine):
+        cluster, jobs = _philly_case(seed)
+        request = ScheduleRequest(cluster=cluster, jobs=jobs, horizon=2400)
+        sched = get_policy("sjf-bco")(request)
+        tracked = simulate(cluster, jobs, sched.assignment, engine=engine,
+                           readiness="tracked")
+        rescan = simulate(cluster, jobs, sched.assignment, engine=engine,
+                          readiness="rescan")
+        _assert_sims_equal(tracked, rescan)
+        assert tracked.completed == len(jobs)
+
+    @pytest.mark.parametrize("seed", range(4))
+    @pytest.mark.parametrize("engine", ["incremental", "reference"])
+    def test_arrival_schedules_match_event_for_event(self, seed, engine):
+        cluster, jobs = _philly_case(seed)
+        rng = np.random.default_rng(100 + seed)
+        arrivals = rng.integers(0, 400, size=len(jobs)).astype(np.int64)
+        request = ScheduleRequest(cluster=cluster, jobs=jobs,
+                                  arrivals=arrivals, horizon=10**6)
+        sched = get_policy("sjf-bco")(request)
+        tracked = simulate(cluster, jobs, sched.assignment, engine=engine,
+                           arrivals=arrivals, readiness="tracked")
+        rescan = simulate(cluster, jobs, sched.assignment, engine=engine,
+                          arrivals=arrivals, readiness="rescan")
+        _assert_sims_equal(tracked, rescan)
+        assert np.all(tracked.start >= arrivals)
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_random_contended_placements_match(self, seed):
+        """Seeded random GPU sets: heavy straddling and deep FIFO queues
+        exercise queue-head promotion orders the scheduler never emits."""
+        cluster, jobs = _philly_case(seed, n_jobs=60, n_servers=6)
+        rng = np.random.default_rng(200 + seed)
+        asg = [(j.jid, rng.choice(cluster.num_gpus, size=j.num_gpus,
+                                  replace=False)) for j in jobs]
+        tracked = simulate(cluster, jobs, asg, readiness="tracked")
+        rescan = simulate(cluster, jobs, asg, readiness="rescan")
+        _assert_sims_equal(tracked, rescan)
+
+    @pytest.mark.parametrize("horizon", [1, 37, 250, 800])
+    def test_horizon_hits_match(self, horizon):
+        cluster, jobs = _philly_case(1, n_jobs=36, n_servers=6)
+        rng = np.random.default_rng(7)
+        arrivals = rng.integers(0, 600, size=len(jobs)).astype(np.int64)
+        asg = [(j.jid, rng.choice(cluster.num_gpus, size=j.num_gpus,
+                                  replace=False)) for j in jobs]
+        tracked = simulate(cluster, jobs, asg, arrivals=arrivals,
+                           horizon=horizon, readiness="tracked")
+        rescan = simulate(cluster, jobs, asg, arrivals=arrivals,
+                          horizon=horizon, readiness="rescan")
+        _assert_sims_equal(tracked, rescan)
+
+    def test_unknown_readiness_mode_rejected(self):
+        cluster, jobs = _philly_case(0, n_jobs=12, n_servers=4)
+        asg = [(j.jid, np.arange(j.num_gpus)) for j in jobs[:1]]
+        with pytest.raises(ValueError, match="readiness"):
+            simulate(cluster, jobs, asg, readiness="magic")
+
+    def test_events_tile_the_run_with_arrival_gaps(self):
+        """Idle gaps are part of the event stream in both modes, so the
+        windows tile [0, makespan] exactly whenever the run completes."""
+        cluster, jobs = _philly_case(2, n_jobs=24, n_servers=6)
+        arrivals = (np.arange(len(jobs), dtype=np.int64) * 60)
+        request = ScheduleRequest(cluster=cluster, jobs=jobs,
+                                  arrivals=arrivals, horizon=10**6)
+        sched = get_policy("ff")(request)
+        for readiness in ("tracked", "rescan"):
+            sim = simulate(cluster, jobs, sched.assignment,
+                           arrivals=arrivals, readiness=readiness)
+            assert sim.completed == len(jobs)
+            t = 0
+            for e in sim.events:
+                assert e.t == t, "windows must be contiguous"
+                t += e.dt
+            assert t == sim.makespan
