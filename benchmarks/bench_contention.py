@@ -1,6 +1,6 @@
 """Microbenchmark for the batched/incremental contention-model engines.
 
-Three measurements per job count |J| (16 / 64 / 256 by default):
+Four measurements per job count |J| (16 / 64 / 256 by default):
 
   1. *Scheduler pass*: SJF-BCO (Alg. 1, theta bisection + kappa sweep) plus
      the slot simulation, once per engine.  The "reference" engine is the
@@ -8,13 +8,23 @@ Three measurements per job count |J| (16 / 64 / 256 by default):
      every full [J, S] model pass with an O(S)-ish probe/row-update;
      "batched" scores multi-candidate decisions via ``evaluate_many``.
      Schedules are asserted identical across engines (they are bit-equal
-     by construction; see tests/test_batched_contention.py).
+     by construction; see tests/test_batched_contention.py).  Each engine
+     row records the sweep/bisect modes the counters were measured under,
+     so numbers stay comparable across PRs as defaults move.
   2. *Kappa sweep*: SJF-BCO end-to-end (schedule + simulate) with
      ``params={"sweep": "batched"}`` (all kappa branches of a theta forked
      off shared placed prefixes) vs ``"sequential"`` (one kappa at a time,
-     the reference).  Schedules are asserted identical -- CI's bench smoke
-     fails on divergence.  Acceptance bar: >= 2x end-to-end at |J| = 256.
-  3. *Kernel microbench*: ``evaluate_many`` on a [C, J, S] stack vs a
+     the reference), both pinned to the sequential bisection so the sweep
+     axis is isolated.  Schedules are asserted identical -- CI's bench
+     smoke fails on divergence.  Acceptance bar: >= 2x end-to-end at
+     |J| = 256.
+  3. *Theta bisection*: SJF-BCO end-to-end with ``params={"bisect":
+     "speculative"}`` (probe-ladder rounds scored through shared
+     copy-on-write placement lineages, the default) vs ``"sequential"``
+     (the one-theta-at-a-time Alg. 1 oracle).  The final (theta, kappa,
+     placements) are asserted identical -- CI's bench smoke fails on
+     divergence.
+  4. *Kernel microbench*: ``evaluate_many`` on a [C, J, S] stack vs a
      Python loop of C ``evaluate()`` calls over the same placements.
 
 Emits ``BENCH_contention.json`` -- part of the repo's perf trajectory --
@@ -66,6 +76,12 @@ def bench_scheduler(n_jobs: int, seed: int = 1) -> dict:
         row["engines"][engine] = {
             "schedule_s": round(t_sched, 4),
             "simulate_s": round(t_sim, 4),
+            # The active sweep/bisect/stepping modes these counters were
+            # measured under (the request defaults); recorded per row so
+            # numbers stay comparable across PRs as defaults move.
+            "sweep_mode": "batched",
+            "bisect_mode": "speculative",
+            "sim_stepping": "multi" if engine != "reference" else "single",
             "est_makespan": sched.est_makespan,
             "sim_makespan": sim.makespan,
             **counts,
@@ -98,16 +114,18 @@ def bench_scheduler(n_jobs: int, seed: int = 1) -> dict:
 
 def bench_sweep(n_jobs: int, seed: int = 1) -> dict:
     """SJF-BCO end-to-end: batched (shared-prefix) vs sequential kappa
-    sweep, both on the default incremental engine."""
+    sweep, both on the default incremental engine and both pinned to the
+    sequential bisection so only the sweep axis varies."""
     cluster = philly_cluster(20, seed=seed)
     jobs = philly_workload(seed=seed, mix=mix_for(n_jobs))
     horizon = max(1200, 12 * n_jobs)
-    row: dict = {"J": n_jobs, "modes": {}}
+    row: dict = {"J": n_jobs, "bisect_mode": "sequential", "modes": {}}
     schedules = {}
     for sweep in ("sequential", "batched"):
         request = ScheduleRequest(cluster=cluster, jobs=jobs,
                                   horizon=horizon,
-                                  params={"sweep": sweep})
+                                  params={"sweep": sweep,
+                                          "bisect": "sequential"})
         t0 = time.perf_counter()
         sched = get_policy("sjf-bco")(request)
         t_sched = time.perf_counter() - t0
@@ -136,6 +154,53 @@ def bench_sweep(n_jobs: int, seed: int = 1) -> dict:
     row["end_to_end_speedup"] = round(
         row["modes"]["sequential"]["end_to_end_s"]
         / max(1e-9, row["modes"]["batched"]["end_to_end_s"]), 2)
+    return row
+
+
+def bench_bisect(n_jobs: int, seed: int = 1) -> dict:
+    """SJF-BCO end-to-end: speculative vs sequential theta bisection,
+    both on the default incremental engine and batched kappa sweep."""
+    cluster = philly_cluster(20, seed=seed)
+    jobs = philly_workload(seed=seed, mix=mix_for(n_jobs))
+    horizon = max(1200, 12 * n_jobs)
+    row: dict = {"J": n_jobs, "sweep_mode": "batched", "modes": {}}
+    schedules = {}
+    for bisect_mode in ("sequential", "speculative"):
+        request = ScheduleRequest(cluster=cluster, jobs=jobs,
+                                  horizon=horizon,
+                                  params={"bisect": bisect_mode})
+        t0 = time.perf_counter()
+        sched = get_policy("sjf-bco")(request)
+        t_sched = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        sim = simulate(cluster, jobs, sched.assignment)
+        t_sim = time.perf_counter() - t0
+        schedules[bisect_mode] = sched
+        row["modes"][bisect_mode] = {
+            "schedule_s": round(t_sched, 4),
+            "simulate_s": round(t_sim, 4),
+            "end_to_end_s": round(t_sched + t_sim, 4),
+            "theta": sched.theta,
+            "kappa": sched.kappa,
+            "est_makespan": sched.est_makespan,
+            "sim_makespan": sim.makespan,
+        }
+    ref, spec = schedules["sequential"], schedules["speculative"]
+    same = (spec.theta == ref.theta
+            and spec.kappa == ref.kappa
+            and spec.est_makespan == ref.est_makespan
+            and len(spec.assignment) == len(ref.assignment)
+            and all(j1 == j2 and np.array_equal(g1, g2)
+                    for (j1, g1), (j2, g2)
+                    in zip(ref.assignment, spec.assignment)))
+    # Hard failure, not just a report field: CI's bench-smoke step relies
+    # on this to catch speculative-bisection divergence from the oracle.
+    assert same, \
+        f"speculative bisection diverged from sequential at J={n_jobs}"
+    row["speculative_identical_to_sequential"] = same
+    row["end_to_end_speedup"] = round(
+        row["modes"]["sequential"]["end_to_end_s"]
+        / max(1e-9, row["modes"]["speculative"]["end_to_end_s"]), 2)
     return row
 
 
@@ -178,7 +243,8 @@ def main() -> None:
     sizes = [16, 64] if args.quick else [16, 64, 256]
     report = {"bench": "contention-engine",
               "quick": args.quick,
-              "scheduler": [], "sweep": [], "evaluate_many": []}
+              "scheduler": [], "sweep": [], "bisect": [],
+              "evaluate_many": []}
     for n in sizes:
         row = bench_scheduler(n)
         report["scheduler"].append(row)
@@ -196,6 +262,14 @@ def main() -> None:
               f"  batched {row['modes']['batched']['end_to_end_s']:.2f}s"
               f"  x{row['end_to_end_speedup']:.2f}"
               f"  identical={row['batched_identical_to_sequential']}")
+    for n in sizes:
+        row = bench_bisect(n)
+        report["bisect"].append(row)
+        print(f"bisect |J|={n:4d}: sequential "
+              f"{row['modes']['sequential']['end_to_end_s']:.2f}s"
+              f"  speculative {row['modes']['speculative']['end_to_end_s']:.2f}s"
+              f"  x{row['end_to_end_speedup']:.2f}"
+              f"  identical={row['speculative_identical_to_sequential']}")
     for n in sizes:
         row = bench_evaluate_many(n, n_cands=16 if args.quick else 64)
         report["evaluate_many"].append(row)

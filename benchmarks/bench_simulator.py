@@ -1,21 +1,26 @@
-"""Microbenchmark for the simulator's incremental readiness tracking.
+"""Microbenchmark for the simulator's incremental scaling axes.
 
-Measures ``simulate()`` wall-clock, ``readiness="tracked"`` (per-GPU
-queue-head pointers + per-job GPUs-at-head counters, the default) vs
-``readiness="rescan"`` (the original per-event O(J * G) scan of every
-scheduled job), at |J| in {256, 1024} (``--quick``: {64, 256}):
+Two sections, at |J| in {256, 1024} (``--quick``: {64, 256}), each over a
+*batch* case (every job available at t=0, seeded random G_j-GPU placements
+-- heavy straddling and deep FIFO queues, the simulator-bound regime the
+Fig. 3 loop hits at scale; scheduling cost is excluded by construction) and
+an *online* case (the same placements behind a staggered Poisson-gap
+arrival stream: idle windows + arrival-constrained starts):
 
-  * *batch*: every job available at t=0, seeded random G_j-GPU placements
-    -- heavy straddling and deep FIFO queues, the simulator-bound regime
-    the Fig. 3 loop hits at scale (scheduling cost is excluded by
-    construction, so this isolates the simulator);
-  * *online*: the same placements behind a staggered Poisson-gap arrival
-    stream (idle windows + arrival-constrained starts).
+  1. *Readiness* (``simulate`` section): ``readiness="tracked"`` (per-GPU
+     queue-head pointers + per-job GPUs-at-head counters, the default --
+     which now also means multi-window stepping) vs ``readiness="rescan"``
+     (the original per-event O(J * G) scan, the semantics oracle).
+  2. *Stepping* (``stepping`` section): tracked readiness with
+     ``stepping="multi"`` (speculative multi-window ladders: the Eq.
+     (6)-(8) terms of many completion stages per vectorised batch) vs
+     ``stepping="single"`` (one IncrementalEval window at a time).
 
-Both modes must agree event-for-event (asserted here -- CI's bench smoke
-runs ``--quick`` and fails on divergence).  Emits ``BENCH_simulator.json``
-with the wall-clock numbers; the acceptance bar is >= 5x on the batch
-case at |J| = 1024.
+All combinations must agree event-for-event (asserted here -- CI's bench
+smoke runs ``--quick`` and fails on divergence).  Emits
+``BENCH_simulator.json`` with the wall-clock numbers; acceptance bars:
+>= 5x tracked-vs-rescan and >= 2x vs the PR 4 tracked numbers with
+multi-window stepping on, both at |J| = 1024.
 
 Usage::
 
@@ -37,7 +42,7 @@ except ImportError:                     # run as a script from benchmarks/
     from common import mix_for
 
 
-def bench_simulate(n_jobs: int, seed: int = 1, repeats: int = 5) -> dict:
+def _case_inputs(n_jobs: int, seed: int):
     cluster = philly_cluster(20, seed=seed)
     jobs = philly_workload(seed=seed, mix=mix_for(n_jobs))
     rng = np.random.default_rng(seed)
@@ -46,6 +51,19 @@ def bench_simulate(n_jobs: int, seed: int = 1, repeats: int = 5) -> dict:
                   for j in jobs]
     arrivals = np.floor(np.cumsum(
         rng.exponential(2.0, size=len(jobs)))).astype(np.int64)
+    return cluster, jobs, assignment, arrivals
+
+
+def _sims_equal(a, b) -> bool:
+    return bool(a.events == b.events
+                and np.array_equal(a.start, b.start)
+                and np.array_equal(a.finish, b.finish)
+                and a.avg_jct == b.avg_jct
+                and a.busy_gpu_slots == b.busy_gpu_slots)
+
+
+def bench_simulate(n_jobs: int, seed: int = 1, repeats: int = 5) -> dict:
+    cluster, jobs, assignment, arrivals = _case_inputs(n_jobs, seed)
     row: dict = {"J": n_jobs, "cases": {}}
     for case, arr in (("batch", None), ("online", arrivals)):
         sims, times = {}, {}
@@ -60,19 +78,48 @@ def bench_simulate(n_jobs: int, seed: int = 1, repeats: int = 5) -> dict:
         a, b = sims["tracked"], sims["rescan"]
         # Hard failure, not just a report field: CI's bench-smoke step
         # relies on this to catch readiness-tracking divergence.
-        same = bool(a.events == b.events
-                    and np.array_equal(a.start, b.start)
-                    and np.array_equal(a.finish, b.finish)
-                    and a.avg_jct == b.avg_jct
-                    and a.busy_gpu_slots == b.busy_gpu_slots)
+        same = _sims_equal(a, b)
         assert same, f"tracked readiness diverged from rescan at J={n_jobs}"
         row["cases"][case] = {
             "tracked_s": round(times["tracked"], 4),
             "rescan_s": round(times["rescan"], 4),
+            # the modes the tracked row ran under (request defaults)
+            "tracked_stepping": "multi",
             "speedup": round(times["rescan"] / max(1e-9, times["tracked"]), 2),
             "events": len(a.events),
             "makespan": float(a.makespan),
             "identical_to_rescan": same,
+        }
+    return row
+
+
+def bench_stepping(n_jobs: int, seed: int = 1, repeats: int = 5) -> dict:
+    """Multi-window ladders vs single-window stepping, both tracked."""
+    cluster, jobs, assignment, arrivals = _case_inputs(n_jobs, seed)
+    row: dict = {"J": n_jobs, "cases": {}}
+    for case, arr in (("batch", None), ("online", arrivals)):
+        sims, times = {}, {}
+        for stepping in ("multi", "single"):
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                sim = simulate(cluster, jobs, assignment, arrivals=arr,
+                               stepping=stepping)
+                best = min(best, time.perf_counter() - t0)
+            sims[stepping], times[stepping] = sim, best
+        a, b = sims["multi"], sims["single"]
+        # Hard failure, not just a report field: CI's bench-smoke step
+        # relies on this to catch multi-window stepping divergence.
+        same = _sims_equal(a, b)
+        assert same, \
+            f"multi-window stepping diverged from single at J={n_jobs}"
+        row["cases"][case] = {
+            "multi_s": round(times["multi"], 4),
+            "single_s": round(times["single"], 4),
+            "speedup": round(times["single"] / max(1e-9, times["multi"]), 2),
+            "events": len(a.events),
+            "makespan": float(a.makespan),
+            "identical_to_single": same,
         }
     return row
 
@@ -86,7 +133,7 @@ def main() -> None:
 
     sizes = [64, 256] if args.quick else [256, 1024]
     report = {"bench": "simulator-readiness", "quick": args.quick,
-              "simulate": []}
+              "simulate": [], "stepping": []}
     for n in sizes:
         row = bench_simulate(n)
         report["simulate"].append(row)
@@ -94,6 +141,13 @@ def main() -> None:
             print(f"|J|={n:5d} {case:6s}  rescan {r['rescan_s']:.3f}s"
                   f"  tracked {r['tracked_s']:.3f}s  x{r['speedup']:.2f}"
                   f"  events={r['events']}")
+    for n in sizes:
+        row = bench_stepping(n)
+        report["stepping"].append(row)
+        for case, r in row["cases"].items():
+            print(f"stepping |J|={n:5d} {case:6s}  single {r['single_s']:.3f}s"
+                  f"  multi {r['multi_s']:.3f}s  x{r['speedup']:.2f}"
+                  f"  identical={r['identical_to_single']}")
 
     with open(args.out, "w") as fh:
         json.dump(report, fh, indent=2)

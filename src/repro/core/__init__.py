@@ -20,8 +20,9 @@ one-release deprecation overlap: use
 ``get_policy(name)(ScheduleRequest(...))``.
 """
 from repro.core.api import (PlacementState, ScheduleRequest, ScheduleResult,
-                            SchedulingPolicy, get_policy, list_policies,
-                            nominal_rho, register_policy, rho_hat)
+                            SchedulingPolicy, SharedState, get_policy,
+                            list_policies, nominal_rho, probe_thetas,
+                            register_policy, rho_hat, try_place_group)
 from repro.core.cluster import Cluster, philly_cluster
 from repro.core.jobs import Job, philly_workload
 from repro.core.contention import (IncrementalEval, IterModel,
@@ -29,7 +30,8 @@ from repro.core.contention import (IncrementalEval, IterModel,
                                    estimate_exec_time, eval_counts, evaluate,
                                    evaluate_many, evaluation_engine,
                                    predict_exec_time, reset_eval_counts,
-                                   scalar_tau_many, slots_for, tau_bounds)
+                                   scalar_tau_many, slots_for, stack_model,
+                                   tau_backend, tau_bounds, tau_ladder)
 from repro.core.simulator import SimEvent, SimResult, simulate
 from repro.core.sjf_bco import fa_ffp, lbsgf
 from repro.core.scenario import (ArrivalSpec, ClusterSpec, ContentionStats,
@@ -41,7 +43,8 @@ __all__ = [
     # unified scheduling API
     "ScheduleRequest", "ScheduleResult", "SchedulingPolicy",
     "register_policy", "get_policy", "list_policies",
-    "PlacementState", "nominal_rho", "rho_hat",
+    "PlacementState", "SharedState", "nominal_rho", "rho_hat",
+    "probe_thetas", "try_place_group",
     # scenarios
     "Scenario", "ClusterSpec", "WorkloadSpec", "ArrivalSpec",
     "RunReport", "ContentionStats", "run_scenario",
@@ -51,6 +54,7 @@ __all__ = [
     "evaluate_many", "IncrementalEval", "evaluation_engine",
     "eval_counts", "reset_eval_counts", "scalar_tau_many", "slots_for",
     "estimate_exec_time", "predict_exec_time", "tau_bounds",
+    "stack_model", "tau_backend", "tau_ladder",
     "SimEvent", "SimResult", "simulate",
     # algorithm subroutines
     "fa_ffp", "lbsgf",

@@ -264,19 +264,28 @@ class PlacementState:
         self.est_finish: dict[int, float] = {}
         # Per-server sorted est_finish of straddling placed jobs (Eq. 6
         # suffix counts for the incremental engine; maintained by commit).
+        # Cloning shares these lists copy-on-write: ``_fin_owned[s]`` says
+        # whether this state may mutate server s's list in place.
         self._straddle_fin: list[list[float]] = \
             [[] for _ in range(cluster.num_servers)]
+        self._fin_owned = [True] * cluster.num_servers
 
     def _y_of(self, gpus: np.ndarray) -> np.ndarray:
-        y = np.zeros(self.cluster.num_servers, dtype=np.int64)
-        np.add.at(y, self.cluster.gpu_server[gpus], 1)
-        return y
+        return np.bincount(self.cluster.gpu_server[gpus],
+                           minlength=self.cluster.num_servers)
 
     def clone(self) -> "PlacementState":
         """Independent copy of the attempt state: committing to the clone
         leaves the original untouched.  The batched (theta, kappa) sweep
-        (``sjf-bco`` with ``params={"sweep": "batched"}``) forks each kappa
-        branch off the shared placed prefix with this."""
+        (``sjf-bco`` with ``params={"sweep": "batched"}``) and the
+        speculative bisection's lineage forks both clone per branch.
+
+        The per-server sorted-finish lists are shared copy-on-write:
+        both sides drop ownership here, and :meth:`commit` copies a
+        server's list the first time it inserts into an un-owned one --
+        so a clone is O(placed jobs + servers) instead of O(total finish
+        entries), which is what keeps heavy branching affordable at
+        |J| ~ 1024."""
         new = PlacementState.__new__(PlacementState)
         new.cluster = self.cluster
         new.engine = self.engine
@@ -287,7 +296,9 @@ class PlacementState:
         new.placed_y = list(self.placed_y)
         new.est_start = dict(self.est_start)
         new.est_finish = dict(self.est_finish)
-        new._straddle_fin = [list(fin) for fin in self._straddle_fin]
+        new._straddle_fin = list(self._straddle_fin)
+        self._fin_owned = [False] * self.cluster.num_servers
+        new._fin_owned = [False] * self.cluster.num_servers
         return new
 
     def advance_to(self, t: float) -> None:
@@ -306,13 +317,18 @@ class PlacementState:
         the Eq. (6) level is 1 + max over its straddled servers of the
         number of placed straddling jobs still running at ``start`` (a
         suffix count on the per-server sorted est_finish lists)."""
-        straddled = np.flatnonzero((y_j > 0) & (y_j < job.num_gpus))
         p = 0
+        n_srv = 0
         cut = start + 1e-9
-        for s in straddled:
-            fin = self._straddle_fin[s]
-            p = max(p, len(fin) - bisect.bisect_right(fin, cut) + 1)
-        return p, len(np.flatnonzero(y_j))
+        G = job.num_gpus
+        straddle_fin = self._straddle_fin
+        for s, y in enumerate(y_j.tolist()):
+            if y > 0:
+                n_srv += 1
+                if y < G:
+                    fin = straddle_fin[s]
+                    p = max(p, len(fin) - bisect.bisect_right(fin, cut) + 1)
+        return p, n_srv
 
     def _probe_rho(self, job: Job, y_j: np.ndarray, start: float) -> float:
         """Incremental rho_hat(y^k): Eq. (6) via :meth:`_probe_p`, then
@@ -395,13 +411,52 @@ class PlacementState:
         self.placed_y.append(y)
         self.est_start[job.jid] = start
         self.est_finish[job.jid] = start + rho
-        for s in np.flatnonzero((y > 0) & (y < job.num_gpus)):
-            bisect.insort(self._straddle_fin[s], start + rho)
+        G = job.num_gpus
+        fin = start + rho
+        for s, ys in enumerate(y.tolist()):
+            if 0 < ys < G:
+                if not self._fin_owned[s]:       # copy-on-first-write
+                    self._straddle_fin[s] = list(self._straddle_fin[s])
+                    self._fin_owned[s] = True
+                bisect.insort(self._straddle_fin[s], fin)
 
 
 # A picker maps (state, job, rho_nom, u, theta) -> gpu ids or None.
 Picker = Callable[[PlacementState, Job, float, float, float],
                   "np.ndarray | None"]
+
+
+class SharedState:
+    """A :class:`PlacementState` shared by several speculative branches.
+
+    The speculative bisection evaluates many thetas off one placement
+    history; branches read the shared state freely and :meth:`acquire` an
+    exclusive copy only when they are about to commit.  ``refs`` counts
+    the live branches: acquiring with siblings still attached clones
+    (:meth:`PlacementState.clone`, itself copy-on-write), acquiring as the
+    sole owner reuses the state in place -- so a run that never diverges
+    costs exactly one state, like the sequential oracle."""
+
+    __slots__ = ("state", "refs")
+
+    def __init__(self, state: PlacementState, refs: int = 1):
+        self.state = state
+        self.refs = refs
+
+    def split(self, n_children: int) -> None:
+        """Replace this holder's one reference by ``n_children`` of them."""
+        self.refs += n_children - 1
+
+    def acquire(self) -> "SharedState":
+        """An exclusively-owned holder, cloning only if siblings remain."""
+        if self.refs <= 1:
+            return self
+        self.refs -= 1
+        return SharedState(self.state.clone())
+
+    def release(self) -> None:
+        """Drop one reference (a branch that failed or finished)."""
+        self.refs -= 1
 
 
 def try_place(state: PlacementState, job: Job, picker: Picker,
@@ -430,10 +485,12 @@ def try_place(state: PlacementState, job: Job, picker: Picker,
     if hint is not None:
         gpus = np.asarray(hint)
         rho, start = state.refined_rho(job, gpus)
-        if np.all(state.U[gpus] + rho / u <= theta + 1e-9):
+        # max-then-add equals elementwise add-then-max (float addition is
+        # monotone), so one scalar comparison decides the Eq. (16) check.
+        if float(state.U[gpus].max()) + rho / u <= theta + 1e-9:
             state.commit(job, gpus, rho, start, u)
             return True
-        scored[tuple(gpus.tolist())] = (rho, start)
+        scored[gpus.tobytes()] = (rho, start)
     # The ladder pre-calls the picker speculatively, which would desync a
     # stateful picker (e.g. RAND's rng): such pickers set ``stateful=True``
     # and are scored per-try only.
@@ -457,15 +514,119 @@ def try_place(state: PlacementState, job: Job, picker: Picker,
         if gpus is None:
             return False
         gpus = np.asarray(gpus)
-        key = tuple(gpus.tolist())
+        key = gpus.tobytes()
         if key not in scored:
             scored[key] = state.refined_rho(job, gpus)
         rho, start = scored[key]
-        if np.all(state.U[gpus] + rho / u <= theta + 1e-9):
+        if float(state.U[gpus].max()) + rho / u <= theta + 1e-9:
             state.commit(job, gpus, rho, start, u)
             return True
         rho_try = max(rho, rho_try * 1.05)
     return False
+
+
+def _theta_runs(thetas: np.ndarray, keys: np.ndarray) -> list[np.ndarray]:
+    """Split an ascending theta vector into runs of equal ``keys``."""
+    cuts = np.flatnonzero(keys[1:] != keys[:-1]) + 1
+    return np.split(thetas, cuts)
+
+
+def try_place_group(thetas, shared: SharedState, job: Job, picker: Picker,
+                    rho_nom: float, u: float, tries: int = 4
+                    ) -> list[tuple[np.ndarray, "SharedState | None", bool]]:
+    """:func:`try_place` for a whole group of thetas sharing one history.
+
+    ``thetas`` (ascending) all reached this placement step with identical
+    committed placements (held by ``shared``).  The group is advanced in
+    lockstep and split only where the per-theta decisions of the
+    sequential :func:`try_place` actually diverge:
+
+      * the picker's feasible pool is the threshold set
+        ``U + rho/u <= theta + 1e-9``, so thetas whose pools coincide pick
+        the same GPUs (pools are nested in theta; the picker must declare
+        this dependence with ``picker.theta_pool = True``);
+      * the refined Eq. (16) re-check passes exactly for
+        ``theta + 1e-9 >= max(U[gpus] + rho/u)``, so a group splits into a
+        committing upper range and a retrying lower range.
+
+    Returns ``(sub_thetas, shared_state, placed)`` triples covering
+    ``thetas``; failed subgroups carry ``None``.  Decision-for-decision
+    identical to running :func:`try_place` per theta, with states cloned
+    only at divergence points (see :class:`SharedState`).
+    """
+    if not getattr(picker, "theta_pool", False):
+        raise ValueError(
+            f"picker {getattr(picker, '__name__', picker)!r} is not marked "
+            "theta_pool; speculative placement needs theta to enter only "
+            "through the U + rho/u <= theta feasibility pool")
+    thetas = np.asarray(thetas, dtype=np.float64)
+    if len(thetas) == 1 and shared.refs <= 1:
+        # Singleton group holding its state exclusively: no split can
+        # trigger and no sibling reads the state, so run the plain loop
+        # (same decisions, none of the group bookkeeping).  This is the
+        # dominant case once lineages have diverged.
+        ok = try_place(shared.state, job, picker, rho_nom, u,
+                       float(thetas[0]), tries=tries)
+        return [(thetas, shared if ok else None, ok)]
+    out: list[tuple[np.ndarray, SharedState | None, bool]] = []
+    # Worklist items: (thetas, shared holder, rho_try, memoised scores).
+    # Scores are pure functions of (state, gpu set) and every branch of a
+    # work item reads the same un-mutated state, so the memo is shared.
+    work = [(thetas, shared, rho_nom, {})]
+    for _ in range(tries):
+        next_work = []
+        for th_g, holder, rho_try, scored in work:
+            state = holder.state
+            # Pool split: group thetas by how many GPUs clear the
+            # rho_try-filter.  Equal counts <=> equal pools (threshold
+            # sets are nested), hence identical picker decisions.  The
+            # common no-split case needs only the two extreme counts.
+            v = state.U + rho_try / u
+            if len(th_g) == 1 or int((v <= th_g[0] + 1e-9).sum()) \
+                    == int((v <= th_g[-1] + 1e-9).sum()):
+                subs = [th_g]
+            else:
+                counts = np.searchsorted(np.sort(v), th_g + 1e-9,
+                                         side="right")
+                subs = _theta_runs(th_g, counts)
+            outcomes = []      # (sub, kind, payload)
+            n_live = 0
+            for sub in subs:
+                gpus = picker(state, job, rho_try, u, float(sub[0]))
+                if gpus is None:
+                    outcomes.append((sub, "fail", None))
+                    continue
+                gpus = np.asarray(gpus)
+                key = gpus.tobytes()
+                if key not in scored:
+                    scored[key] = state.refined_rho(job, gpus)
+                rho, start = scored[key]
+                passes = sub + 1e-9 >= (state.U[gpus] + rho / u).max()
+                lo, hi = sub[~passes], sub[passes]
+                if len(hi):
+                    outcomes.append((hi, "commit", (gpus, rho, start)))
+                    n_live += 1
+                if len(lo):
+                    outcomes.append((lo, "retry", max(rho, rho_try * 1.05)))
+                    n_live += 1
+            holder.split(n_live)       # fails drop their reference
+            for sub, kind, payload in outcomes:
+                if kind == "fail":
+                    out.append((sub, None, False))
+                elif kind == "commit":
+                    own = holder.acquire()
+                    gpus, rho, start = payload
+                    own.state.commit(job, gpus, rho, start, u)
+                    out.append((sub, own, True))
+                else:
+                    next_work.append((sub, holder, payload, scored))
+        work = next_work
+        if not work:
+            break
+    for th_g, holder, _, _ in work:    # tries exhausted
+        holder.release()
+        out.append((th_g, None, False))
+    return out
 
 
 def finalize(state: PlacementState, n_jobs: int, theta: float,
@@ -488,9 +649,44 @@ def finalize(state: PlacementState, n_jobs: int, theta: float,
 # --------------------------------------------------------------------------
 
 
+def probe_thetas(left: float, right: float, levels: int,
+                 cutoff: float = -np.inf) -> list[float]:
+    """The geometric probe ladder of the speculative bisection.
+
+    Descends from the bracket midpoint assuming each probe comes back
+    feasible -- the sequential bisection's next theta after a feasible
+    midpoint is the midpoint of the *lower* half, so the ladder is the
+    exact theta sequence of up to ``levels`` consecutive
+    feasible-tightening steps, spaced geometrically (bracket-halving)
+    inside ``[left, right]``.  Probing the descending chain (rather than
+    the full decision tree) keeps the speculative attempts clustered:
+    consecutive probes share almost all their placement decisions, and a
+    mispredicted (infeasible) probe simply ends the committed walk early.
+
+    ``cutoff`` prunes ladder tail entries that are almost certainly
+    infeasible (probing those would buy nothing: an infeasible result
+    ends the committed walk anyway, and near-boundary failures are the
+    expensive ones).  The bracket midpoint is always kept, so every round
+    still commits at least one bisection decision.
+    """
+    nodes: list[float] = []
+    hi = right
+    for _ in range(levels):
+        if left > hi:
+            break
+        mid = 0.5 * (left + hi)
+        if nodes and mid < cutoff:
+            break
+        nodes.append(mid)
+        hi = mid - 1.0
+    return nodes
+
+
 def bisect_theta(attempt: Callable[..., "ScheduleResult | None"],
                  horizon: int, policy: str,
-                 warm_start: bool = False) -> ScheduleResult:
+                 warm_start: bool = False,
+                 attempt_many: "Callable[[list[float]], dict[float, ScheduleResult | None]] | None" = None,
+                 levels: int = 3, floor: float = -np.inf) -> ScheduleResult:
     """Algorithm 1's outer loop: bisection on the busy-time budget theta_u.
 
     ``attempt(theta)`` returns the best schedule feasible under that
@@ -503,12 +699,57 @@ def bisect_theta(attempt: Callable[..., "ScheduleResult | None"],
     feasible theta (or None); policies use its placements as the initial
     candidate set (see ``try_place``'s ``hint``), so each bisection step
     starts from a known-good placement instead of searching from scratch.
+
+    With ``attempt_many`` set (and ``warm_start`` off -- a warm start
+    makes each attempt depend on the previous one, which cannot be
+    speculated), the bisection runs **speculatively**: each round scores
+    every theta of the :func:`probe_thetas` ladder in one batched
+    ``attempt_many`` call, then commits bisection decisions by walking
+    the exact sequential update rule over the precomputed results until
+    the next theta falls outside the ladder (the first mispredicted,
+    i.e. infeasible, probe).  Unconsumed probe results are discarded, so
+    the final schedule -- best feasible theta, its kappa, its placements
+    -- is bit-identical to the sequential oracle's.
     """
     best: ScheduleResult | None = None
     prev: ScheduleResult | None = None
     left, right = 1.0, float(horizon)
+    speculative = attempt_many is not None and not warm_start and levels > 1
+    results: dict[float, ScheduleResult | None] = {}
     while left <= right:
         theta = 0.5 * (left + right)
+        if speculative:
+            if theta not in results:
+                # Results are cached across rounds: a probe evaluated but
+                # not yet consumed (the walk broke off elsewhere) is free
+                # when a later bracket's midpoint lands on it.  Ladder
+                # entries are pruned below (a) the policy's feasibility
+                # floor (e.g. the largest single-job charge rho_nom/u: no
+                # GPU could fit that job under a smaller budget), (b) the
+                # bottom quarter of the bracket, where the committed
+                # `left` (the largest theta proven infeasible, plus one)
+                # says infeasibility is close -- an infeasible probe ends
+                # the walk anyway, and near-boundary failures are the
+                # expensive attempts.  Pruning never changes the result:
+                # a pruned theta the walk does need is simply evaluated
+                # as the next round's bracket midpoint.
+                cut = max(floor, left + (right - left) / 4.0)
+                todo = [th for th in probe_thetas(left, right, levels, cut)
+                        if th not in results]
+                results.update(attempt_many(todo))
+            while left <= right:
+                theta = 0.5 * (left + right)
+                if theta not in results:
+                    break           # mispredicted: start the next round
+                cand = results[theta]
+                if cand is not None:
+                    prev = cand
+                    if best is None or cand.est_makespan <= best.est_makespan:
+                        best = cand
+                    right = theta - 1.0
+                else:
+                    left = theta + 1.0
+            continue
         cand = attempt(theta, prev) if warm_start else attempt(theta)
         if cand is not None:
             prev = cand
@@ -563,7 +804,7 @@ def pick_best_finish(state: PlacementState, job: Job, pickers: list[Picker],
             cands.append(np.asarray(gpus))
     best = None  # (est_finish, gpus, rho, start)
     for gpus, (rho, start) in zip(cands, state.refined_rho_many(job, cands)):
-        if np.any(state.U[gpus] + rho / u > theta + 1e-9):
+        if float(state.U[gpus].max()) + rho / u > theta + 1e-9:
             continue
         if best is None or start + rho < best[0]:
             best = (start + rho, gpus, rho, start)
@@ -577,7 +818,8 @@ def pick_best_finish(state: PlacementState, job: Job, pickers: list[Picker],
 __all__ = [
     "ScheduleRequest", "ScheduleResult", "SchedulingPolicy",
     "register_policy", "get_policy", "list_policies",
-    "PlacementState", "Picker", "Chooser",
-    "try_place", "finalize", "bisect_theta", "schedule_arrivals",
+    "PlacementState", "Picker", "Chooser", "SharedState",
+    "try_place", "try_place_group", "finalize", "bisect_theta",
+    "probe_thetas", "schedule_arrivals",
     "pick_best_finish", "nominal_rho", "rho_hat",
 ]

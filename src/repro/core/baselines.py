@@ -24,9 +24,9 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.api import (PlacementState, Picker, ScheduleRequest,
-                            ScheduleResult, bisect_theta, finalize,
-                            nominal_rho, register_policy, schedule_arrivals,
-                            try_place)
+                            ScheduleResult, SharedState, bisect_theta,
+                            finalize, nominal_rho, register_policy,
+                            schedule_arrivals, try_place, try_place_group)
 from repro.core.jobs import Job
 
 __all__ = ["first_fit_policy", "list_scheduling_policy", "random_policy_policy",
@@ -49,6 +49,12 @@ def _ls_pick(state: PlacementState, job: Job, rho_nom: float, u: float,
         return None
     order = feasible[np.argsort(state.U[feasible], kind="stable")]
     return order[: job.num_gpus]
+
+
+# theta enters both pickers only through the U + rho/u <= theta + 1e-9
+# pool, so the speculative bisection may advance theta groups in lockstep.
+_ff_pick.theta_pool = True
+_ls_pick.theta_pool = True
 
 
 def _picker_policy(request: ScheduleRequest, picker: Picker, name: str
@@ -75,8 +81,43 @@ def _picker_policy(request: ScheduleRequest, picker: Picker, name: str
                 return None
         return finalize(state, len(jobs), theta, None, name)
 
-    return bisect_theta(attempt, request.horizon, name,
-                        warm_start=bool(request.params.get("warm_start")))
+    bisect_mode = request.params.get("bisect", "speculative")
+    if bisect_mode not in ("speculative", "sequential"):
+        raise ValueError(f"unknown bisect mode {bisect_mode!r}; "
+                         "choose 'speculative' or 'sequential'")
+    warm = bool(request.params.get("warm_start"))
+    attempt_many = None
+    if bisect_mode == "speculative" and not warm:
+        def attempt_many(thetas: list[float]
+                         ) -> "dict[float, ScheduleResult | None]":
+            # One shared state for the whole probe ladder; theta groups
+            # advance in lockstep and fork (copy-on-write) only where the
+            # budgets change a placement decision.
+            out: dict[float, ScheduleResult | None] = {}
+            root = SharedState(PlacementState(cluster, engine=engine))
+            work = [(np.asarray(sorted(thetas), dtype=np.float64), root, 0)]
+            while work:
+                th_g, holder, idx = work.pop()
+                if idx == len(jobs):
+                    for th in th_g:
+                        out[float(th)] = finalize(holder.state, len(jobs),
+                                                  float(th), None, name)
+                    holder.release()
+                    continue
+                job = jobs[idx]
+                for sub, sh, ok in try_place_group(
+                        th_g, holder, job, picker, rho_noms[job.jid], u):
+                    if ok:
+                        work.append((sub, sh, idx + 1))
+                    else:
+                        for th in sub:
+                            out[float(th)] = None
+            return out
+
+    return bisect_theta(attempt, request.horizon, name, warm_start=warm,
+                        attempt_many=attempt_many,
+                        levels=int(request.params.get("bisect_levels", 4)),
+                        floor=max(rho_noms.values()) / u)
 
 
 @register_policy("ff")

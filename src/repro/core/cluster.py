@@ -14,6 +14,7 @@ The contention-model constants (paper Eqs. 6-8):
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Sequence
 
 import numpy as np
@@ -41,19 +42,25 @@ class Cluster:
 
     # ---- derived quantities -------------------------------------------------
 
-    @property
+    @functools.cached_property
     def num_servers(self) -> int:
         return len(self.capacities)
 
-    @property
+    @functools.cached_property
     def num_gpus(self) -> int:
         return int(sum(self.capacities))
 
-    @property
+    # The derived arrays below are cached per instance (the scheduler and
+    # simulator read them in every placement probe / event window).  The
+    # dataclass is frozen, so the fields they derive from never change;
+    # ``functools.cached_property`` writes straight to ``__dict__`` and
+    # therefore works on frozen dataclasses.  Treat them as read-only.
+
+    @functools.cached_property
     def capacities_array(self) -> np.ndarray:
         return np.asarray(self.capacities, dtype=np.int64)
 
-    @property
+    @functools.cached_property
     def gpu_server(self) -> np.ndarray:
         """Map global GPU id -> server id, shape [N]."""
         return np.repeat(np.arange(self.num_servers), self.capacities_array)

@@ -54,6 +54,8 @@ EVAL_COUNTS = {
     "batched_rows": 0,      # total candidates scored across those calls
     "incremental_updates": 0,  # IncrementalEval row add/remove operations
     "probes": 0,            # O(S) single-job tau probes (no full pass)
+    "ladder_calls": 0,      # simulator multi-window tau_ladder batches
+    "ladder_rows": 0,       # total completion stages across those batches
 }
 
 
@@ -88,6 +90,28 @@ def resolve_engine(name: str | None) -> str:
     if name not in ENGINES:
         raise ValueError(f"unknown engine {name!r}; choose from {ENGINES}")
     return name
+
+
+# Backend for stack_model's inner tau reduction: "numpy" (default) or
+# "kernel" (the jitted Pallas kernel in repro.kernels.tau; interpret mode
+# on CPU, compiled Mosaic on TPU).  On CPU the kernel exists for numerics
+# parity and TPU forward-compat, not speed -- hence the opt-in.
+TAU_BACKENDS = ("numpy", "kernel")
+TAU_BACKEND = "numpy"
+
+
+@contextlib.contextmanager
+def tau_backend(name: str):
+    """Temporarily select the stack-model tau backend ("numpy"/"kernel")."""
+    global TAU_BACKEND
+    if name not in TAU_BACKENDS:
+        raise ValueError(f"unknown tau backend {name!r}; "
+                         f"choose from {TAU_BACKENDS}")
+    prev, TAU_BACKEND = TAU_BACKEND, name
+    try:
+        yield
+    finally:
+        TAU_BACKEND = prev
 
 
 # --------------------------------------------------------------------------
@@ -186,6 +210,108 @@ def evaluate(cluster: Cluster, jobs: list[Job], Y: np.ndarray) -> IterModel:
                      tau=tau, phi=phi)
 
 
+def stack_model(cluster: Cluster, G: np.ndarray, share: np.ndarray,
+                compute: np.ndarray, Y_stack: np.ndarray,
+                active: np.ndarray | None = None) -> IterModel:
+    """Eqs. (6)-(8) on a prepared [C, J, S] candidate stack.
+
+    The vectorised core shared by :func:`evaluate_many` (which adds Job
+    -list handling and Eq. (1) validation on top) and the simulator's
+    multi-window stepping (which pre-computes the placement-independent
+    terms ``G``/``share``/``compute`` once per run and feeds window
+    stacks straight in).  ``active`` [C, J] masks rows out per candidate
+    by zeroing them -- a zero row straddles nothing, so every other
+    row's contention is exactly as if the row were absent.
+
+    When the Pallas tau kernel is enabled (see :func:`tau_backend`), the
+    inner straddle/per-server/max reduction and the Eq. (8) combination
+    run inside one jitted kernel instead of this NumPy pipeline.
+    """
+    Y = Y_stack
+    if active is not None:
+        Y = np.where(active[:, :, None], Y, 0)
+    if TAU_BACKEND != "numpy":
+        from repro.kernels.tau import tau_stack
+        p, n_srv_i, tau = tau_stack(cluster, G, share, compute, Y)
+    else:
+        straddle = (Y > 0) & (Y < G[None, :, None])    # [C, J, S]
+        per_server = straddle.sum(axis=1)              # [C, S]
+        p = np.where(straddle, per_server[:, None, :], 0).max(axis=2)
+        p = p.astype(np.int64)
+        n_srv_i = (Y > 0).sum(axis=2)
+        tau = None                       # derived from the terms below
+    k = np.maximum(cluster.xi1 * p, 1.0)
+    f = degradation(cluster.alpha, k)
+    bandwidth = np.where(n_srv_i > 1, cluster.b_inter / f, cluster.b_intra)
+    gamma = cluster.xi2 * n_srv_i.astype(np.float64)
+    exchange = 2.0 * share[None, :] / bandwidth
+    reduce_t = np.broadcast_to(share / cluster.gpu_speed, p.shape)
+    compute_b = np.broadcast_to(compute, p.shape)
+    if tau is None:
+        tau = exchange + reduce_t + gamma + compute_b
+    phi = np.floor(1.0 / tau).astype(np.int64)
+    return IterModel(p=p, k=k, bandwidth=bandwidth, gamma=gamma,
+                     exchange=exchange, reduce=reduce_t, compute=compute_b,
+                     tau=tau, phi=phi)
+
+
+def ladder_terms(cluster: Cluster, jobs: list[Job], Y_rows: np.ndarray
+                 ) -> dict[str, np.ndarray]:
+    """Per-job arrays :func:`tau_ladder` needs, computed once per run.
+
+    ``Y_rows`` [J, S] holds each job's per-server GPU counts.  Everything
+    here is stage-independent: the straddle vectors (Eq. 6), whether a
+    job spans servers, and the share/reduce/gamma/compute terms of
+    Eq. (8).  :func:`tau_ladder` gathers rows of these by job id."""
+    G, share, compute = _job_terms(jobs)
+    straddle = (Y_rows > 0) & (Y_rows < G[:, None])
+    n_srv = (Y_rows > 0).sum(axis=1)
+    return {
+        "straddle": straddle,
+        "multi": n_srv > 1,
+        "share": share,
+        "reduce": share / cluster.gpu_speed,
+        "gamma": cluster.xi2 * n_srv.astype(np.float64),
+        "compute": compute,
+    }
+
+
+def tau_ladder(cluster: Cluster, terms: dict[str, np.ndarray],
+               rows: np.ndarray, depth: int
+               ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Batched Eq. (6)-(8) maintenance for a removal ladder.
+
+    ``rows`` holds the active job ids in guessed completion order; stage
+    ``s`` is the active set with the first ``s`` rows removed.  Removing
+    a row only subtracts its straddle vector from the per-server Eq. (6)
+    counts, so all ``depth + 1`` stages' counts come from one cumulative
+    sum -- the vectorised form of :class:`IncrementalEval`'s per-row
+    remove maintenance -- and one [depth+1, A, S] max produces every
+    stage's p.  ``terms`` is the run-constant bundle from
+    :func:`ladder_terms`.  Returns (p, tau, phi), each [depth+1, A];
+    entries for already-removed rows are meaningless and must not be
+    read.  Values are bit-identical to :func:`evaluate` on each stage's
+    surviving subset (same integer counts, same float expression order).
+    """
+    straddle = terms["straddle"][rows]                 # [A, S]
+    total = straddle.sum(axis=0)                       # [S]
+    if depth:
+        drops = np.cumsum(straddle[:depth], axis=0)    # [depth, S]
+        per_server = np.concatenate([total[None], total[None] - drops])
+    else:
+        per_server = total[None]
+    p = (straddle[None, :, :] * per_server[:, None, :]).max(axis=2)
+    k = np.maximum(cluster.xi1 * p, 1.0)
+    f = k + cluster.alpha * (k - 1.0)    # degradation(); k already >= 1
+    bandwidth = np.where(terms["multi"][rows][None, :],
+                         cluster.b_inter / f, cluster.b_intra)
+    exchange = 2.0 * terms["share"][rows][None, :] / bandwidth
+    tau = exchange + terms["reduce"][rows][None, :] \
+        + terms["gamma"][rows][None, :] + terms["compute"][rows][None, :]
+    phi = np.floor(1.0 / tau).astype(np.int64)
+    return p, tau, phi
+
+
 def evaluate_many(cluster: Cluster, jobs: list[Job], Y_stack: np.ndarray,
                   active: np.ndarray | None = None) -> IterModel:
     """Score a stack of C candidate placements [C, J, S] in one pass.
@@ -217,28 +343,9 @@ def evaluate_many(cluster: Cluster, jobs: list[Job], Y_stack: np.ndarray,
     if not np.array_equal(Y.sum(axis=2), expect):
         raise ValueError("placement does not cover every job's GPUs (Eq. 1)")
 
-    straddle = (Y > 0) & (Y < G[None, :, None])    # [C, J, S]
-    per_server = straddle.sum(axis=1)              # [C, S]
-    p = np.where(straddle, per_server[:, None, :], 0).max(axis=2)
-    p = p.astype(np.int64)
-    k = np.maximum(cluster.xi1 * p, 1.0)
-    multi = (Y > 0).sum(axis=2) > 1
-    f = degradation(cluster.alpha, k)
-    bandwidth = np.where(multi, cluster.b_inter / f, cluster.b_intra)
-
-    n_srv = (Y > 0).sum(axis=2).astype(np.float64)
-    gamma = cluster.xi2 * n_srv
-
-    exchange = 2.0 * share[None, :] / bandwidth
-    reduce_t = np.broadcast_to(share / cluster.gpu_speed, p.shape)
-    compute_b = np.broadcast_to(compute, p.shape)
-    tau = exchange + reduce_t + gamma + compute_b
-    phi = np.floor(1.0 / tau).astype(np.int64)
     EVAL_COUNTS["batched_calls"] += 1
     EVAL_COUNTS["batched_rows"] += Y.shape[0]
-    return IterModel(p=p, k=k, bandwidth=bandwidth, gamma=gamma,
-                     exchange=exchange, reduce=reduce_t, compute=compute_b,
-                     tau=tau, phi=phi)
+    return stack_model(cluster, G, share, compute, Y)
 
 
 # --------------------------------------------------------------------------
@@ -500,13 +607,15 @@ class IncrementalEval:
 def scalar_tau(cluster: Cluster, job: Job, p: int, n_srv: int) -> float:
     """Eq. (8) for one job given its contention level ``p`` and server
     spread ``n_srv`` -- the scalar core shared by the incremental probes.
-    Plain-float IEEE arithmetic, bit-identical to the vectorised engines.
+    Plain-float IEEE arithmetic (Python floats are IEEE float64, so the
+    inlined degradation is the same computation), bit-identical to the
+    vectorised engines.
     """
     w = float(job.num_gpus)
     share = (job.grad_size / w) * (w - 1.0) if w > 1 else 0.0
     k = max(cluster.xi1 * p, 1.0)
     if n_srv > 1:
-        bandwidth = cluster.b_inter / degradation(cluster.alpha, k)
+        bandwidth = cluster.b_inter / (k + cluster.alpha * (k - 1.0))
     else:
         bandwidth = cluster.b_intra
     gamma = cluster.xi2 * float(n_srv)
@@ -543,9 +652,10 @@ def slots_for(iters: int, tau: float) -> float:
     """rho-hat slot count at per-iteration time ``tau``: ceil(F_j / phi)
     with phi = floor(1/tau) clamped >= 1.  The one place this floor/ceil
     pair lives -- PlacementState.refined_rho, estimate_exec_time and the
-    Table-1 estimates all route through it."""
-    phi = max(1, int(np.floor(1.0 / tau)))
-    return float(int(np.ceil(iters / phi)))
+    Table-1 estimates all route through it.  (math.floor/ceil on floats
+    match np.floor/ceil exactly; this is just the scalar fast path.)"""
+    phi = max(1, math.floor(1.0 / tau))
+    return float(math.ceil(iters / phi))
 
 
 def predict_exec_time(cluster: Cluster, job: Job, jobs_snapshot: list[Job],

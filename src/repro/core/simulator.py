@@ -44,13 +44,23 @@ import heapq
 
 import numpy as np
 
+from repro.core import contention
 from repro.core.cluster import Cluster
-from repro.core.contention import IncrementalEval, evaluate, resolve_engine
+from repro.core.contention import (IncrementalEval, evaluate, ladder_terms,
+                                   resolve_engine, tau_ladder)
 from repro.core.jobs import Job
 
 Assignment = list[tuple[int, np.ndarray]]  # (job index, global GPU ids)
 
 READINESS_MODES = ("tracked", "rescan")
+STEPPING_MODES = ("multi", "single")
+
+# Cap on how many completion stages ahead a multi-window ladder
+# precomputes per stack_model call.  The actual depth ramps adaptively:
+# shallow while job starts keep invalidating ladders (each start changes
+# every row's contention), doubling whenever a ladder is exhausted by a
+# long start-free run of windows.
+LADDER_DEPTH = 32
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,7 +112,8 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
              horizon: int = 10**7,
              arrivals: np.ndarray | None = None,
              engine: str | None = None,
-             readiness: str = "tracked") -> SimResult:
+             readiness: str = "tracked",
+             stepping: str | None = None) -> SimResult:
     """Execute ``assignment`` on ``cluster`` and return actual timings.
 
     ``arrivals[j]`` (optional) forbids starting job j before its arrival
@@ -116,45 +127,125 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
     one-placement-per-window simulator) maintains the active set
     incrementally across windows.  ``readiness`` selects how queue-ready
     jobs are discovered (``"tracked"`` incremental counters, the default,
-    vs the ``"rescan"`` reference; see the module docstring).  Results are
-    identical across engines and readiness modes."""
+    vs the ``"rescan"`` reference; see the module docstring).
+
+    ``stepping`` selects how window models are produced between active-set
+    changes:
+
+      * ``"multi"`` -- speculative multi-window ladders: while the
+        tracked-readiness bookkeeping shows no arrivals or queue-head
+        promotions, the Eq. (6)-(8) terms for the next ``LADDER_DEPTH``
+        completion stages are computed in one vectorised
+        :func:`~repro.core.contention.stack_model` batch over a
+        [M, A, S] stack with shrinking row masks (guessed completion
+        order, verified window by window, rebuilt on mispredict);
+      * ``"single"`` -- one model per window (the IncrementalEval /
+        reference path of earlier releases);
+      * ``None`` (default) -- ``"multi"`` whenever both oracle axes are
+        off (tracked readiness, non-reference engine), else ``"single"``.
+
+    Results are identical across engines, readiness and stepping modes
+    (pinned by ``tests/test_simulator_equivalence.py`` and
+    ``tests/test_bisect_equivalence.py``)."""
     n_jobs = len(jobs)
     incremental = resolve_engine(engine) != "reference"
     if readiness not in READINESS_MODES:
         raise ValueError(
             f"unknown readiness mode {readiness!r}; choose from {READINESS_MODES}")
     tracked = readiness == "tracked"
+    if stepping is not None and stepping not in STEPPING_MODES:
+        raise ValueError(
+            f"unknown stepping mode {stepping!r}; choose from {STEPPING_MODES}")
+    if stepping == "multi" and not (tracked and incremental):
+        raise ValueError(
+            'stepping="multi" needs readiness="tracked" and a non-reference '
+            "engine (the rescan/reference combinations are the "
+            "event-for-event oracle and step one window at a time)")
+    multiwindow = (tracked and incremental) if stepping is None \
+        else stepping == "multi"
     if arrivals is not None:
         arrivals = np.asarray(arrivals)
     queues: list[list[int]] = [[] for _ in range(cluster.num_gpus)]
     gpu_sets: dict[int, np.ndarray] = {}
     srv_of = cluster.gpu_server
     y_rows: dict[int, np.ndarray] = {}   # per-server GPU counts per job
+    flat_jid: list[int] = []
+    flat_gpu: list[int] = []
     for j, gpus in assignment:
         gpus = np.asarray(gpus, dtype=np.int64)
         if len(gpus) != jobs[j].num_gpus:
             raise ValueError(f"job {j}: got {len(gpus)} GPUs, wants {jobs[j].num_gpus}")
-        if len(np.unique(gpus)) != len(gpus):
+        ids = gpus.tolist()
+        if len(set(ids)) != len(ids):
             raise ValueError(f"job {j}: duplicate GPUs in assignment")
         gpu_sets[j] = gpus
-        y = np.zeros(cluster.num_servers, dtype=np.int64)
-        np.add.at(y, srv_of[gpus], 1)
-        y_rows[j] = y
-        for g in gpus:
-            queues[int(g)].append(j)
+        for g in ids:
+            queues[g].append(j)
+            flat_jid.append(j)
+            flat_gpu.append(g)
+    # All jobs' per-server GPU counts in one bincount over (job, server)
+    # pairs -- same integer counts as a per-job bincount, one C call.
+    S = cluster.num_servers
+    y_all = np.bincount(
+        np.asarray(flat_jid, dtype=np.int64) * S
+        + srv_of[np.asarray(flat_gpu, dtype=np.int64)],
+        minlength=n_jobs * S).reshape(n_jobs, S)
+    for j in gpu_sets:
+        y_rows[j] = y_all[j]
 
     remaining = np.asarray([j.iters for j in jobs], dtype=np.float64)
     start = np.full(n_jobs, -1, dtype=np.int64)
     finish = np.full(n_jobs, -1, dtype=np.int64)
     scheduled = set(gpu_sets)
     active: list[int] = []
-    inc = IncrementalEval(cluster) if incremental else None
+    inc = IncrementalEval(cluster) if incremental and not multiwindow else None
     rows: dict[int, int] = {}            # job -> IncrementalEval row handle
     t = 0
     peak_p = 0
     busy_now = 0                         # GPUs occupied by active jobs
     busy_gpu_slots = 0.0
     events: list[SimEvent] = []
+
+    ladder: dict | None = None           # multi-window stage cache
+    model_vals: tuple | None = None      # (p, tau, phi) for `active` order
+    if multiwindow:
+        # Placement-independent Eq. (6)/(8) terms, computed once per run;
+        # ladder stacks gather rows of them (unscheduled jobs keep zero
+        # placement rows and never enter a ladder).
+        terms = ladder_terms(cluster, jobs, y_all)
+        phi_last = np.ones(n_jobs)       # ordering hint for the guess
+        ladder_ramp = 2                  # adaptive stage depth (see below)
+
+        def build_ladder(act: list[int]) -> dict:
+            """One stack_model batch covering the next LADDER_DEPTH
+            completion stages of ``act``: stage s masks out the first s
+            jobs of the guessed completion order (ascending slots-to-
+            finish at current rates, stable on the active order).  The
+            guess only selects which stacks exist -- each window's
+            completions are computed from the stage values and verified
+            against the guess, so a mispredicted order costs one rebuild
+            and never changes results."""
+            act_arr = np.asarray(act, dtype=np.int64)
+            A = len(act)
+            keys = np.ceil(remaining[act_arr] / phi_last[act_arr])
+            order = np.lexsort((np.arange(A), keys))
+            jids = [act[i] for i in order]
+            depth = min(A - 1, ladder_ramp)
+            jid_arr = act_arr[order]
+            p, tau, phi = tau_ladder(cluster, terms, jid_arr, depth)
+            contention.EVAL_COUNTS["ladder_calls"] += 1
+            contention.EVAL_COUNTS["ladder_rows"] += depth + 1
+            # "rem" caches `remaining` in ladder order so window updates
+            # are contiguous slice writes; flushed back on invalidation.
+            return {"jids": jids, "jid_arr": jid_arr, "stage": 0,
+                    "depth": depth, "p": p, "tau": tau, "phi": phi,
+                    "rem": remaining[jid_arr]}
+
+        def flush_ladder(lad: dict | None) -> None:
+            """Write the ladder-ordered remaining cache back before the
+            ladder is dropped (build_ladder reads ``remaining``)."""
+            if lad is not None:
+                remaining[lad["jid_arr"]] = lad["rem"]
 
     def _arrival_of(j: int) -> int:
         return int(arrivals[j]) if arrivals is not None else 0
@@ -233,7 +324,12 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
             return min(_arrival_of(j) for j in scheduled if start[j] < 0)
 
     while t < horizon:
-        for j in ready_jobs(t):
+        if tracked and not startable \
+                and not (arrival_wait and arrival_wait[0][0] <= t):
+            starters = ()        # fast path: provably nothing to start
+        else:
+            starters = ready_jobs(t)
+        for j in starters:
             start[j] = t
             active.append(j)
             busy_now += jobs[j].num_gpus
@@ -241,6 +337,16 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
                 n_unstarted -= 1
             if inc is not None:
                 rows[j] = inc.add(jobs[j], y_rows[j])
+            elif multiwindow:
+                # A start changes every row's contention; precomputed
+                # stages for the old active set no longer apply.  Frequent
+                # starts also mean deep ladders would mostly be wasted,
+                # so the ramp decays back towards shallow batches.
+                if ladder is not None and ladder["stage"] == 0:
+                    ladder_ramp = max(2, ladder_ramp // 2)
+                flush_ladder(ladder)
+                ladder = None
+                model_vals = None
         if not active:
             has_pending = (n_unstarted > 0) if tracked \
                 else any(start[j] < 0 for j in scheduled)
@@ -260,7 +366,22 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
                     continue
             # Unstartable remainder (should not happen with FIFO queues).
             break
-        if inc is not None:
+        if multiwindow:
+            if model_vals is None:
+                if ladder is None:
+                    ladder = build_ladder(active)
+                    # Keep the active list in ladder (guessed-completion)
+                    # order: a stage's surviving rows are then contiguous
+                    # slices of the stage arrays, so per-window model
+                    # access is a view, not a gather.  Active order never
+                    # affects outputs (all window quantities are
+                    # aggregates or per-job values).
+                    active = list(ladder["jids"])
+                s = ladder["stage"]
+                model_vals = (ladder["p"][s, s:], ladder["tau"][s, s:],
+                              ladder["phi"][s, s:])
+            p_arr, tau_arr, phi_raw = model_vals
+        elif inc is not None:
             p_arr, tau_arr, phi_raw = inc.window([rows[j] for j in active])
         else:
             sub_jobs = [jobs[j] for j in active]
@@ -269,29 +390,44 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
             p_arr, tau_arr, phi_raw = model.p, model.tau, model.phi
         pmax = int(p_arr.max(initial=0))
         peak_p = max(peak_p, pmax)
-        phi = phi_raw.astype(np.float64)
-        if np.any(phi < 1):
+        if (phi_raw < 1).any():
             # tau > 1 slot/iteration: degenerate calibration; progress
-            # fractionally so the simulation still terminates.
-            phi = np.maximum(phi, 1.0 / tau_arr)
-        act = np.asarray(active, dtype=np.int64)
-        rem = remaining[act]
-        slots_to_done = np.ceil(rem / phi)
+            # fractionally so the simulation still terminates.  (Integer
+            # phi upcasts exactly to float64, so skipping the astype on
+            # the common path changes nothing downstream.)
+            phi = np.maximum(phi_raw.astype(np.float64), 1.0 / tau_arr)
+        else:
+            phi = phi_raw
+        if multiwindow:
+            s0 = ladder["stage"]
+            act = ladder["jid_arr"][s0:]
+            phi_last[act] = phi          # ordering hint for ladder guesses
+            rem = ladder["rem"][s0:]
+        else:
+            act = np.asarray(active, dtype=np.int64)
+            rem = remaining[act]
+        # min of ceils == ceil of min (ceil is monotone), so one scalar
+        # ceil after the reduction replaces the array-wide one.
         # Clamp the event window at the horizon so a job cannot "finish"
         # beyond it — horizon_hit runs stop exactly at the cutoff.
-        dt = int(max(1, min(slots_to_done.min(), horizon - t)))
+        dt = int(max(1, min(np.ceil((rem / phi).min()), horizon - t)))
         rem_after = rem - phi * dt
-        remaining[act] = rem_after
+        if multiwindow:
+            ladder["rem"][s0:] = rem_after
+        else:
+            remaining[act] = rem_after
         events.append(SimEvent(t=t, dt=dt, active=len(active),
                                contention=pmax, busy_gpus=busy_now))
         t += dt
         done_mask = rem_after <= 1e-9
         if done_mask.any():
             keep: list[int] = []
+            done_now: list[int] = []
             for j, done in zip(active, done_mask):
                 if not done:
                     keep.append(j)
                     continue
+                done_now.append(j)
                 finish[j] = t
                 busy_gpu_slots += (t - start[j]) * jobs[j].num_gpus
                 busy_now -= jobs[j].num_gpus
@@ -299,6 +435,29 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
                 if inc is not None:
                     inc.remove(rows.pop(j))
             active = keep
+            if multiwindow:
+                # Advance the ladder past this window's completions when
+                # they match the guessed prefix (stacks depend only on
+                # the removed SET, so order within the prefix is free);
+                # otherwise drop it and rebuild from the live state.  A
+                # ladder exhausted by a long start-free run doubles the
+                # ramp so the next batch covers more stages per call.
+                model_vals = None
+                if active and ladder is not None:
+                    k, c = ladder["stage"], len(done_now)
+                    if k + c <= ladder["depth"] and \
+                            set(ladder["jids"][k:k + c]) == set(done_now):
+                        ladder["stage"] = k + c
+                    else:
+                        if k + c > ladder["depth"] >= len(active):
+                            pass          # depth already spans the run
+                        elif k + c > ladder["depth"]:
+                            ladder_ramp = min(LADDER_DEPTH, ladder_ramp * 2)
+                        flush_ladder(ladder)
+                        ladder = None
+                else:
+                    flush_ladder(ladder)
+                    ladder = None
 
     # Charge partial busy slots for jobs that started but never finished
     # (horizon hit): without this, utilization is overstated because

@@ -30,9 +30,9 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.api import (PlacementState, ScheduleRequest, ScheduleResult,
-                            bisect_theta, finalize, nominal_rho,
+                            SharedState, bisect_theta, finalize, nominal_rho,
                             pick_best_finish, register_policy, rho_hat,
-                            schedule_arrivals, try_place)
+                            schedule_arrivals, try_place, try_place_group)
 from repro.core.cluster import Cluster
 from repro.core.jobs import Job
 
@@ -51,7 +51,7 @@ def fa_ffp(state: PlacementState, job: Job, rho_nom: float, u: float,
     (least-execution-time-first, the property Lemma 4(b) relies on) when no
     single server fits."""
     cl = state.cluster
-    feasible = np.flatnonzero(state.U + rho_nom / u <= theta + 1e-9)
+    feasible = (state.U + rho_nom / u <= theta + 1e-9).nonzero()[0]
     if len(feasible) < job.num_gpus:
         return None
     srv_of = cl.gpu_server[feasible]
@@ -60,10 +60,12 @@ def fa_ffp(state: PlacementState, job: Job, rho_nom: float, u: float,
     # slots left after placing, preferring servers that already carry work
     # (pack, don't open fresh servers), lowest server id on ties.
     cnt = np.bincount(srv_of, minlength=cl.num_servers)
-    occupied = np.zeros(cl.num_servers)
-    np.add.at(occupied, cl.gpu_server, state.U)
-    fits = np.flatnonzero(cnt >= job.num_gpus)
+    fits = (cnt >= job.num_gpus).nonzero()[0]
     if len(fits):
+        # bincount-with-weights sums U in GPU-id order, exactly like the
+        # np.add.at it replaces (same additions, same order), ~10x faster.
+        occupied = np.bincount(cl.gpu_server, weights=state.U,
+                               minlength=cl.num_servers)
         order = np.lexsort((fits, -occupied[fits], cnt[fits] - job.num_gpus))
         best_srv = int(fits[order[0]])
         pool = feasible[srv_of == best_srv]
@@ -87,8 +89,8 @@ def lbsgf(state: PlacementState, job: Job, rho_nom: float, u: float,
     cl = state.cluster
     srv_of = cl.gpu_server
     caps = cl.capacities_array
-    srv_load = np.zeros(cl.num_servers)
-    np.add.at(srv_load, srv_of, state.U)
+    srv_load = np.bincount(srv_of, weights=state.U,
+                           minlength=cl.num_servers)
     srv_order = np.argsort(srv_load / caps, kind="stable")
     need = job.lam * job.num_gpus
     cum = np.cumsum(caps[srv_order])
@@ -98,13 +100,20 @@ def lbsgf(state: PlacementState, job: Job, rho_nom: float, u: float,
     srv_rank = np.full(cl.num_servers, -1, dtype=np.int64)
     srv_rank[selected] = np.arange(m)
 
-    pool = np.flatnonzero(state.U + rho_nom / u <= theta + 1e-9)
+    pool = (state.U + rho_nom / u <= theta + 1e-9).nonzero()[0]
     pool = pool[srv_rank[srv_of[pool]] >= 0]
     if len(pool) < job.num_gpus:
         return None
     ranks = srv_rank[srv_of[pool]]
     order = np.lexsort((state.U[pool], ranks))   # server-major, then least U
     return pool[order][: job.num_gpus]
+
+
+# theta enters both pickers only through the U + rho/u <= theta + 1e-9
+# feasibility pool, which is what lets the speculative bisection advance a
+# whole group of thetas in lockstep (see api.try_place_group).
+fa_ffp.theta_pool = True
+lbsgf.theta_pool = True
 
 
 def _attempt(cluster: Cluster, jobs_sorted: list[Job],
@@ -171,6 +180,79 @@ def _sweep_batched(cluster: Cluster, jobs_sorted: list[Job],
     return results
 
 
+def _sweep_speculative(cluster: Cluster, jobs_sorted: list[Job],
+                       rho_noms: dict[int, float], u: float,
+                       thetas: list[float], kappas: list[int],
+                       engine: str | None
+                       ) -> dict[float, dict[int, ScheduleResult | None]]:
+    """Every (theta, kappa) attempt of one speculative bisection round.
+
+    Extends :func:`_sweep_batched`'s shared-prefix idea to the theta axis:
+    all thetas of a probe ladder start from ONE shared
+    :class:`PlacementState` and advance in lockstep
+    (:func:`~repro.core.api.try_place_group`), splitting -- with
+    copy-on-write clones -- only where the theta budgets actually change
+    a placement decision.  Within each theta group the kappa branches
+    fork off shared FA-FFP prefixes exactly as in the batched sweep.
+    Decision-for-decision identical to running :func:`_sweep_batched`
+    per theta, which is itself bit-identical to :func:`_attempt`."""
+    n = len(jobs_sorted)
+    thetas_arr = np.asarray(sorted(thetas), dtype=np.float64)
+    results: dict[float, dict[int, ScheduleResult | None]] = \
+        {float(th): {} for th in thetas_arr}
+    # Live prefix groups (thetas, state holder, next job to absorb) plus
+    # the theta ranges whose shared prefix failed -- a prefix failure at
+    # one kappa dooms every kappa at or above it (Alg. 1 line 14), so
+    # doomed ranges stay doomed for the rest of the sweep.
+    groups = [(thetas_arr, SharedState(PlacementState(cluster,
+                                                      engine=engine)), 0)]
+    doomed: list[np.ndarray] = []
+    for kappa in sorted(set(kappas)):
+        work, groups = groups, []
+        while work:
+            th_g, holder, idx = work.pop()
+            if idx < n and jobs_sorted[idx].num_gpus <= kappa:
+                job = jobs_sorted[idx]
+                for sub, sh, ok in try_place_group(
+                        th_g, holder, job, fa_ffp, rho_noms[job.jid], u):
+                    if ok:
+                        work.append((sub, sh, idx + 1))
+                    else:
+                        doomed.append(sub)
+            else:
+                groups.append((th_g, holder, idx))
+        for sub in doomed:
+            for th in sub:
+                results[float(th)][kappa] = None
+        for th_g, holder, idx in groups:
+            if idx == n:
+                # All jobs live in the prefix: nothing to fork (the state
+                # is never committed to again), as in the batched sweep.
+                for th in th_g:
+                    results[float(th)][kappa] = \
+                        finalize(holder.state, n, float(th), kappa, "SJF-BCO")
+                continue
+            holder.split(2)          # one ref stays with the prefix
+            swork = [(th_g, holder, idx)]
+            while swork:
+                th_s, sh, j = swork.pop()
+                if j == n:
+                    for th in th_s:
+                        results[float(th)][kappa] = \
+                            finalize(sh.state, n, float(th), kappa, "SJF-BCO")
+                    sh.release()
+                    continue
+                job = jobs_sorted[j]
+                for sub, sh2, ok in try_place_group(
+                        th_s, sh, job, lbsgf, rho_noms[job.jid], u):
+                    if ok:
+                        swork.append((sub, sh2, j + 1))
+                    else:
+                        for th in sub:
+                            results[float(th)][kappa] = None
+    return results
+
+
 @register_policy("sjf-bco")
 def sjf_bco_policy(request: ScheduleRequest) -> ScheduleResult:
     """Algorithm 1 (batch) / finish-minimising epoch scheduler (online).
@@ -187,6 +269,19 @@ def sjf_bco_policy(request: ScheduleRequest) -> ScheduleResult:
         prefix segment is placed once); ``"sequential"`` is the reference
         one-kappa-at-a-time loop.  Both produce bit-identical schedules
         (pinned by tests and the CI bench smoke).
+      * ``bisect`` -- ``"speculative"`` (default) scores the whole probe
+        ladder of each bisection round (:func:`~repro.core.api.probe_thetas`)
+        in one :func:`_sweep_speculative` pass and commits several theta
+        decisions at once; ``"sequential"`` is the one-theta-at-a-time
+        Alg. 1 oracle.  Bit-identical final (theta, kappa, placements);
+        pinned by ``tests/test_bisect_equivalence.py`` and the CI bench
+        smoke.  Speculation needs the batched sweep's shared-prefix
+        structure and a cold start, so ``sweep="sequential"`` or
+        ``warm_start=True`` fall back to the sequential bisection.
+      * ``bisect_levels`` -- how many bisection decisions each
+        speculative round precomputes (default 4: the probe ladder is
+        the descending assume-feasible chain, at most one probe per
+        level).
       * ``warm_start`` -- seed each theta's attempts with the placements
         committed at the previous feasible theta (off by default; changes
         the search trajectory, not the accounting).
@@ -197,6 +292,10 @@ def sjf_bco_policy(request: ScheduleRequest) -> ScheduleResult:
     if sweep not in ("batched", "sequential"):
         raise ValueError(
             f"unknown sweep mode {sweep!r}; choose 'batched' or 'sequential'")
+    bisect_mode = request.params.get("bisect", "speculative")
+    if bisect_mode not in ("speculative", "sequential"):
+        raise ValueError(f"unknown bisect mode {bisect_mode!r}; "
+                         "choose 'speculative' or 'sequential'")
     if not request.is_batch:
         def choose(state: PlacementState, job: Job, theta: float) -> bool:
             return pick_best_finish(state, job, [fa_ffp, lbsgf],
@@ -235,5 +334,28 @@ def sjf_bco_policy(request: ScheduleRequest) -> ScheduleResult:
                 best_theta = cand                                  # lines 17-18
         return best_theta
 
+    warm = bool(request.params.get("warm_start"))
+    attempt_many = None
+    if bisect_mode == "speculative" and sweep == "batched" and not warm:
+        def attempt_many(thetas: list[float]
+                         ) -> dict[float, ScheduleResult | None]:
+            sweep_results = _sweep_speculative(cluster, jobs_sorted,
+                                               rho_noms, u, thetas, kappas,
+                                               engine)
+            out: dict[float, ScheduleResult | None] = {}
+            for th in thetas:
+                best_theta: ScheduleResult | None = None
+                for kappa in kappas:                               # line 7
+                    cand = sweep_results[th][kappa]
+                    if cand is None:
+                        continue
+                    if best_theta is None \
+                            or cand.est_makespan < best_theta.est_makespan:
+                        best_theta = cand                          # lines 17-18
+                out[th] = best_theta
+            return out
+
     return bisect_theta(attempt, request.horizon, "SJF-BCO",
-                        warm_start=bool(request.params.get("warm_start")))
+                        warm_start=warm, attempt_many=attempt_many,
+                        levels=int(request.params.get("bisect_levels", 4)),
+                        floor=max(rho_noms.values()) / u)

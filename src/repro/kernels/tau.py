@@ -1,0 +1,112 @@
+"""Jitted Pallas kernel for the Eq. (6)-(8) candidate-stack reduction.
+
+The contention model's hot loop scores stacks of candidate placements
+Y [C, J, S]: per candidate, the straddle matrix (Eq. 6), the per-server
+straddler counts, each job's contention level p (a max over its straddled
+servers), and the per-iteration RAR time tau (Eq. 8).  The NumPy pipeline
+in :func:`repro.core.contention.stack_model` materialises several [C, J, S]
+temporaries in host memory; this kernel fuses the whole reduction into one
+VMEM pass per candidate -- one grid step per candidate row, straddle/count/
+max/tau on the VPU, no host round-trips between the stages.
+
+On CPU the kernel runs in Pallas interpret mode and exists for numerics
+parity and TPU forward-compat, not speed (the interpreter is an emulator);
+it is therefore opt-in via :func:`repro.core.contention.tau_backend`.  With
+``jax_enable_x64`` the arithmetic is float64 in the same operation order as
+the NumPy engines, so the results are bit-identical (pinned by
+``tests/test_kernels.py``); without x64 jax computes in float32 and the
+kernel is only approximately equal.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.compat import CompilerParams
+
+
+def _tau_kernel(y_ref, g_ref, share_ref, reduce_ref, compute_ref,
+                p_ref, n_ref, tau_ref, *, xi1: float, xi2: float,
+                alpha: float, b_inter: float, b_intra: float):
+    """One candidate: Y [1, J, S] -> p/n_srv/tau [1, J]."""
+    y = y_ref[0]                                     # [J, S]
+    g = g_ref[0]                                     # [J]
+    pos = y > 0
+    straddle = pos & (y < g[:, None])                # Eq. (6) straddling
+    per_server = jnp.sum(straddle.astype(y.dtype), axis=0)        # [S]
+    p = jnp.max(jnp.where(straddle, per_server[None, :], 0), axis=1)
+    n_srv = jnp.sum(pos.astype(y.dtype), axis=1)
+    ftype = tau_ref.dtype
+    k = jnp.maximum(xi1 * p.astype(ftype), 1.0)      # Eq. (7)
+    f = k + alpha * (k - 1.0)                        # degradation f(a, k)
+    bandwidth = jnp.where(n_srv > 1, b_inter / f, b_intra)
+    gamma = xi2 * n_srv.astype(ftype)
+    exchange = 2.0 * share_ref[0] / bandwidth
+    # Eq. (8), same left-to-right addition order as the NumPy engines.
+    tau_ref[0] = exchange + reduce_ref[0] + gamma + compute_ref[0]
+    p_ref[0] = p
+    n_ref[0] = n_srv
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "xi1", "xi2", "alpha", "b_inter", "b_intra", "gpu_speed", "interpret"))
+def _tau_stack_jit(Y, G, share, compute, *, xi1, xi2, alpha, b_inter,
+                   b_intra, gpu_speed, interpret):
+    C, J, S = Y.shape
+    ftype = share.dtype
+    itype = Y.dtype
+    reduce_t = share / gpu_speed
+    return pl.pallas_call(
+        functools.partial(_tau_kernel, xi1=xi1, xi2=xi2, alpha=alpha,
+                          b_inter=b_inter, b_intra=b_intra),
+        grid=(C,),
+        in_specs=[
+            pl.BlockSpec((1, J, S), lambda c: (c, 0, 0)),
+            pl.BlockSpec((1, J), lambda c: (0, 0)),
+            pl.BlockSpec((1, J), lambda c: (0, 0)),
+            pl.BlockSpec((1, J), lambda c: (0, 0)),
+            pl.BlockSpec((1, J), lambda c: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, J), lambda c: (c, 0)),
+            pl.BlockSpec((1, J), lambda c: (c, 0)),
+            pl.BlockSpec((1, J), lambda c: (c, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C, J), itype),     # p
+            jax.ShapeDtypeStruct((C, J), itype),     # n_srv
+            jax.ShapeDtypeStruct((C, J), ftype),     # tau
+        ],
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(Y, G[None, :], share[None, :], reduce_t[None, :], compute[None, :])
+
+
+def tau_stack(cluster, G: np.ndarray, share: np.ndarray,
+              compute: np.ndarray, Y: np.ndarray,
+              interpret: bool | None = None
+              ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Kernel-backed Eq. (6)-(8) stack reduction: (p, n_srv, tau), [C, J].
+
+    ``Y`` [C, J, S] is the (already masked) candidate stack; ``G``,
+    ``share`` and ``compute`` are the placement-independent per-job terms
+    (see ``repro.core.contention._job_terms``).  ``interpret`` defaults to
+    Pallas interpret mode on CPU backends.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    itype = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    ftype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    p, n_srv, tau = _tau_stack_jit(
+        jnp.asarray(Y, dtype=itype), jnp.asarray(G, dtype=itype),
+        jnp.asarray(share, dtype=ftype), jnp.asarray(compute, dtype=ftype),
+        xi1=float(cluster.xi1), xi2=float(cluster.xi2),
+        alpha=float(cluster.alpha), b_inter=float(cluster.b_inter),
+        b_intra=float(cluster.b_intra), gpu_speed=float(cluster.gpu_speed),
+        interpret=bool(interpret))
+    return (np.asarray(p, dtype=np.int64), np.asarray(n_srv, dtype=np.int64),
+            np.asarray(tau, dtype=np.float64))

@@ -219,8 +219,18 @@ class TestSimulatorEquivalence:
     def test_incremental_simulation_runs_no_full_evals(self):
         cluster, jobs, request = _philly_request(engine="incremental")
         sched = get_policy("sjf-bco")(request)
+        # Default stepping under the incremental engine is "multi": the
+        # windows come from tau_ladder batches, not full [J, S] passes.
         reset_eval_counts()
         simulate(cluster, jobs, sched.assignment, engine="incremental")
+        counts = eval_counts()
+        assert counts["full"] == 0
+        assert counts["ladder_calls"] > 0
+        assert counts["incremental_updates"] == 0
+        # Single-window stepping keeps the IncrementalEval row updates.
+        reset_eval_counts()
+        simulate(cluster, jobs, sched.assignment, engine="incremental",
+                 stepping="single")
         counts = eval_counts()
         assert counts["full"] == 0
         assert counts["incremental_updates"] > 0

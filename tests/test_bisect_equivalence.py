@@ -1,0 +1,278 @@
+"""The speculative fast paths vs their sequential oracles: bit-identity.
+
+Mirrors ``tests/test_simulator_equivalence.py`` for the two speculative
+axes this repo added on top of the engine/readiness ones:
+
+  * **Theta bisection** (``params={"bisect": "speculative"}``, the
+    default): probe-ladder rounds scored through shared copy-on-write
+    placement lineages must end on exactly the sequential Alg. 1
+    bisection's final (theta, kappa) and placements -- across seeds,
+    contention engines and policies (SJF-BCO's kappa sweep, FF/LS's
+    single-picker attempts).
+  * **Multi-window stepping** (``simulate(..., stepping="multi")``, the
+    default under tracked readiness): the vectorised completion-stage
+    ladders must reproduce the single-window oracle's SimEvent stream
+    event-for-event, across seeds, engines, arrival patterns and horizon
+    cutoffs.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ScheduleRequest, get_policy, philly_cluster,
+                        philly_workload, simulate)
+from repro.core.api import (PlacementState, SharedState, probe_thetas,
+                            try_place_group)
+from repro.core.sjf_bco import fa_ffp
+
+
+def _philly_case(seed, n_jobs=48, n_servers=10):
+    cluster = philly_cluster(n_servers, seed=seed)
+    mix = ((1, n_jobs // 3), (2, n_jobs // 6), (4, n_jobs // 4),
+           (8, n_jobs // 6), (16, n_jobs // 12))
+    jobs = philly_workload(seed=seed, mix=mix)
+    return cluster, jobs
+
+
+def _assert_schedules_equal(a, b):
+    assert a.theta == b.theta
+    assert a.kappa == b.kappa
+    assert a.est_makespan == b.est_makespan
+    assert a.max_busy_time == b.max_busy_time
+    assert len(a.assignment) == len(b.assignment)
+    for (j1, g1), (j2, g2) in zip(a.assignment, b.assignment):
+        assert j1 == j2
+        assert np.array_equal(g1, g2)
+    assert np.array_equal(a.est_start, b.est_start)
+    assert np.array_equal(a.est_finish, b.est_finish)
+
+
+class TestSpeculativeBisection:
+    @pytest.mark.parametrize("seed", range(4))
+    @pytest.mark.parametrize("engine", ["incremental", "batched",
+                                        "reference"])
+    def test_sjf_bco_matches_sequential(self, seed, engine):
+        cluster, jobs = _philly_case(seed)
+        results = {}
+        for mode in ("sequential", "speculative"):
+            request = ScheduleRequest(
+                cluster=cluster, jobs=jobs, horizon=2400,
+                params={"engine": engine, "bisect": mode})
+            results[mode] = get_policy("sjf-bco")(request)
+        _assert_schedules_equal(results["sequential"],
+                                results["speculative"])
+
+    @pytest.mark.parametrize("seed", range(3))
+    @pytest.mark.parametrize("policy", ["ff", "ls"])
+    def test_baselines_match_sequential(self, seed, policy):
+        cluster, jobs = _philly_case(seed, n_jobs=36)
+        results = {}
+        for mode in ("sequential", "speculative"):
+            request = ScheduleRequest(cluster=cluster, jobs=jobs,
+                                      horizon=2400,
+                                      params={"bisect": mode})
+            results[mode] = get_policy(policy)(request)
+        _assert_schedules_equal(results["sequential"],
+                                results["speculative"])
+
+    @pytest.mark.parametrize("levels", [2, 3, 4, 6, 8])
+    def test_levels_do_not_change_result(self, levels):
+        cluster, jobs = _philly_case(1)
+        base = get_policy("sjf-bco")(ScheduleRequest(
+            cluster=cluster, jobs=jobs, horizon=2400,
+            params={"bisect": "sequential"}))
+        spec = get_policy("sjf-bco")(ScheduleRequest(
+            cluster=cluster, jobs=jobs, horizon=2400,
+            params={"bisect": "speculative", "bisect_levels": levels}))
+        _assert_schedules_equal(base, spec)
+
+    def test_sequential_sweep_falls_back_to_sequential_bisect(self):
+        """The speculative sweep needs the batched-sweep structure; with
+        sweep="sequential" the bisection silently runs sequentially and
+        the result still matches."""
+        cluster, jobs = _philly_case(2)
+        a = get_policy("sjf-bco")(ScheduleRequest(
+            cluster=cluster, jobs=jobs, horizon=2400,
+            params={"sweep": "sequential"}))
+        b = get_policy("sjf-bco")(ScheduleRequest(
+            cluster=cluster, jobs=jobs, horizon=2400,
+            params={"sweep": "sequential", "bisect": "sequential"}))
+        _assert_schedules_equal(a, b)
+
+    def test_unknown_bisect_mode_rejected(self):
+        cluster, jobs = _philly_case(0, n_jobs=12, n_servers=4)
+        for policy in ("sjf-bco", "ff"):
+            with pytest.raises(ValueError, match="bisect"):
+                get_policy(policy)(ScheduleRequest(
+                    cluster=cluster, jobs=jobs,
+                    params={"bisect": "magic"}))
+
+    def test_probe_thetas_is_the_feasible_descent(self):
+        """The ladder is exactly the theta sequence of consecutive
+        feasible-tightening bisection steps."""
+        left, right = 1.0, 1200.0
+        ladder = probe_thetas(left, right, 4)
+        lo, hi = left, right
+        for theta in ladder:
+            assert theta == 0.5 * (lo + hi)
+            hi = theta - 1.0          # the "feasible" update
+        assert ladder == sorted(ladder, reverse=True)
+        # the cutoff prunes the tail but never the bracket midpoint
+        cut = probe_thetas(left, right, 4, cutoff=right)
+        assert cut == [0.5 * (left + right)]
+
+    def test_try_place_group_requires_theta_pool_picker(self):
+        cluster, jobs = _philly_case(0, n_jobs=12, n_servers=4)
+
+        def rogue_picker(state, job, rho_nom, u, theta):
+            return np.arange(job.num_gpus)
+
+        shared = SharedState(PlacementState(cluster))
+        with pytest.raises(ValueError, match="theta_pool"):
+            try_place_group(np.asarray([10.0, 20.0]), shared, jobs[0],
+                            rogue_picker, 1.0, 1.5)
+
+    def test_try_place_group_covers_and_matches_try_place(self):
+        """Group placement of one job over a theta range returns a
+        partition of the thetas, each subgroup deciding exactly like the
+        scalar try_place at that theta."""
+        from repro.core.api import nominal_rho, try_place
+        cluster, jobs = _philly_case(3, n_jobs=24, n_servers=4)
+        jobs_sorted = sorted(jobs, key=lambda j: (j.num_gpus, j.jid))
+        u = 1.5
+        # a state with some load so feasibility actually varies with theta
+        base = PlacementState(cluster)
+        for job in jobs_sorted[:10]:
+            try_place(base, job, fa_ffp, nominal_rho(cluster, job), u, 500.0)
+        job = jobs_sorted[10]
+        rho_nom = nominal_rho(cluster, job)
+        thetas = np.linspace(5.0, 400.0, 23)
+        out = try_place_group(thetas, SharedState(base.clone()), job,
+                              fa_ffp, rho_nom, u)
+        covered = np.concatenate([sub for sub, _, _ in out])
+        assert sorted(covered.tolist()) == sorted(thetas.tolist())
+        for sub, holder, ok in out:
+            for th in sub:
+                solo = base.clone()
+                assert try_place(solo, job, fa_ffp, rho_nom, u,
+                                 float(th)) == ok
+                if ok:
+                    jid, gpus = holder.state.assignment[-1]
+                    assert jid == job.jid
+                    assert np.array_equal(gpus, solo.assignment[-1][1])
+
+    def test_cow_clone_isolates_branches(self):
+        """Committing to a clone must not leak into the original's
+        straddle-finish structures (copy-on-write correctness)."""
+        from repro.core.api import nominal_rho, try_place
+        cluster, jobs = _philly_case(4, n_jobs=24, n_servers=4)
+        jobs_sorted = sorted(jobs, key=lambda j: (j.num_gpus, j.jid))
+        u = 1.5
+        state = PlacementState(cluster)
+        for job in jobs_sorted[:8]:
+            assert try_place(state, job, fa_ffp,
+                             nominal_rho(cluster, job), u, 800.0)
+        frozen = [list(f) for f in state._straddle_fin]
+        clone = state.clone()
+        for job in jobs_sorted[8:16]:
+            try_place(clone, job, fa_ffp, nominal_rho(cluster, job), u, 800.0)
+        assert [list(f) for f in state._straddle_fin] == frozen
+        # and the original can still commit independently afterwards
+        job = jobs_sorted[16]
+        assert try_place(state, job, fa_ffp, nominal_rho(cluster, job),
+                         u, 800.0)
+        assert [list(f) for f in clone._straddle_fin] != \
+            [list(f) for f in state._straddle_fin] or \
+            clone.assignment != state.assignment
+
+
+def _assert_sims_equal(a, b):
+    assert a.events == b.events
+    assert np.array_equal(a.start, b.start)
+    assert np.array_equal(a.finish, b.finish)
+    assert a.makespan == b.makespan
+    assert a.avg_jct == b.avg_jct
+    assert a.completed == b.completed
+    assert a.horizon_hit == b.horizon_hit
+    assert a.peak_contention == b.peak_contention
+    assert a.busy_gpu_slots == b.busy_gpu_slots
+    assert a.total_gpu_slots == b.total_gpu_slots
+
+
+class TestMultiWindowStepping:
+    @pytest.mark.parametrize("seed", range(4))
+    @pytest.mark.parametrize("engine", ["incremental", "batched"])
+    def test_batch_schedules_match_event_for_event(self, seed, engine):
+        cluster, jobs = _philly_case(seed)
+        sched = get_policy("sjf-bco")(ScheduleRequest(
+            cluster=cluster, jobs=jobs, horizon=2400))
+        multi = simulate(cluster, jobs, sched.assignment, engine=engine,
+                         stepping="multi")
+        single = simulate(cluster, jobs, sched.assignment, engine=engine,
+                          stepping="single")
+        _assert_sims_equal(multi, single)
+        assert multi.completed == len(jobs)
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_arrival_schedules_match_event_for_event(self, seed):
+        cluster, jobs = _philly_case(seed)
+        rng = np.random.default_rng(300 + seed)
+        arrivals = rng.integers(0, 400, size=len(jobs)).astype(np.int64)
+        sched = get_policy("sjf-bco")(ScheduleRequest(
+            cluster=cluster, jobs=jobs, arrivals=arrivals, horizon=10**6))
+        multi = simulate(cluster, jobs, sched.assignment,
+                         arrivals=arrivals, stepping="multi")
+        single = simulate(cluster, jobs, sched.assignment,
+                          arrivals=arrivals, stepping="single")
+        _assert_sims_equal(multi, single)
+        assert np.all(multi.start >= arrivals)
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_random_contended_placements_match(self, seed):
+        """Seeded random GPU sets: heavy straddling, deep FIFO queues,
+        frequent ladder invalidations and mispredictions."""
+        cluster, jobs = _philly_case(seed, n_jobs=60, n_servers=6)
+        rng = np.random.default_rng(400 + seed)
+        asg = [(j.jid, rng.choice(cluster.num_gpus, size=j.num_gpus,
+                                  replace=False)) for j in jobs]
+        multi = simulate(cluster, jobs, asg, stepping="multi")
+        single = simulate(cluster, jobs, asg, stepping="single")
+        rescan = simulate(cluster, jobs, asg, readiness="rescan")
+        _assert_sims_equal(multi, single)
+        _assert_sims_equal(multi, rescan)
+
+    @pytest.mark.parametrize("horizon", [1, 37, 250, 800])
+    def test_horizon_hits_match(self, horizon):
+        cluster, jobs = _philly_case(1, n_jobs=36, n_servers=6)
+        rng = np.random.default_rng(7)
+        arrivals = rng.integers(0, 600, size=len(jobs)).astype(np.int64)
+        asg = [(j.jid, rng.choice(cluster.num_gpus, size=j.num_gpus,
+                                  replace=False)) for j in jobs]
+        multi = simulate(cluster, jobs, asg, arrivals=arrivals,
+                         horizon=horizon, stepping="multi")
+        single = simulate(cluster, jobs, asg, arrivals=arrivals,
+                          horizon=horizon, stepping="single")
+        _assert_sims_equal(multi, single)
+
+    def test_default_stepping_is_multi_only_off_oracle_axes(self):
+        """stepping=None resolves to multi under (tracked, non-reference)
+        and to single otherwise -- results identical either way."""
+        cluster, jobs = _philly_case(2, n_jobs=24, n_servers=6)
+        rng = np.random.default_rng(9)
+        asg = [(j.jid, rng.choice(cluster.num_gpus, size=j.num_gpus,
+                                  replace=False)) for j in jobs]
+        default = simulate(cluster, jobs, asg)
+        for kwargs in ({"engine": "reference"}, {"readiness": "rescan"}):
+            _assert_sims_equal(default, simulate(cluster, jobs, asg,
+                                                 **kwargs))
+
+    def test_multi_stepping_rejected_on_oracle_axes(self):
+        cluster, jobs = _philly_case(0, n_jobs=12, n_servers=4)
+        asg = [(j.jid, np.arange(j.num_gpus)) for j in jobs[:1]]
+        with pytest.raises(ValueError, match="stepping"):
+            simulate(cluster, jobs, asg, stepping="warp")
+        with pytest.raises(ValueError, match="multi"):
+            simulate(cluster, jobs, asg, stepping="multi",
+                     readiness="rescan")
+        with pytest.raises(ValueError, match="multi"):
+            simulate(cluster, jobs, asg, stepping="multi",
+                     engine="reference")

@@ -139,3 +139,59 @@ class TestKernelVsModelLayer:
                     compute_dtype=jnp.float32)
         out = ops.flash_attention(q, k, v, causal=True)
         _assert_close(out.reshape(B, S, H * hd), exp, jnp.float32)
+
+
+class TestTauKernel:
+    """The Eq. (6)-(8) stack kernel vs the NumPy contention engines."""
+
+    def _case(self, seed=0, n_cands=6):
+        from repro.core import philly_cluster, philly_workload
+        rng = np.random.default_rng(seed)
+        cluster = philly_cluster(6, seed=seed)
+        jobs = philly_workload(seed=seed, mix=((1, 4), (2, 4), (4, 4),
+                                               (8, 2)))
+        S = cluster.num_servers
+        stack = np.zeros((n_cands, len(jobs), S), dtype=np.int64)
+        for c in range(n_cands):
+            for i, job in enumerate(jobs):
+                for _ in range(job.num_gpus):
+                    stack[c, i, rng.integers(S)] += 1
+        return cluster, jobs, stack
+
+    def test_tau_stack_matches_numpy_f32(self):
+        """Without x64 the kernel computes in float32: approximate."""
+        from repro.core.contention import _job_terms, evaluate_many
+        from repro.kernels.tau import tau_stack
+        cluster, jobs, stack = self._case()
+        ref_model = evaluate_many(cluster, jobs, stack)
+        G, share, compute = _job_terms(jobs)
+        p, n_srv, tau = tau_stack(cluster, G, share, compute, stack)
+        assert np.array_equal(p, ref_model.p)       # integer: exact
+        np.testing.assert_allclose(tau, ref_model.tau, rtol=1e-5)
+
+    def test_tau_backend_bit_identity_x64(self):
+        """With x64, the kernel path of stack_model / evaluate_many is
+        bit-identical to the NumPy engines (same op order, float64)."""
+        from repro.core.contention import evaluate, evaluate_many, tau_backend
+        x64_was = jax.config.jax_enable_x64
+        jax.config.update("jax_enable_x64", True)
+        try:
+            cluster, jobs, stack = self._case(seed=3)
+            ref_model = evaluate_many(cluster, jobs, stack)
+            with tau_backend("kernel"):
+                kern = evaluate_many(cluster, jobs, stack)
+            assert np.array_equal(ref_model.p, kern.p)
+            assert np.array_equal(ref_model.tau, kern.tau)
+            assert np.array_equal(ref_model.phi, kern.phi)
+            assert np.array_equal(ref_model.bandwidth, kern.bandwidth)
+            for c in range(stack.shape[0]):
+                per = evaluate(cluster, jobs, stack[c])
+                assert np.array_equal(per.tau, kern.tau[c])
+        finally:
+            jax.config.update("jax_enable_x64", x64_was)
+
+    def test_unknown_tau_backend_rejected(self):
+        from repro.core.contention import tau_backend
+        with pytest.raises(ValueError, match="tau backend"):
+            with tau_backend("cuda"):
+                pass
