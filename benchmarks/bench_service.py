@@ -1,0 +1,192 @@
+"""Sustained-arrival throughput benchmark for the scheduler service.
+
+Drives :class:`repro.service.SchedulerService` with Poisson and burst
+submission traffic at |J| in {256, 1024, 4096} (``--quick``: {64, 256})
+and reports scheduling throughput (decisions/sec over the chooser calls)
+plus p50/p99 per-decision latency, the numbers an operator would watch on
+a live daemon.  A second section prices journal durability: the same
+trace against the in-memory store vs the stdlib-sqlite write-ahead store
+(appends/sec and the end-to-end slowdown).
+
+``--quick`` doubles as CI's correctness smoke with hard asserts, not
+report fields:
+
+  * the daemon's drained schedule is bit-identical (assignment, est
+    starts/finishes) to a direct ``schedule_arrivals`` run -- i.e. the
+    one-shot policy call -- on the same trace, and
+  * it stays bit-identical after a simulated crash (journal truncated
+    mid-stream, daemon recovered by replay, remaining jobs resubmitted).
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/bench_service.py [--quick] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import ScheduleRequest, get_policy, philly_cluster, \
+    philly_workload
+from repro.service import (Daemon, QueueManager, SchedulerService,
+                           SubmitRequest, TenantConfig)
+
+try:                                    # run as a module: -m benchmarks....
+    from benchmarks.common import mix_for
+except ImportError:                     # run as a script from benchmarks/
+    from common import mix_for
+
+HORIZON = 10**6                         # open-ended stream: budget = horizon
+
+
+def _trace(n_jobs: int, traffic: str, seed: int):
+    """A |J|-job Philly-mix submission trace under the given traffic."""
+    cluster = philly_cluster(max(20, n_jobs // 16), seed=seed)
+    jobs = philly_workload(seed=seed, mix=mix_for(n_jobs))
+    rng = np.random.default_rng(seed)
+    if traffic == "poisson":
+        arrivals = np.floor(np.cumsum(
+            rng.exponential(2.0, size=len(jobs)))).astype(np.int64)
+    elif traffic == "burst":
+        # waves of 32 simultaneous submissions, long idle gaps between
+        wave = np.repeat(np.arange((len(jobs) + 31) // 32), 32)[:len(jobs)]
+        arrivals = (wave * 64).astype(np.int64)
+    else:
+        raise ValueError(traffic)
+    return cluster, jobs, arrivals
+
+
+def _same_schedule(a, b) -> bool:
+    return bool(np.array_equal(a.est_start, b.est_start)
+                and np.array_equal(a.est_finish, b.est_finish)
+                and len(a.assignment) == len(b.assignment)
+                and all(ja == jb and np.array_equal(ga, gb)
+                        for (ja, ga), (jb, gb) in zip(a.assignment,
+                                                      b.assignment)))
+
+
+def _drive(cluster, jobs, arrivals, **svc_kwargs):
+    """Submit the whole trace, drain, return (service, schedule, wall)."""
+    svc = SchedulerService(cluster, policy="sjf-bco", horizon=HORIZON,
+                           **svc_kwargs)
+    t0 = time.perf_counter()
+    for job, arrival in zip(jobs, arrivals):
+        svc.submit(SubmitRequest(job, int(arrival)))
+    schedule, _ = svc.drain()
+    wall = time.perf_counter() - t0
+    return svc, schedule, wall
+
+
+def bench_traffic(n_jobs: int, traffic: str, seed: int = 1) -> dict:
+    """Throughput + decision-latency percentiles for one traffic shape."""
+    cluster, jobs, arrivals = _trace(n_jobs, traffic, seed)
+    svc, schedule, wall = _drive(cluster, jobs, arrivals)
+    lat = np.asarray(svc.daemon.decision_latencies)
+    placed = len(schedule.assignment)
+    return {
+        "J": n_jobs,
+        "traffic": traffic,
+        "placed": placed,
+        "rounds": svc.daemon.rounds,
+        "wall_s": round(wall, 4),
+        "decisions_per_sec": round(placed / max(1e-9, lat.sum()), 1),
+        "p50_decision_ms": round(float(np.percentile(lat, 50)) * 1e3, 4),
+        "p99_decision_ms": round(float(np.percentile(lat, 99)) * 1e3, 4),
+        "max_decision_ms": round(float(lat.max()) * 1e3, 4),
+    }
+
+
+def bench_stores(n_jobs: int, seed: int = 1) -> dict:
+    """Journal-durability cost: in-memory vs sqlite write-ahead store."""
+    cluster, jobs, arrivals = _trace(n_jobs, "poisson", seed)
+    _, mem_sched, mem_wall = _drive(cluster, jobs, arrivals)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "journal.db")
+        svc, sq_sched, sq_wall = _drive(cluster, jobs, arrivals,
+                                        store_path=path)
+        entries = len(svc.daemon.store)
+        svc.close()
+    assert _same_schedule(mem_sched, sq_sched), \
+        "sqlite-backed daemon diverged from the in-memory one"
+    return {
+        "J": n_jobs,
+        "journal_entries": entries,
+        "memory_wall_s": round(mem_wall, 4),
+        "sqlite_wall_s": round(sq_wall, 4),
+        "sqlite_appends_per_sec": round(entries / max(1e-9, sq_wall), 1),
+        "durability_overhead": round(sq_wall / max(1e-9, mem_wall), 2),
+    }
+
+
+def smoke_identity(n_jobs: int, seed: int = 1) -> dict:
+    """--quick hard asserts: daemon == schedule_arrivals, also across a
+    simulated crash/recovery."""
+    cluster, jobs, arrivals = _trace(n_jobs, "poisson", seed)
+    ref = get_policy("sjf-bco")(ScheduleRequest(
+        cluster, list(jobs), arrivals=arrivals, horizon=HORIZON))
+    svc, schedule, _ = _drive(cluster, jobs, arrivals)
+    assert _same_schedule(ref, schedule), \
+        "daemon path diverged from schedule_arrivals"
+
+    # crash: truncate the journal to ~60% and recover by replay
+    store = svc.daemon.store
+    snap = store.prefix(int(len(store) * 0.6))
+    replayed = len(snap)
+    daemon = Daemon.recover(cluster, snap,
+                            QueueManager(TenantConfig("sjf-bco")),
+                            horizon=HORIZON)
+    for job, arrival in list(zip(jobs, arrivals))[len(daemon.jobs):]:
+        daemon.admit(job, int(arrival))
+    recovered, _ = daemon.drain()
+    assert _same_schedule(ref, recovered), \
+        "recovered daemon diverged from schedule_arrivals"
+    return {"J": n_jobs, "journal_entries": len(store),
+            "replayed_entries": replayed,
+            "identical_to_schedule_arrivals": True,
+            "identical_after_recovery": True}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: small sizes + identity asserts")
+    ap.add_argument("--out", default="BENCH_service.json")
+    args = ap.parse_args()
+
+    sizes = [64, 256] if args.quick else [256, 1024, 4096]
+    report = {"bench": "service-throughput", "quick": args.quick,
+              "traffic": [], "stores": [], "identity": []}
+    for n in sizes:
+        for traffic in ("poisson", "burst"):
+            row = bench_traffic(n, traffic)
+            report["traffic"].append(row)
+            print(f"|J|={n:5d} {traffic:8s}  {row['decisions_per_sec']:9.1f}"
+                  f" dec/s  p50 {row['p50_decision_ms']:.3f}ms"
+                  f"  p99 {row['p99_decision_ms']:.3f}ms"
+                  f"  rounds={row['rounds']}")
+    store_sizes = sizes[:1] if args.quick else sizes[:2]
+    for n in store_sizes:
+        row = bench_stores(n)
+        report["stores"].append(row)
+        print(f"stores |J|={n:5d}  memory {row['memory_wall_s']:.3f}s"
+              f"  sqlite {row['sqlite_wall_s']:.3f}s"
+              f"  ({row['sqlite_appends_per_sec']:.0f} appends/s,"
+              f" x{row['durability_overhead']:.2f})")
+    row = smoke_identity(sizes[0])
+    report["identity"].append(row)
+    print(f"identity |J|={row['J']}  one-shot: ok   after recovery of"
+          f" {row['replayed_entries']}/{row['journal_entries']}"
+          f" journal entries: ok")
+
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,8 +20,9 @@ one-release deprecation overlap: use
 ``get_policy(name)(ScheduleRequest(...))``.
 """
 from repro.core.api import (PlacementState, ScheduleRequest, ScheduleResult,
-                            SchedulingPolicy, SharedState, get_policy,
-                            list_policies, nominal_rho, probe_thetas,
+                            SchedulingPolicy, SharedState, get_chooser,
+                            get_policy, list_choosers, list_policies,
+                            nominal_rho, probe_thetas, register_chooser,
                             register_policy, rho_hat, try_place_group)
 from repro.core.cluster import Cluster, philly_cluster
 from repro.core.jobs import Job, philly_workload
@@ -43,6 +44,7 @@ __all__ = [
     # unified scheduling API
     "ScheduleRequest", "ScheduleResult", "SchedulingPolicy",
     "register_policy", "get_policy", "list_policies",
+    "register_chooser", "get_chooser", "list_choosers",
     "PlacementState", "SharedState", "nominal_rho", "rho_hat",
     "probe_thetas", "try_place_group",
     # scenarios

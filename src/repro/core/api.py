@@ -210,6 +210,62 @@ def list_policies() -> list[str]:
 
 
 # --------------------------------------------------------------------------
+# Online-chooser registry (the incremental face of the same policies)
+# --------------------------------------------------------------------------
+
+# A chooser factory binds a policy's per-arrival placement rule to a
+# (cluster, u, params) context; the returned Chooser is exactly what the
+# policy's own ``arrivals`` branch hands to :func:`schedule_arrivals`.
+ChooserFactory = Callable[["Cluster", float, dict], "Chooser"]
+
+_CHOOSERS: dict[str, ChooserFactory] = {}
+
+
+def register_chooser(name: str, *aliases: str
+                     ) -> Callable[[ChooserFactory], ChooserFactory]:
+    """Decorator: register a policy's online chooser factory.
+
+    Every policy with an ``arrivals`` path registers the factory that
+    builds its per-arrival chooser, and its own online branch goes through
+    the same factory -- so a long-running consumer (``repro.service``)
+    that pulls the chooser via :func:`get_chooser` and drives it against a
+    persistent :class:`PlacementState` makes decision-for-decision the
+    same placements as a one-shot :func:`schedule_arrivals` call."""
+
+    def deco(fn: ChooserFactory) -> ChooserFactory:
+        """Register ``fn`` under ``name`` and every alias."""
+        for key in (name, *aliases):
+            key = key.lower()
+            if key in _CHOOSERS and _CHOOSERS[key] is not fn:
+                raise ValueError(f"chooser {key!r} already registered")
+            _CHOOSERS[key] = fn
+        return fn
+
+    return deco
+
+
+def get_chooser(name: str) -> ChooserFactory:
+    """Look up a registered online-chooser factory (case-insensitive).
+
+    ``get_chooser(name)(cluster, u, params)`` returns the same
+    :data:`Chooser` the policy's online branch uses, bound to the given
+    context; stateful choosers (RAND's rng) carry ``stateful = True``."""
+    _load_builtins()
+    key = name.lower()
+    if key not in _CHOOSERS:
+        raise KeyError(
+            f"policy {name!r} has no online chooser; "
+            f"registered: {', '.join(sorted(_CHOOSERS))}")
+    return _CHOOSERS[key]
+
+
+def list_choosers() -> list[str]:
+    """Sorted names of every registered online chooser."""
+    _load_builtins()
+    return sorted(_CHOOSERS)
+
+
+# --------------------------------------------------------------------------
 # Estimates (Table 1 / §5.1)
 # --------------------------------------------------------------------------
 
@@ -269,6 +325,12 @@ class PlacementState:
         self._straddle_fin: list[list[float]] = \
             [[] for _ in range(cluster.num_servers)]
         self._fin_owned = [True] * cluster.num_servers
+        # Optional observer called after every commit with the exact
+        # (job, gpus, rho, start) committed -- the write-ahead journal of
+        # repro.service captures placements here so a crash replay can
+        # re-commit bit-identically (est_finish - est_start would NOT
+        # round-trip rho through float subtraction).
+        self.commit_hook: "Callable[[Job, np.ndarray, float, float], None] | None" = None
 
     def _y_of(self, gpus: np.ndarray) -> np.ndarray:
         return np.bincount(self.cluster.gpu_server[gpus],
@@ -299,6 +361,7 @@ class PlacementState:
         new._straddle_fin = list(self._straddle_fin)
         self._fin_owned = [False] * self.cluster.num_servers
         new._fin_owned = [False] * self.cluster.num_servers
+        new.commit_hook = None      # observers watch one state, not forks
         return new
 
     def advance_to(self, t: float) -> None:
@@ -419,6 +482,47 @@ class PlacementState:
                     self._straddle_fin[s] = list(self._straddle_fin[s])
                     self._fin_owned[s] = True
                 bisect.insort(self._straddle_fin[s], fin)
+        if self.commit_hook is not None:
+            self.commit_hook(job, gpus, rho, start)
+
+    def observe_finish(self, job: Job, gpus: np.ndarray,
+                       finish: float) -> None:
+        """Completion feedback: replace ``job``'s *estimated* finish with
+        its observed (simulated or measured) one.
+
+        The online epoch loop never looks back, so by default placements
+        keep pricing contention against the rho-hat estimates.  A
+        long-running scheduler that watches real executions
+        (``repro.service`` with ``feedback="actual"``) calls this when a
+        job completes: the rho_hat(y^k) overlap snapshot -- est_finish and
+        the per-server straddler suffix-count lists -- is updated so later
+        probes see the job gone at its actual finish, and the real-time
+        clocks of GPUs last written by this job are pulled back so the
+        arrival loop can start successors earlier.  This deliberately
+        changes future decisions (it is the feedback extension, not the
+        bit-identical default)."""
+        jid = job.jid
+        old = self.est_finish.get(jid)
+        if old is None or old == finish:
+            return
+        gpus = np.asarray(gpus)
+        self.est_finish[jid] = finish
+        y = self._y_of(gpus)
+        G = job.num_gpus
+        for s, ys in enumerate(y.tolist()):
+            if 0 < ys < G:
+                if not self._fin_owned[s]:       # copy-on-first-write
+                    self._straddle_fin[s] = list(self._straddle_fin[s])
+                    self._fin_owned[s] = True
+                fin = self._straddle_fin[s]
+                i = bisect.bisect_left(fin, old)
+                if i < len(fin) and fin[i] == old:
+                    fin.pop(i)
+                bisect.insort(fin, finish)
+        # A GPU whose real-time clock was set by this very job frees at
+        # the observed finish instead of the estimate.
+        mask = self.R[gpus] == old
+        self.R[gpus[mask]] = finish
 
 
 # A picker maps (state, job, rho_nom, u, theta) -> gpu ids or None.
@@ -818,6 +922,7 @@ def pick_best_finish(state: PlacementState, job: Job, pickers: list[Picker],
 __all__ = [
     "ScheduleRequest", "ScheduleResult", "SchedulingPolicy",
     "register_policy", "get_policy", "list_policies",
+    "register_chooser", "get_chooser", "list_choosers", "ChooserFactory",
     "PlacementState", "Picker", "Chooser", "SharedState",
     "try_place", "try_place_group", "finalize", "bisect_theta",
     "probe_thetas", "schedule_arrivals",

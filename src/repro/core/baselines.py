@@ -23,10 +23,11 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.api import (PlacementState, Picker, ScheduleRequest,
+from repro.core.api import (Chooser, PlacementState, Picker, ScheduleRequest,
                             ScheduleResult, SharedState, bisect_theta,
-                            finalize, nominal_rho, register_policy,
-                            schedule_arrivals, try_place, try_place_group)
+                            finalize, nominal_rho, register_chooser,
+                            register_policy, schedule_arrivals, try_place,
+                            try_place_group)
 from repro.core.jobs import Job
 
 __all__ = ["first_fit_policy", "list_scheduling_policy", "random_policy_policy",
@@ -57,17 +58,41 @@ _ff_pick.theta_pool = True
 _ls_pick.theta_pool = True
 
 
+def _picker_chooser(picker: Picker, cluster, u: float) -> Chooser:
+    """Online chooser of a pure-picker baseline: try_place per arrival."""
+    rho_noms: dict[int, float] = {}
+
+    def choose(state: PlacementState, job: Job, theta: float) -> bool:
+        if job.jid not in rho_noms:
+            rho_noms[job.jid] = nominal_rho(cluster, job)
+        return try_place(state, job, picker, rho_noms[job.jid], u, theta)
+
+    return choose
+
+
+@register_chooser("ff")
+def ff_chooser(cluster, u: float, params: dict) -> Chooser:
+    """Online First-Fit: server-major first feasible GPUs per arrival."""
+    return _picker_chooser(_ff_pick, cluster, u)
+
+
+@register_chooser("ls")
+def ls_chooser(cluster, u: float, params: dict) -> Chooser:
+    """Online List-Scheduling: least-loaded feasible GPUs per arrival."""
+    return _picker_chooser(_ls_pick, cluster, u)
+
+
 def _picker_policy(request: ScheduleRequest, picker: Picker, name: str
                    ) -> ScheduleResult:
     """Shared FF/LS skeleton: online epoch loop or batch theta bisection."""
     cluster, u = request.cluster, request.u
     engine = request.params.get("engine")
-    rho_noms = {j.jid: nominal_rho(cluster, j) for j in request.jobs}
 
     if not request.is_batch:
-        def choose(state: PlacementState, job: Job, theta: float) -> bool:
-            return try_place(state, job, picker, rho_noms[job.jid], u, theta)
-        return schedule_arrivals(request, choose, name)
+        return schedule_arrivals(
+            request, _picker_chooser(picker, cluster, u), name)
+
+    rho_noms = {j.jid: nominal_rho(cluster, j) for j in request.jobs}
 
     jobs = request.jobs
 
@@ -130,13 +155,8 @@ def list_scheduling_policy(request: ScheduleRequest) -> ScheduleResult:
     return _picker_policy(request, _ls_pick, "LS")
 
 
-@register_policy("rand")
-def random_policy_policy(request: ScheduleRequest) -> ScheduleResult:
-    """RAND with theta_u = T.  ``request.params``: ``seed`` (default 0)."""
-    cluster, u = request.cluster, request.u
-    engine = request.params.get("engine")
-    rng = np.random.default_rng(request.params.get("seed", 0))
-    theta = float(request.horizon)
+def _rand_picker(rng: np.random.Generator) -> Picker:
+    """Random feasible GPUs, drawing from ``rng`` (stateful: see try_place)."""
 
     def picker(st, job, rho_nom, uu, th):
         feasible = np.flatnonzero(st.U + rho_nom / uu <= th + 1e-9)
@@ -145,19 +165,63 @@ def random_policy_policy(request: ScheduleRequest) -> ScheduleResult:
         return rng.choice(feasible, size=job.num_gpus, replace=False)
 
     picker.stateful = True   # consumes rng draws; see try_place's ladder
+    return picker
+
+
+@register_chooser("rand")
+def rand_chooser(cluster, u: float, params: dict) -> Chooser:
+    """Online RAND: random feasible GPUs per arrival.  Stateful (the rng
+    advances with every attempt), so crash recovery cannot replay it
+    decision-for-decision; ``repro.service`` flags this via the factory's
+    ``stateful`` attribute."""
+    picker = _rand_picker(np.random.default_rng(params.get("seed", 0)))
+
+    def choose(state: PlacementState, job: Job, th: float) -> bool:
+        return try_place(state, job, picker, nominal_rho(cluster, job), u, th)
+
+    choose.stateful = True
+    return choose
+
+
+rand_chooser.stateful = True
+
+
+@register_policy("rand")
+def random_policy_policy(request: ScheduleRequest) -> ScheduleResult:
+    """RAND with theta_u = T.  ``request.params``: ``seed`` (default 0)."""
+    cluster, u = request.cluster, request.u
+    engine = request.params.get("engine")
+    theta = float(request.horizon)
 
     if not request.is_batch:
-        def choose(state: PlacementState, job: Job, th: float) -> bool:
-            return try_place(state, job, picker,
-                             nominal_rho(cluster, job), u, th)
-        return schedule_arrivals(request, choose, "RAND")
+        return schedule_arrivals(
+            request, rand_chooser(cluster, u, request.params), "RAND")
 
+    rng = np.random.default_rng(request.params.get("seed", 0))
+    picker = _rand_picker(rng)
     state = PlacementState(cluster, engine=engine)
     for job in request.jobs:
         if not try_place(state, job, picker, nominal_rho(cluster, job),
                          u, theta):
             raise RuntimeError("RAND: no feasible schedule within horizon")
     return finalize(state, len(request.jobs), theta, None, "RAND")
+
+
+@register_chooser("reserved")
+def reserved_chooser(cluster, u: float, params: dict) -> Chooser:
+    """Online RESERVED: least-loaded GPUs charged at the contention-free
+    nominal estimate (the reserved-bandwidth optimism, per arrival)."""
+
+    def place_nominal(state: PlacementState, job: Job, theta: float) -> bool:
+        rho = nominal_rho(cluster, job)
+        gpus = _ls_pick(state, job, rho, u, theta)
+        if gpus is None or np.any(state.U[gpus] + rho / u > theta + 1e-9):
+            return False
+        start = float(state.R[gpus].max()) if len(gpus) else 0.0
+        state.commit(job, np.asarray(gpus), rho, start, u)
+        return True
+
+    return place_nominal
 
 
 @register_policy("reserved")
@@ -169,15 +233,7 @@ def reserved_bandwidth_policy(request: ScheduleRequest) -> ScheduleResult:
     argues against."""
     cluster, u = request.cluster, request.u
     engine = request.params.get("engine")
-
-    def place_nominal(state: PlacementState, job: Job, theta: float) -> bool:
-        rho = nominal_rho(cluster, job)
-        gpus = _ls_pick(state, job, rho, u, theta)
-        if gpus is None or np.any(state.U[gpus] + rho / u > theta + 1e-9):
-            return False
-        start = float(state.R[gpus].max()) if len(gpus) else 0.0
-        state.commit(job, np.asarray(gpus), rho, start, u)
-        return True
+    place_nominal = reserved_chooser(cluster, u, request.params)
 
     if not request.is_batch:
         return schedule_arrivals(request, place_nominal, "RESERVED")

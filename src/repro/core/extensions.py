@@ -23,7 +23,7 @@ from repro.core.api import (PlacementState, ScheduleRequest, ScheduleResult,
                             schedule_arrivals)
 from repro.core.jobs import Job
 from repro.core.simulator import simulate
-from repro.core.sjf_bco import fa_ffp, lbsgf
+from repro.core.sjf_bco import fa_ffp, lbsgf, sjf_bco_chooser
 
 __all__ = ["sjf_bco_adaptive_policy", "contention_sweep"]
 
@@ -35,14 +35,18 @@ def sjf_bco_adaptive_policy(request: ScheduleRequest) -> ScheduleResult:
     SJF-BCO online, which is already adaptive)."""
     cluster, u = request.cluster, request.u
     engine = request.params.get("engine")
+
+    if not request.is_batch:
+        # Online, the adaptive choice IS SJF-BCO's epoch rule: one shared
+        # chooser factory (registered in sjf_bco) serves both names.
+        return schedule_arrivals(
+            request, sjf_bco_chooser(cluster, u, request.params), "SJF-BCO+")
+
     rho_noms = {j.jid: nominal_rho(cluster, j) for j in request.jobs}
 
     def choose(state: PlacementState, job: Job, theta: float) -> bool:
         return pick_best_finish(state, job, [fa_ffp, lbsgf],
                                 rho_noms[job.jid], u, theta)
-
-    if not request.is_batch:
-        return schedule_arrivals(request, choose, "SJF-BCO+")
 
     jobs_sorted = sorted(request.jobs, key=lambda j: (j.num_gpus, j.jid))
 

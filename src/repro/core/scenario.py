@@ -153,6 +153,12 @@ class RunReport:
     def avg_jct(self) -> float:
         return self.sim.avg_jct
 
+    @property
+    def avg_queueing_delay(self) -> float:
+        """Mean start - arrival over completed jobs (time spent waiting
+        for GPUs; ``avg_jct == avg_queueing_delay + mean service time``)."""
+        return self.sim.avg_queueing_delay
+
 
 def build_request(scenario: Scenario) -> ScheduleRequest:
     """Materialise the scenario's specs into a :class:`ScheduleRequest`."""

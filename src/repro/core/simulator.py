@@ -85,6 +85,7 @@ class SimResult:
     finish: np.ndarray         # T_j per job (slot), -1 if never finished
     makespan: float
     avg_jct: float             # mean(finish - arrival) over completed jobs
+    avg_queueing_delay: float  # mean(start - arrival) over completed jobs
     completed: int
     horizon_hit: bool
     peak_contention: int       # max p_j[t] observed
@@ -476,11 +477,18 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
         # finish slot (those only coincide when everything arrives at 0).
         jct = (finish[completed_mask]
                - arrivals[completed_mask]).astype(np.float64)
+        # Queueing delay is time-to-service: start minus arrival.  Over
+        # the same completed set, avg_jct == avg_queueing_delay + the
+        # mean in-service time (finish - start) by construction.
+        qd = (start[completed_mask]
+              - arrivals[completed_mask]).astype(np.float64)
     else:
         jct = finish[completed_mask]
+        qd = start[completed_mask].astype(np.float64)
     return SimResult(
         start=start, finish=finish, makespan=makespan,
         avg_jct=float(jct.mean()) if len(jct) else float("inf"),
+        avg_queueing_delay=float(qd.mean()) if len(qd) else float("inf"),
         completed=completed,
         horizon_hit=horizon_hit,
         peak_contention=peak_p,

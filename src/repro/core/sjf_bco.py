@@ -29,9 +29,10 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.api import (PlacementState, ScheduleRequest, ScheduleResult,
-                            SharedState, bisect_theta, finalize, nominal_rho,
-                            pick_best_finish, register_policy, rho_hat,
+from repro.core.api import (Chooser, PlacementState, ScheduleRequest,
+                            ScheduleResult, SharedState, bisect_theta,
+                            finalize, nominal_rho, pick_best_finish,
+                            register_chooser, register_policy, rho_hat,
                             schedule_arrivals, try_place, try_place_group)
 from repro.core.cluster import Cluster
 from repro.core.jobs import Job
@@ -114,6 +115,23 @@ def lbsgf(state: PlacementState, job: Job, rho_nom: float, u: float,
 # whole group of thetas in lockstep (see api.try_place_group).
 fa_ffp.theta_pool = True
 lbsgf.theta_pool = True
+
+
+# The adaptive pack-or-spread choice IS SJF-BCO's online rule (extensions'
+# sjf-bco-adaptive shares it), so the chooser registers both names.
+@register_chooser("sjf-bco", "sjf-bco-adaptive")
+def sjf_bco_chooser(cluster: Cluster, u: float, params: dict) -> Chooser:
+    """Online SJF-BCO: the finish-minimising FA-FFP/LBSGF choice of the
+    epoch loop, bound to one (cluster, u) context."""
+    rho_noms: dict[int, float] = {}
+
+    def choose(state: PlacementState, job: Job, theta: float) -> bool:
+        if job.jid not in rho_noms:
+            rho_noms[job.jid] = nominal_rho(cluster, job)
+        return pick_best_finish(state, job, [fa_ffp, lbsgf],
+                                rho_noms[job.jid], u, theta)
+
+    return choose
 
 
 def _attempt(cluster: Cluster, jobs_sorted: list[Job],
@@ -297,10 +315,10 @@ def sjf_bco_policy(request: ScheduleRequest) -> ScheduleResult:
         raise ValueError(f"unknown bisect mode {bisect_mode!r}; "
                          "choose 'speculative' or 'sequential'")
     if not request.is_batch:
-        def choose(state: PlacementState, job: Job, theta: float) -> bool:
-            return pick_best_finish(state, job, [fa_ffp, lbsgf],
-                                    nominal_rho(cluster, job), u, theta)
-        return schedule_arrivals(request, choose, "SJF-BCO")
+        # The one online code path: the same chooser factory that
+        # repro.service pulls via get_chooser("sjf-bco").
+        return schedule_arrivals(
+            request, sjf_bco_chooser(cluster, u, request.params), "SJF-BCO")
 
     jobs = request.jobs
     jobs_sorted = sorted(jobs, key=lambda j: (j.num_gpus, j.jid))   # line 3

@@ -1,0 +1,28 @@
+"""repro.service: a long-running scheduler daemon over the paper's online
+path, with a validated job lifecycle, a write-ahead journal (in-memory or
+stdlib sqlite) and crash recovery by replay.
+
+The service adds *operability*, not new scheduling semantics: every
+placement decision flows through the same chooser registry and
+:class:`~repro.core.api.PlacementState` that
+:func:`repro.core.api.schedule_arrivals` uses, so a drained service
+reproduces the one-shot online schedule decision-for-decision (asserted
+by ``benchmarks/bench_service.py --quick``).  Start with
+:class:`~repro.service.api.SchedulerService`.
+"""
+from repro.service.api import (JobHandle, JobStatus, SchedulerService,
+                               SubmitRequest)
+from repro.service.daemon import Daemon, VirtualClock
+from repro.service.queue import QueueManager, TenantConfig
+from repro.service.state import (TERMINAL, TRANSITIONS, InvalidTransition,
+                                 JobRecord, JobState)
+from repro.service.store import (JournalEntry, MemoryStore, SqliteStore,
+                                 open_store)
+
+__all__ = [
+    "SchedulerService", "SubmitRequest", "JobHandle", "JobStatus",
+    "Daemon", "VirtualClock",
+    "QueueManager", "TenantConfig",
+    "JobState", "JobRecord", "TRANSITIONS", "TERMINAL", "InvalidTransition",
+    "JournalEntry", "MemoryStore", "SqliteStore", "open_store",
+]

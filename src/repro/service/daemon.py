@@ -1,0 +1,332 @@
+"""The scheduler daemon: a crash-recoverable event loop over the online
+scheduling path.
+
+One :class:`Daemon` owns the persistent pieces a long-running scheduler
+needs -- a live :class:`~repro.core.api.PlacementState`, the write-ahead
+journal (:mod:`repro.service.store`), the queue manager, a virtual clock
+-- and drives *scheduling rounds*: pop the next arrival batch, advance the
+clocks, run each tenant's registered online chooser
+(:func:`repro.core.api.get_chooser`), journal every transition.  Because
+the chooser, the visit order ``(arrival, G_j, jid)`` and the busy-time
+accounting are literally the same code
+:func:`repro.core.api.schedule_arrivals` runs, the daemon's placements are
+decision-for-decision identical to a one-shot ``schedule_arrivals`` call
+on the same trace -- the service is a recoverable shell around the
+paper's online path, not a fork of its semantics (asserted by
+``benchmarks/bench_service.py --quick``).
+
+Execution is virtual-time: the *monitor loop* runs
+:func:`repro.core.simulator.simulate` over the committed assignment up to
+the current clock and folds completions back (``RUNNING -> DONE``).  With
+``feedback="actual"`` each completion is also fed into the incremental
+engines via :meth:`~repro.core.api.PlacementState.observe_finish`, so
+later placements price contention against observed finishes instead of
+the rho-hat estimates (an opt-in extension: it deliberately changes
+decisions, so the identity guarantee holds only for the default
+``feedback="estimate"``).
+
+Crash recovery (:meth:`Daemon.recover`) is pure journal replay: rebuild
+the job records, re-commit journaled placements -- with the exact
+``(gpus, rho, start)`` floats, in journal order, so U/R clocks come back
+bit-for-bit -- and re-enqueue anything caught mid-``PLACING``; the
+deterministic chooser then re-derives the same placement the crashed
+process was about to make.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.api import (PlacementState, ScheduleResult, finalize,
+                            get_chooser)
+from repro.core.cluster import Cluster
+from repro.core.jobs import Job
+from repro.core.simulator import SimResult, simulate
+from repro.service.queue import QueueManager
+from repro.service.state import TERMINAL, JobRecord, JobState
+from repro.service.store import MemoryStore
+
+__all__ = ["VirtualClock", "Daemon", "FEEDBACK_MODES"]
+
+FEEDBACK_MODES = ("estimate", "actual")
+
+
+class VirtualClock:
+    """Injectable monotone clock in simulator slots.
+
+    The daemon advances it to each round's arrival slot; journal
+    timestamps come from it, so tests (and the fault-injection loop) see
+    fully deterministic journals.  Inject a wall-clock adapter (anything
+    with ``now()``/``advance(t)``) to stamp real time instead."""
+
+    def __init__(self, t0: float = 0.0):
+        self._now = float(t0)
+
+    def now(self) -> float:
+        """Current virtual time (slots)."""
+        return self._now
+
+    def advance(self, t: float) -> None:
+        """Move forward to ``t`` (never backwards)."""
+        self._now = max(self._now, float(t))
+
+
+class Daemon:
+    """Event loop + journal + recovery for one cluster's scheduler."""
+
+    def __init__(self, cluster: Cluster, store=None,
+                 queue: "QueueManager | None" = None, *,
+                 u: float = 1.5, horizon: int = 1200,
+                 engine: "str | None" = None,
+                 feedback: str = "estimate",
+                 monitor_every: int = 0,
+                 clock: "VirtualClock | None" = None):
+        if feedback not in FEEDBACK_MODES:
+            raise ValueError(f"unknown feedback mode {feedback!r}; "
+                             f"choose from {FEEDBACK_MODES}")
+        self.cluster = cluster
+        self.store = store if store is not None else MemoryStore()
+        # NB: not ``queue or ...`` -- an empty QueueManager is falsy (len 0).
+        self.queue = queue if queue is not None else QueueManager()
+        self.u = float(u)
+        self.horizon = int(horizon)
+        self.feedback = feedback
+        # 0 = lazy (monitor only on status/drain); k = every k rounds.
+        # feedback="actual" needs completions before each round to act on
+        # them, so it forces per-round monitoring.
+        self.monitor_every = 1 if feedback == "actual" else int(monitor_every)
+        self.clock = clock or VirtualClock()
+        self.state = PlacementState(cluster, engine=engine)
+        self.state.commit_hook = self._capture_commit
+        self.records: dict[int, JobRecord] = {}
+        self.jobs: list[Job] = []          # jid-indexed (jid == list index)
+        self.arrivals: list[int] = []
+        self.rounds = 0
+        self.decision_latencies: list[float] = []   # seconds, per chooser run
+        self._choosers: dict[str, object] = {}
+        self._last_commit: "tuple | None" = None
+        self._sim_cache: "tuple | None" = None      # ((n_placed, limit), sim)
+
+    # -- submission -------------------------------------------------------
+
+    def admit(self, job: Job, arrival: int = 0,
+              tenant: str = "default") -> JobRecord:
+        """Journal + enqueue one submission; the job is renumbered so its
+        jid is the daemon-wide submission index (the invariant simulator
+        indexing and ``schedule_arrivals`` identity both rely on)."""
+        if arrival < 0:
+            raise ValueError("arrival slot must be >= 0")
+        jid = len(self.jobs)
+        job = dataclasses.replace(job, jid=jid)
+        record = JobRecord(jid=jid, tenant=tenant, job=job,
+                           arrival=int(arrival))
+        self.jobs.append(job)
+        self.arrivals.append(int(arrival))
+        self.records[jid] = record
+        self.store.append("submit", jid,
+                          {"tenant": tenant, "arrival": int(arrival),
+                           "job": dataclasses.asdict(job)},
+                          ts=self.clock.now())
+        self._transition(record, JobState.QUEUED)
+        self.queue.push(record)
+        return record
+
+    def cancel(self, jid: int) -> bool:
+        """Withdraw a not-yet-placed job; False once it is beyond QUEUED
+        (gang scheduling is non-preemptive, Eq. 3)."""
+        record = self.records.get(jid)
+        if record is None or record.state not in (JobState.PENDING,
+                                                  JobState.QUEUED):
+            return False
+        self.queue.cancel(jid)
+        self._transition(record, JobState.CANCELLED)
+        return True
+
+    # -- the event loop ---------------------------------------------------
+
+    def step(self) -> bool:
+        """Run one scheduling round; False when nothing is queued.
+
+        A round pops the queue manager's next arrival batch, journals an
+        ``advance`` to the batch's latest arrival slot, and for each job
+        (already in ``schedule_arrivals``'s visit order) journals
+        ``PLACING``, advances the real-time clocks to its arrival, runs
+        the tenant's chooser against the shared placement state, and
+        journals the outcome (``RUNNING`` with the exact committed
+        placement, or ``FAILED``)."""
+        batch = self.queue.next_batch()
+        if not batch:
+            return False
+        self.rounds += 1
+        t_round = max(r.arrival for r in batch)
+        self.store.append("advance", -1, {"t": t_round}, ts=self.clock.now())
+        self.clock.advance(t_round)
+        theta = float(self.horizon)
+        for record in batch:
+            chooser = self._chooser_for(record.tenant)
+            self._transition(record, JobState.PLACING)
+            self.state.advance_to(record.arrival)
+            self._last_commit = None
+            t0 = time.perf_counter()
+            ok = chooser(self.state, record.job, theta)
+            self.decision_latencies.append(time.perf_counter() - t0)
+            if not ok:
+                self._transition(record, JobState.FAILED)
+                continue
+            jid, gpus, rho, start = self._last_commit
+            if jid != record.jid:          # chooser must place THIS job
+                raise RuntimeError(
+                    f"chooser committed job {jid} while placing {record.jid}")
+            record.gpus, record.rho, record.start = gpus, rho, start
+            self._transition(record, JobState.RUNNING,
+                             gpus=[int(g) for g in gpus],
+                             rho=rho, start=start)
+        if self.monitor_every and self.rounds % self.monitor_every == 0:
+            self.monitor()
+        return True
+
+    def drain(self, sim_horizon: int = 10**7
+              ) -> "tuple[ScheduleResult, SimResult]":
+        """Run rounds until the queue is empty, then let the virtual-time
+        execution run to completion; returns the frozen schedule (the
+        same :func:`~repro.core.api.finalize` shape every policy emits)
+        and the final simulation."""
+        while self.step():
+            pass
+        sim = self.monitor(at=sim_horizon)
+        schedule = finalize(self.state, len(self.jobs), float(self.horizon),
+                            None, self.queue.default.policy.upper())
+        return schedule, sim
+
+    # -- the monitor loop -------------------------------------------------
+
+    def monitor(self, at: "int | None" = None) -> SimResult:
+        """Execute the committed assignment in virtual time up to ``at``
+        (default: the clock's now) and fold completions back: RUNNING jobs
+        whose simulated finish lands within the window advance to DONE
+        (journaled), and with ``feedback="actual"`` their observed
+        finishes are pushed into the placement state's incremental
+        engines via :meth:`~repro.core.api.PlacementState.observe_finish`."""
+        limit = int(at if at is not None else self.clock.now())
+        key = (len(self.state.assignment), limit)
+        if self._sim_cache is not None and self._sim_cache[0] == key:
+            sim = self._sim_cache[1]
+        else:
+            sim = simulate(self.cluster, self.jobs, self.state.assignment,
+                           horizon=limit,
+                           arrivals=np.asarray(self.arrivals, dtype=np.int64)
+                           if self.jobs else None)
+            self._sim_cache = (key, sim)
+        for record in self.records.values():
+            if record.state is not JobState.RUNNING:
+                continue
+            finish = int(sim.finish[record.jid])
+            if finish < 0:
+                continue
+            record.finish = float(finish)
+            self._transition(record, JobState.DONE, finish=finish)
+            if self.feedback == "actual":
+                self.state.observe_finish(record.job, record.gpus,
+                                          float(finish))
+        return sim
+
+    # -- crash recovery ---------------------------------------------------
+
+    @classmethod
+    def recover(cls, cluster: Cluster, store,
+                queue: "QueueManager | None" = None, **kwargs) -> "Daemon":
+        """Rebuild a daemon from its journal.
+
+        Replays every entry in sequence order: submissions recreate the
+        job records, ``RUNNING`` transitions re-commit the journaled
+        ``(gpus, rho, start)`` into a fresh placement state (same float
+        operands, same order -- the recovered U/R clocks are bit-identical
+        to the crashed daemon's), and jobs whose last word is ``QUEUED``
+        or ``PLACING`` are re-enqueued (the latter via a journaled
+        recovery transition).  Stateful choosers (RAND's rng) cannot be
+        replayed decision-for-decision; recovery is exact for the
+        deterministic policies."""
+        daemon = cls(cluster, store, queue, **kwargs)
+        for entry in store.entries():
+            daemon._replay(entry)
+        requeue = [r for r in daemon.records.values()
+                   if r.state in (JobState.QUEUED, JobState.PLACING,
+                                  JobState.PENDING)]
+        for record in sorted(requeue, key=lambda r: r.jid):
+            if record.state is not JobState.QUEUED:
+                daemon._transition(record, JobState.QUEUED)
+            daemon.queue.push(record)
+        return daemon
+
+    def _replay(self, entry) -> None:
+        """Fold one journal entry back into records / state / clock."""
+        if entry.kind == "submit":
+            if entry.jid != len(self.jobs):
+                raise ValueError(
+                    f"journal gap: submit jid {entry.jid} != next jid "
+                    f"{len(self.jobs)}")
+            job = Job(**entry.payload["job"])
+            self.jobs.append(job)
+            self.arrivals.append(int(entry.payload["arrival"]))
+            self.records[entry.jid] = JobRecord(
+                jid=entry.jid, tenant=entry.payload["tenant"], job=job,
+                arrival=int(entry.payload["arrival"]))
+        elif entry.kind == "advance":
+            self.rounds += 1
+            self.clock.advance(entry.payload["t"])
+        elif entry.kind == "transition":
+            record = self.records[entry.jid]
+            to = JobState(entry.payload["to"])
+            record.advance(to)
+            if to is JobState.PLACING:
+                # The live daemon advanced the real-time clocks right
+                # after journaling PLACING; replay does too (idempotent
+                # if the job is later re-placed: advance_to is a max).
+                self.state.advance_to(record.arrival)
+            elif to is JobState.RUNNING:
+                gpus = np.asarray(entry.payload["gpus"], dtype=np.int64)
+                rho = float(entry.payload["rho"])
+                start = float(entry.payload["start"])
+                self.state.advance_to(record.arrival)
+                self.state.commit(record.job, gpus, rho, start, self.u)
+                record.gpus, record.rho, record.start = gpus, rho, start
+            elif to is JobState.DONE:
+                record.finish = float(entry.payload["finish"])
+                if self.feedback == "actual":
+                    self.state.observe_finish(record.job, record.gpus,
+                                              record.finish)
+        else:
+            raise ValueError(f"unknown journal entry kind {entry.kind!r}")
+
+    # -- internals --------------------------------------------------------
+
+    def _capture_commit(self, job, gpus, rho, start) -> None:
+        """PlacementState.commit_hook: capture the exact committed floats
+        (journaling est_finish - est_start would not round-trip rho)."""
+        self._last_commit = (job.jid, np.asarray(gpus), float(rho),
+                             float(start))
+
+    def _chooser_for(self, tenant: str):
+        """The tenant's online chooser (built once per tenant via the
+        core chooser registry)."""
+        if tenant not in self._choosers:
+            cfg = self.queue.config_for(tenant)
+            factory = get_chooser(cfg.policy)
+            self._choosers[tenant] = factory(self.cluster, self.u,
+                                             cfg.param_dict())
+        return self._choosers[tenant]
+
+    def _transition(self, record: JobRecord, to: JobState,
+                    **payload) -> None:
+        """Validate, apply, then journal one lifecycle transition."""
+        record.advance(to)
+        self.store.append("transition", record.jid,
+                          {"to": to.value, **payload}, ts=self.clock.now())
+
+    @property
+    def active(self) -> int:
+        """Jobs not yet in a terminal state."""
+        return sum(1 for r in self.records.values()
+                   if r.state not in TERMINAL)

@@ -1,0 +1,132 @@
+"""Write-ahead journal stores for the scheduler daemon.
+
+The daemon journals every externally-visible step -- submissions, state
+transitions (with the exact placement floats), virtual-clock advances --
+as an append-only sequence of :class:`JournalEntry` records.  Recovery is
+pure replay: :meth:`repro.service.daemon.Daemon.recover` folds the journal
+back into job records and re-commits journaled placements into a fresh
+:class:`~repro.core.api.PlacementState` in journal order, which reproduces
+the busy-time clocks bit-for-bit (same float operands, same order).
+
+Two backends share the interface:
+
+  * :class:`MemoryStore` -- a list; for tests (its :meth:`MemoryStore.prefix`
+    powers the fault-injection loop that crashes the daemon after every
+    journaled event) and for benchmarks that isolate scheduling cost.
+  * :class:`SqliteStore` -- stdlib ``sqlite3`` in WAL mode, one row per
+    entry; survives process death, so a daemon pointed at the same path
+    picks up exactly where the last one crashed.
+
+Payload floats (``rho``, ``start``, ``finish``) must round-trip exactly:
+JSON via ``repr`` and SQLite ``REAL`` columns both preserve IEEE-754
+doubles bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sqlite3
+
+__all__ = ["JournalEntry", "MemoryStore", "SqliteStore", "open_store"]
+
+
+@dataclasses.dataclass(frozen=True)
+class JournalEntry:
+    """One journaled event.
+
+    ``kind`` is ``"submit"`` (payload: tenant, arrival, job fields),
+    ``"transition"`` (payload: ``to`` state plus, for RUNNING, the exact
+    ``gpus``/``rho``/``start``; for DONE, ``finish``) or ``"advance"``
+    (payload: the virtual-clock slot ``t`` of a scheduling round)."""
+
+    seq: int
+    ts: float                  # virtual-clock stamp (deterministic tests)
+    kind: str
+    jid: int                   # -1 for job-less entries (advance)
+    payload: dict
+
+    def to_json(self) -> str:
+        """Payload as canonical JSON (floats via repr: exact round-trip)."""
+        return json.dumps(self.payload, sort_keys=True)
+
+
+class MemoryStore:
+    """In-memory journal: a list of entries, no durability."""
+
+    def __init__(self, entries: "list[JournalEntry] | None" = None):
+        self._entries: list[JournalEntry] = list(entries or [])
+
+    def append(self, kind: str, jid: int, payload: dict,
+               ts: float = 0.0) -> JournalEntry:
+        """Append one entry; returns it with its assigned sequence number."""
+        entry = JournalEntry(seq=len(self._entries) + 1, ts=ts, kind=kind,
+                             jid=jid, payload=payload)
+        self._entries.append(entry)
+        return entry
+
+    def entries(self) -> list[JournalEntry]:
+        """The whole journal, in append order."""
+        return list(self._entries)
+
+    def prefix(self, n: int) -> "MemoryStore":
+        """A copy holding only the first ``n`` entries -- a simulated
+        crash snapshot for the fault-injection recovery tests."""
+        return MemoryStore(self._entries[:n])
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def close(self) -> None:
+        """No-op (symmetry with :class:`SqliteStore`)."""
+
+
+class SqliteStore:
+    """Durable journal on stdlib ``sqlite3``.
+
+    WAL journaling keeps appends atomic under crashes; each ``append``
+    commits, so an entry either exists completely or not at all -- the
+    property the recovery replay relies on."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._db = sqlite3.connect(path)
+        self._db.execute("PRAGMA journal_mode=WAL")
+        self._db.execute(
+            "CREATE TABLE IF NOT EXISTS journal ("
+            " seq INTEGER PRIMARY KEY AUTOINCREMENT,"
+            " ts REAL NOT NULL,"
+            " kind TEXT NOT NULL,"
+            " jid INTEGER NOT NULL,"
+            " payload TEXT NOT NULL)")
+        self._db.commit()
+
+    def append(self, kind: str, jid: int, payload: dict,
+               ts: float = 0.0) -> JournalEntry:
+        """Append + commit one entry; returns it with its sequence number."""
+        cur = self._db.execute(
+            "INSERT INTO journal (ts, kind, jid, payload) VALUES (?,?,?,?)",
+            (ts, kind, jid, json.dumps(payload, sort_keys=True)))
+        self._db.commit()
+        return JournalEntry(seq=cur.lastrowid, ts=ts, kind=kind, jid=jid,
+                            payload=payload)
+
+    def entries(self) -> list[JournalEntry]:
+        """The whole journal, in sequence order."""
+        rows = self._db.execute(
+            "SELECT seq, ts, kind, jid, payload FROM journal ORDER BY seq")
+        return [JournalEntry(seq=s, ts=ts, kind=k, jid=j,
+                             payload=json.loads(p))
+                for s, ts, k, j, p in rows]
+
+    def __len__(self) -> int:
+        return int(self._db.execute(
+            "SELECT COUNT(*) FROM journal").fetchone()[0])
+
+    def close(self) -> None:
+        """Close the connection (flushes the WAL)."""
+        self._db.close()
+
+
+def open_store(path: "str | None" = None):
+    """``None`` -> :class:`MemoryStore`, else :class:`SqliteStore` at path."""
+    return MemoryStore() if path is None else SqliteStore(path)

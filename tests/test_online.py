@@ -95,6 +95,43 @@ class TestOnlineScheduling:
         assert batch.avg_jct == pytest.approx(
             batch.finish.astype(float).mean())
 
+    def test_avg_queueing_delay_decomposes_jct(self):
+        """avg_queueing_delay is mean(start - arrival); on a
+        contention-free scenario (one gang at a time, so service time is
+        the nominal rho) JCT decomposes exactly into queueing + service:
+        avg_jct == avg_queueing_delay + mean(finish - start)."""
+        cluster = Cluster(capacities=(2,))
+        jobs = [Job(jid=i, num_gpus=2, iters=100, grad_size=1e-3, batch=32,
+                    dt_fwd=3e-4, dt_bwd=8e-3) for i in range(3)]
+        arrivals = np.array([0, 1, 500])
+        asg = [(i, np.arange(2)) for i in range(3)]
+        sim = simulate(cluster, jobs, asg, arrivals=arrivals)
+        assert sim.completed == 3
+        queueing = (sim.start - arrivals).astype(float).mean()
+        service = (sim.finish - sim.start).astype(float).mean()
+        assert sim.avg_queueing_delay == pytest.approx(queueing)
+        assert sim.avg_jct == pytest.approx(
+            sim.avg_queueing_delay + service)
+        # job 2 arrives into an idle cluster: zero queueing for it, while
+        # job 1 waited behind job 0 on the only gang-capable server
+        assert sim.start[2] == arrivals[2]
+        assert sim.start[1] > arrivals[1]
+        # batch runs: arrival == 0 for all, so the delay is just the
+        # mean start slot
+        batch = simulate(cluster, jobs, asg)
+        assert batch.avg_queueing_delay == pytest.approx(
+            batch.start.astype(float).mean())
+
+    def test_run_report_exposes_queueing_delay(self):
+        from repro.core import (ArrivalSpec, ClusterSpec, Scenario,
+                                WorkloadSpec, run_scenario)
+        rep = run_scenario(Scenario(
+            cluster=ClusterSpec(num_servers=4, seed=2),
+            workload=WorkloadSpec(seed=2, num_jobs=12),
+            arrivals=ArrivalSpec(rate=0.2, seed=2)))
+        assert rep.avg_queueing_delay == rep.sim.avg_queueing_delay
+        assert 0.0 <= rep.avg_queueing_delay < np.inf
+
     def test_idle_gap_emits_zero_active_event(self):
         """Idling to the next arrival is a recorded zero-active window, so
         time-weighted stats (ContentionStats.mean_active/mean) cover

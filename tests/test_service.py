@@ -1,0 +1,341 @@
+"""The scheduler service: state machine, journal stores, queue manager,
+daemon-vs-``schedule_arrivals`` identity, and crash recovery by replay."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (ScheduleRequest, get_policy, philly_cluster,
+                        philly_workload, simulate)
+from repro.service import (Daemon, InvalidTransition, JobRecord, JobState,
+                           MemoryStore, QueueManager, SchedulerService,
+                           SqliteStore, SubmitRequest, TenantConfig)
+
+
+def _jobs(n, seed=3):
+    jobs = philly_workload(seed=seed)[:n]
+    return [dataclasses.replace(j, jid=i) for i, j in enumerate(jobs)]
+
+
+def _arrivals(n, hi=120, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.sort(rng.integers(0, hi, size=n)).astype(np.int64)
+
+
+def _submit_all(svc, jobs, arrivals, tenant="default"):
+    for j, a in zip(jobs, arrivals):
+        svc.submit(SubmitRequest(j, int(a), tenant))
+
+
+def _same_schedule(a, b):
+    return (np.array_equal(a.est_start, b.est_start)
+            and np.array_equal(a.est_finish, b.est_finish)
+            and len(a.assignment) == len(b.assignment)
+            and all(ja == jb and np.array_equal(ga, gb)
+                    for (ja, ga), (jb, gb) in zip(a.assignment,
+                                                  b.assignment)))
+
+
+class TestStateMachine:
+    def test_normal_lifecycle(self):
+        rec = JobRecord(jid=0, tenant="t", job=_jobs(1)[0], arrival=0)
+        for state in (JobState.QUEUED, JobState.PLACING, JobState.RUNNING,
+                      JobState.DONE):
+            rec.advance(state)
+        assert rec.state is JobState.DONE
+
+    def test_illegal_transitions_raise(self):
+        rec = JobRecord(jid=0, tenant="t", job=_jobs(1)[0], arrival=0)
+        with pytest.raises(InvalidTransition):
+            rec.advance(JobState.RUNNING)       # PENDING -> RUNNING
+        rec.advance(JobState.QUEUED)
+        with pytest.raises(InvalidTransition):
+            rec.advance(JobState.DONE)          # QUEUED -> DONE
+        rec.advance(JobState.CANCELLED)
+        with pytest.raises(InvalidTransition):
+            rec.advance(JobState.QUEUED)        # terminal
+
+    def test_requeue_voids_placement(self):
+        """PLACING -> QUEUED (the crash re-enqueue) clears any partially
+        recorded placement so recovery re-derives it from scratch."""
+        rec = JobRecord(jid=0, tenant="t", job=_jobs(1)[0], arrival=0)
+        rec.advance(JobState.QUEUED)
+        rec.advance(JobState.PLACING)
+        rec.gpus, rec.rho, rec.start = np.arange(2), 3.0, 1.0
+        rec.advance(JobState.QUEUED)
+        assert rec.gpus is None and rec.rho is None and rec.start is None
+
+
+class TestStores:
+    def test_memory_append_and_prefix(self):
+        store = MemoryStore()
+        for i in range(5):
+            e = store.append("transition", i, {"to": "QUEUED"}, ts=float(i))
+            assert e.seq == i + 1
+        assert len(store) == 5
+        snap = store.prefix(3)
+        assert [e.seq for e in snap.entries()] == [1, 2, 3]
+        # snapshots are independent copies
+        snap.append("advance", -1, {"t": 9})
+        assert len(store) == 5
+
+    def test_sqlite_roundtrip_exact_floats(self, tmp_path):
+        path = str(tmp_path / "journal.db")
+        store = SqliteStore(path)
+        rho = 0.1 + 0.2                      # 0.30000000000000004
+        store.append("transition", 7,
+                     {"to": "RUNNING", "gpus": [3, 4], "rho": rho,
+                      "start": 17.0}, ts=1.5)
+        store.close()
+        back = SqliteStore(path)
+        (entry,) = back.entries()
+        assert entry.jid == 7 and entry.ts == 1.5
+        assert entry.payload["rho"] == rho          # bitwise round-trip
+        assert entry.payload["gpus"] == [3, 4]
+        back.close()
+
+
+class TestQueueManager:
+    def test_visit_order_matches_schedule_arrivals(self):
+        """Batches pop in (arrival, G_j, jid) order -- the epoch loop's
+        sort key -- whatever order jobs were pushed in."""
+        jobs = _jobs(6)
+        qm = QueueManager(round_slots=10**6)
+        order = [(5, jobs[0]), (1, jobs[3]), (1, jobs[1]), (0, jobs[2]),
+                 (1, jobs[5]), (0, jobs[4])]
+        for arrival, job in order:
+            rec = JobRecord(jid=job.jid, tenant="t", job=job,
+                            arrival=arrival)
+            rec.advance(JobState.QUEUED)
+            qm.push(rec)
+        batch = qm.next_batch()
+        keys = [(r.arrival, r.job.num_gpus, r.jid) for r in batch]
+        assert keys == sorted(keys)
+
+    def test_round_slots_and_max_batch(self):
+        jobs = _jobs(6)
+        qm = QueueManager(round_slots=2, max_batch=2)
+        for i, job in enumerate(jobs):
+            rec = JobRecord(jid=job.jid, tenant="t", job=job, arrival=i)
+            rec.advance(JobState.QUEUED)
+            qm.push(rec)
+        first = qm.next_batch()
+        # arrivals 0..5, round covers [0, 2) but max_batch caps at 2
+        assert [r.arrival for r in first] == [0, 1]
+        assert len(qm) == 4
+
+    def test_cancel_is_lazy_but_effective(self):
+        jobs = _jobs(3)
+        qm = QueueManager(round_slots=10)
+        for i, job in enumerate(jobs):
+            rec = JobRecord(jid=job.jid, tenant="t", job=job, arrival=i)
+            rec.advance(JobState.QUEUED)
+            qm.push(rec)
+        assert qm.cancel(1)
+        assert not qm.cancel(1)              # already gone
+        assert len(qm) == 2
+        assert [r.jid for r in qm.next_batch()] == [0, 2]
+
+
+class TestDaemonIdentity:
+    """The tentpole property: the daemon path reproduces the one-shot
+    online epoch loop decision-for-decision."""
+
+    @pytest.mark.parametrize("policy,params", [
+        ("sjf-bco", {}),
+        ("ff", {}),
+        ("ls", {}),
+        ("rand", {"seed": 7}),
+        ("reserved", {}),
+    ])
+    def test_drain_equals_schedule_arrivals(self, policy, params):
+        cluster = philly_cluster(8, seed=1)
+        jobs = _jobs(24)
+        arrivals = _arrivals(len(jobs))
+        ref = get_policy(policy)(ScheduleRequest(
+            cluster, jobs, arrivals=arrivals, params=dict(params)))
+        svc = SchedulerService(cluster, policy=policy, params=params)
+        _submit_all(svc, jobs, arrivals)
+        sched, sim = svc.drain()
+        assert _same_schedule(ref, sched)
+        ref_sim = simulate(cluster, jobs, ref.assignment, arrivals=arrivals)
+        assert sim.completed == len(jobs)
+        assert np.array_equal(sim.finish, ref_sim.finish)
+
+    def test_batching_knobs_do_not_change_decisions(self):
+        """Wider rounds / capped batches slice the stream differently but
+        never reorder it, so the schedule is invariant."""
+        cluster = philly_cluster(6, seed=2)
+        jobs = _jobs(20)
+        arrivals = _arrivals(len(jobs), hi=60)
+        ref = get_policy("sjf-bco")(ScheduleRequest(cluster, jobs,
+                                                    arrivals=arrivals))
+        for kw in ({"round_slots": 5}, {"round_slots": 10**6},
+                   {"max_batch": 1}, {"round_slots": 7, "max_batch": 3}):
+            svc = SchedulerService(cluster, policy="sjf-bco", **kw)
+            _submit_all(svc, jobs, arrivals)
+            sched, _ = svc.drain()
+            assert _same_schedule(ref, sched), kw
+
+    def test_multi_tenant_choosers(self):
+        """Tenants resolve their own policy through the core chooser
+        registry while sharing one placement state."""
+        cluster = philly_cluster(6, seed=2)
+        jobs = _jobs(12)
+        arrivals = _arrivals(len(jobs), hi=40)
+        svc = SchedulerService(
+            cluster, policy="sjf-bco",
+            tenants={"best-effort": TenantConfig(policy="ff")})
+        for i, (j, a) in enumerate(zip(jobs, arrivals)):
+            svc.submit(SubmitRequest(
+                j, int(a), "best-effort" if i % 3 == 0 else "default"))
+        sched, sim = svc.drain()
+        assert sim.completed == len(jobs)
+        assert len(sched.assignment) == len(jobs)
+        assert len(svc.daemon._choosers) == 2
+
+    def test_cancel_mid_queue(self):
+        cluster = philly_cluster(6, seed=2)
+        jobs = _jobs(8)
+        svc = SchedulerService(cluster, policy="sjf-bco")
+        handles = [svc.submit(SubmitRequest(j, 10 + i))
+                   for i, j in enumerate(jobs)]
+        assert svc.cancel(handles[3])
+        sched, sim = svc.drain()
+        st = svc.status(handles[3], refresh=False)
+        assert st.state is JobState.CANCELLED
+        assert sched.est_start[3] == -1.0           # never placed
+        placed = {j for j, _ in sched.assignment}
+        assert placed == set(range(len(jobs))) - {3}
+        # RUNNING/DONE jobs cannot be cancelled (non-preemptive gangs)
+        assert not svc.cancel(handles[0])
+
+    def test_status_and_monitor(self):
+        cluster = philly_cluster(6, seed=2)
+        jobs = _jobs(6)
+        svc = SchedulerService(cluster, policy="sjf-bco")
+        handles = [svc.submit(SubmitRequest(j, i)) for i, j in
+                   enumerate(jobs)]
+        while svc.step():
+            pass
+        st = svc.status(handles[0])         # refresh runs the monitor
+        assert st.state in (JobState.RUNNING, JobState.DONE)
+        assert st.gpus is not None and st.start is not None
+        _, sim = svc.drain()
+        for h in handles:
+            done = svc.status(h, refresh=False)
+            assert done.state is JobState.DONE
+            assert done.finish == float(sim.finish[h.jid])
+        assert "DONE" in svc.table()
+
+    def test_decision_latencies_recorded(self):
+        cluster = philly_cluster(4, seed=1)
+        jobs = _jobs(5)
+        svc = SchedulerService(cluster, policy="sjf-bco")
+        _submit_all(svc, jobs, np.zeros(len(jobs), dtype=np.int64))
+        svc.drain()
+        lats = svc.daemon.decision_latencies
+        assert len(lats) == len(jobs) and all(t > 0 for t in lats)
+
+    def test_feedback_actual_runs_and_observes(self):
+        """The opt-in completion-feedback mode executes end to end; it
+        deliberately reprices later placements, so no identity claim --
+        but every job still completes after its arrival."""
+        cluster = philly_cluster(6, seed=2)
+        jobs = _jobs(16)
+        arrivals = _arrivals(len(jobs), hi=200)
+        svc = SchedulerService(cluster, policy="sjf-bco",
+                               feedback="actual")
+        _submit_all(svc, jobs, arrivals)
+        sched, sim = svc.drain()
+        assert sim.completed == len(jobs)
+        assert np.all(sim.start >= arrivals)
+
+    def test_unknown_feedback_mode_rejected(self):
+        with pytest.raises(ValueError, match="feedback"):
+            SchedulerService(philly_cluster(4, seed=1), feedback="oracle")
+
+
+class TestCrashRecovery:
+    def test_fault_injection_every_journal_prefix(self):
+        """Kill the daemon after EVERY journaled event; recovery plus the
+        remaining submissions must reproduce the uninterrupted schedule
+        exactly -- including crashes inside the PLACING window."""
+        cluster = philly_cluster(8, seed=1)
+        jobs = _jobs(16)
+        arrivals = _arrivals(len(jobs))
+        svc = SchedulerService(cluster, policy="sjf-bco")
+        _submit_all(svc, jobs, arrivals)
+        full, _ = svc.drain()
+        store = svc.daemon.store
+        placing_seen = 0
+        for k in range(len(store) + 1):
+            snap = store.prefix(k)
+            if snap.entries() and snap.entries()[-1].kind == "transition" \
+                    and snap.entries()[-1].payload["to"] == "PLACING":
+                placing_seen += 1
+            daemon = Daemon.recover(cluster, snap,
+                                    QueueManager(TenantConfig("sjf-bco")))
+            for j, a in list(zip(jobs, arrivals))[len(daemon.jobs):]:
+                daemon.admit(j, int(a))
+            sched, _ = daemon.drain()
+            assert _same_schedule(full, sched), f"prefix {k}"
+        assert placing_seen > 0     # the interesting crash window was hit
+
+    def test_sqlite_crash_and_reopen(self, tmp_path):
+        cluster = philly_cluster(8, seed=1)
+        jobs = _jobs(16)
+        arrivals = _arrivals(len(jobs))
+        ref = get_policy("sjf-bco")(ScheduleRequest(cluster, jobs,
+                                                    arrivals=arrivals))
+        path = str(tmp_path / "svc.db")
+        svc = SchedulerService(cluster, policy="sjf-bco", store_path=path)
+        _submit_all(svc, jobs[:10], arrivals[:10])
+        for _ in range(3):
+            svc.step()
+        svc.close()                          # process dies mid-stream
+        rec = SchedulerService.recover(cluster, path, policy="sjf-bco")
+        assert len(rec.daemon.jobs) == 10
+        for j, a in list(zip(jobs, arrivals))[10:]:
+            rec.submit(SubmitRequest(j, int(a)))
+        sched, sim = rec.drain()
+        rec.close()
+        assert _same_schedule(ref, sched)
+        assert sim.completed == len(jobs)
+
+    def test_recovered_clocks_bit_identical(self):
+        """Replay re-commits the exact journaled floats in order, so the
+        recovered busy-time clocks equal the live daemon's bitwise."""
+        cluster = philly_cluster(8, seed=1)
+        jobs = _jobs(12)
+        arrivals = _arrivals(len(jobs))
+        svc = SchedulerService(cluster, policy="sjf-bco")
+        _submit_all(svc, jobs, arrivals)
+        while svc.step():
+            pass
+        live = svc.daemon
+        recovered = Daemon.recover(cluster, live.store.prefix(
+            len(live.store)), QueueManager(TenantConfig("sjf-bco")))
+        assert np.array_equal(live.state.U, recovered.state.U)
+        assert np.array_equal(live.state.R, recovered.state.R)
+        assert live.state.est_finish == recovered.state.est_finish
+
+    def test_recovery_preserves_cancellations_and_tenants(self):
+        cluster = philly_cluster(6, seed=2)
+        jobs = _jobs(8)
+        svc = SchedulerService(
+            cluster, tenants={"t2": TenantConfig(policy="ff")})
+        handles = [svc.submit(SubmitRequest(j, 50 + i,
+                                            "t2" if i % 2 else "default"))
+                   for i, j in enumerate(jobs)]
+        svc.cancel(handles[5])
+        snap = svc.daemon.store.prefix(len(svc.daemon.store))
+        rec = Daemon.recover(
+            cluster, snap,
+            QueueManager(TenantConfig("sjf-bco"),
+                         {"t2": TenantConfig(policy="ff")}))
+        assert rec.records[5].state is JobState.CANCELLED
+        assert rec.records[1].tenant == "t2"
+        full, _ = svc.drain()
+        again, _ = rec.drain()
+        assert _same_schedule(full, again)
