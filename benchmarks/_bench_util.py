@@ -1,0 +1,99 @@
+"""Shared plumbing for the repo's microbenchmark drivers.
+
+The three bench scripts (``bench_contention``, ``bench_simulator``,
+``bench_service``) report through one schema -- a top-level dict with
+``bench``/``quick`` keys plus per-section row lists -- written by
+:func:`write_report`, and build their inputs from the same scaled
+Philly-mix case (:func:`philly_case`).  Their ``--quick`` runs double as
+CI correctness smokes: every divergence check routes through
+:func:`check_identical` / :func:`check_same_sim`, which hard-assert (CI
+fails on the raise) instead of recording a boolean nobody reads.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import philly_cluster, philly_workload
+
+try:                                    # run as a module: -m benchmarks....
+    from benchmarks.common import mix_for
+except ImportError:                     # run as a script from benchmarks/
+    from common import mix_for
+
+__all__ = ["make_parser", "philly_case", "timed", "same_schedule",
+           "check_identical", "same_sim", "check_same_sim", "write_report"]
+
+
+def make_parser(doc: str, default_out: str) -> argparse.ArgumentParser:
+    """The shared CLI: ``--quick`` (CI smoke) and ``--out`` (JSON path)."""
+    ap = argparse.ArgumentParser(description=doc)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: small sizes + hard identity asserts")
+    ap.add_argument("--out", default=default_out)
+    return ap
+
+
+def philly_case(n_jobs: int, seed: int = 1, servers: int = 20):
+    """The standard benchmark case: a ``servers``-server Philly cluster
+    plus the §7 job mix scaled to ``n_jobs`` -> (cluster, jobs)."""
+    cluster = philly_cluster(servers, seed=seed)
+    jobs = philly_workload(seed=seed, mix=mix_for(n_jobs))
+    return cluster, jobs
+
+
+def timed(fn, repeats: int = 1):
+    """Run ``fn`` ``repeats`` times -> (last result, best wall seconds)."""
+    best, result = float("inf"), None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        result = fn()
+        best = min(best, time.perf_counter() - t0)
+    return result, best
+
+
+def same_schedule(a, b, check_theta: bool = False) -> bool:
+    """Bit-identity of two :class:`~repro.core.api.ScheduleResult`\\ s:
+    committed clocks and the assignment, GPU id for GPU id.
+    ``check_theta`` adds the (theta_u, kappa) the bisection landed on."""
+    if check_theta and not (a.theta == b.theta and a.kappa == b.kappa):
+        return False
+    return bool(np.array_equal(a.est_start, b.est_start)
+                and np.array_equal(a.est_finish, b.est_finish)
+                and a.est_makespan == b.est_makespan
+                and len(a.assignment) == len(b.assignment)
+                and all(ja == jb and np.array_equal(ga, gb)
+                        for (ja, ga), (jb, gb) in zip(a.assignment,
+                                                      b.assignment)))
+
+
+def check_identical(a, b, label: str, check_theta: bool = False) -> bool:
+    """Hard-assert schedule bit-identity (CI's ``--quick`` smoke relies
+    on the raise, not a report field); returns True for report rows."""
+    assert same_schedule(a, b, check_theta=check_theta), label
+    return True
+
+
+def same_sim(a, b) -> bool:
+    """Event-for-event identity of two :class:`~repro.core.SimResult`\\ s."""
+    return bool(a.events == b.events
+                and np.array_equal(a.start, b.start)
+                and np.array_equal(a.finish, b.finish)
+                and a.avg_jct == b.avg_jct
+                and a.busy_gpu_slots == b.busy_gpu_slots)
+
+
+def check_same_sim(a, b, label: str) -> bool:
+    """Hard-assert simulation identity; returns True for report rows."""
+    assert same_sim(a, b), label
+    return True
+
+
+def write_report(report: dict, out: str) -> None:
+    """Write the section-row report JSON and confirm the path."""
+    with open(out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(f"wrote {out}")

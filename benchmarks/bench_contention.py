@@ -24,7 +24,17 @@ Four measurements per job count |J| (16 / 64 / 256 by default):
      (the one-theta-at-a-time Alg. 1 oracle).  The final (theta, kappa,
      placements) are asserted identical -- CI's bench smoke fails on
      divergence.
-  4. *Kernel microbench*: ``evaluate_many`` on a [C, J, S] stack vs a
+  4. *Columnar placement*: SJF-BCO end-to-end with
+     ``params={"placement": "columnar"}`` (the whole sweep x bisect forest
+     advanced as one [branches, S] array program: vectorised argmin picks,
+     Eq. (16) pool checks and batched refined-rho re-checks) vs
+     ``"scalar"`` (the per-branch ``try_place`` walk -- the oracle and
+     the default, and the faster CPU path at bench scale).  The final
+     (theta, kappa, placements) are asserted identical -- CI's bench
+     smoke fails on divergence.  The full run adds |J| = 1024 to this
+     section plus a columnar-only |J| = 16384 point, the first recorded
+     schedule at that scale.
+  5. *Kernel microbench*: ``evaluate_many`` on a [C, J, S] stack vs a
      Python loop of C ``evaluate()`` calls over the same placements.
 
 Emits ``BENCH_contention.json`` -- part of the repo's perf trajectory --
@@ -37,26 +47,25 @@ Usage::
 """
 from __future__ import annotations
 
-import argparse
-import json
 import time
 
 import numpy as np
 
 from repro.core import (ScheduleRequest, eval_counts, evaluate,
-                        evaluate_many, get_policy, philly_cluster,
-                        philly_workload, reset_eval_counts, simulate)
+                        evaluate_many, get_policy, reset_eval_counts,
+                        simulate)
 try:                                    # run as a module: -m benchmarks....
-    from benchmarks.common import mix_for
+    from benchmarks._bench_util import (check_identical, make_parser,
+                                        philly_case, timed, write_report)
 except ImportError:                     # run as a script from benchmarks/
-    from common import mix_for
+    from _bench_util import (check_identical, make_parser, philly_case,
+                             timed, write_report)
 
 ENGINES = ("reference", "incremental", "batched")
 
 
 def bench_scheduler(n_jobs: int, seed: int = 1) -> dict:
-    cluster = philly_cluster(20, seed=seed)
-    jobs = philly_workload(seed=seed, mix=mix_for(n_jobs))
+    cluster, jobs = philly_case(n_jobs, seed)
     horizon = max(1200, 12 * n_jobs)
     row: dict = {"J": n_jobs, "engines": {}}
     schedules = {}
@@ -76,11 +85,13 @@ def bench_scheduler(n_jobs: int, seed: int = 1) -> dict:
         row["engines"][engine] = {
             "schedule_s": round(t_sched, 4),
             "simulate_s": round(t_sim, 4),
-            # The active sweep/bisect/stepping modes these counters were
-            # measured under (the request defaults); recorded per row so
-            # numbers stay comparable across PRs as defaults move.
+            # The active sweep/bisect/placement/stepping modes these
+            # counters were measured under (the request defaults);
+            # recorded per row so numbers stay comparable across PRs as
+            # defaults move.
             "sweep_mode": "batched",
             "bisect_mode": "speculative",
+            "placement_mode": "scalar",
             "sim_stepping": "multi" if engine != "reference" else "single",
             "est_makespan": sched.est_makespan,
             "sim_makespan": sim.makespan,
@@ -88,16 +99,12 @@ def bench_scheduler(n_jobs: int, seed: int = 1) -> dict:
         }
     ref = schedules["reference"]
     for engine in ENGINES[1:]:
-        other = schedules[engine]
-        same = (other.est_makespan == ref.est_makespan
-                and len(other.assignment) == len(ref.assignment)
-                and all(j1 == j2 and np.array_equal(g1, g2)
-                        for (j1, g1), (j2, g2)
-                        in zip(ref.assignment, other.assignment)))
         # Hard failure, not just a report field: CI's bench-smoke step
         # relies on this to catch engine divergence.
-        assert same, f"{engine} schedule diverged from reference at J={n_jobs}"
-        row["engines"][engine]["schedule_identical_to_reference"] = same
+        row["engines"][engine]["schedule_identical_to_reference"] = \
+            check_identical(
+                ref, schedules[engine],
+                f"{engine} schedule diverged from reference at J={n_jobs}")
     ref_e = row["engines"]["reference"]
     inc_e = row["engines"]["incremental"]
     # "Full-model evaluations": complete [J, S] passes.  The incremental
@@ -115,9 +122,10 @@ def bench_scheduler(n_jobs: int, seed: int = 1) -> dict:
 def bench_sweep(n_jobs: int, seed: int = 1) -> dict:
     """SJF-BCO end-to-end: batched (shared-prefix) vs sequential kappa
     sweep, both on the default incremental engine and both pinned to the
-    sequential bisection so only the sweep axis varies."""
-    cluster = philly_cluster(20, seed=seed)
-    jobs = philly_workload(seed=seed, mix=mix_for(n_jobs))
+    sequential bisection so only the sweep axis varies.  Both run the
+    default scalar placement walk (the columnar axis has its own
+    section, :func:`bench_placement`)."""
+    cluster, jobs = philly_case(n_jobs, seed)
     horizon = max(1200, 12 * n_jobs)
     row: dict = {"J": n_jobs, "bisect_mode": "sequential", "modes": {}}
     schedules = {}
@@ -137,20 +145,16 @@ def bench_sweep(n_jobs: int, seed: int = 1) -> dict:
             "schedule_s": round(t_sched, 4),
             "simulate_s": round(t_sim, 4),
             "end_to_end_s": round(t_sched + t_sim, 4),
+            "placement_mode": "scalar",
             "est_makespan": sched.est_makespan,
             "sim_makespan": sim.makespan,
         }
-    ref, bat = schedules["sequential"], schedules["batched"]
-    same = (bat.est_makespan == ref.est_makespan
-            and bat.kappa == ref.kappa
-            and len(bat.assignment) == len(ref.assignment)
-            and all(j1 == j2 and np.array_equal(g1, g2)
-                    for (j1, g1), (j2, g2)
-                    in zip(ref.assignment, bat.assignment)))
     # Hard failure, not just a report field: CI's bench-smoke step relies
     # on this to catch batched-sweep divergence.
-    assert same, f"batched sweep diverged from sequential at J={n_jobs}"
-    row["batched_identical_to_sequential"] = same
+    row["batched_identical_to_sequential"] = check_identical(
+        schedules["sequential"], schedules["batched"],
+        f"batched sweep diverged from sequential at J={n_jobs}",
+        check_theta=True)
     row["end_to_end_speedup"] = round(
         row["modes"]["sequential"]["end_to_end_s"]
         / max(1e-9, row["modes"]["batched"]["end_to_end_s"]), 2)
@@ -159,11 +163,12 @@ def bench_sweep(n_jobs: int, seed: int = 1) -> dict:
 
 def bench_bisect(n_jobs: int, seed: int = 1) -> dict:
     """SJF-BCO end-to-end: speculative vs sequential theta bisection,
-    both on the default incremental engine and batched kappa sweep."""
-    cluster = philly_cluster(20, seed=seed)
-    jobs = philly_workload(seed=seed, mix=mix_for(n_jobs))
+    both on the default incremental engine, batched kappa sweep and
+    scalar placement."""
+    cluster, jobs = philly_case(n_jobs, seed)
     horizon = max(1200, 12 * n_jobs)
-    row: dict = {"J": n_jobs, "sweep_mode": "batched", "modes": {}}
+    row: dict = {"J": n_jobs, "sweep_mode": "batched",
+                 "placement_mode": "scalar", "modes": {}}
     schedules = {}
     for bisect_mode in ("sequential", "speculative"):
         request = ScheduleRequest(cluster=cluster, jobs=jobs,
@@ -185,22 +190,68 @@ def bench_bisect(n_jobs: int, seed: int = 1) -> dict:
             "est_makespan": sched.est_makespan,
             "sim_makespan": sim.makespan,
         }
-    ref, spec = schedules["sequential"], schedules["speculative"]
-    same = (spec.theta == ref.theta
-            and spec.kappa == ref.kappa
-            and spec.est_makespan == ref.est_makespan
-            and len(spec.assignment) == len(ref.assignment)
-            and all(j1 == j2 and np.array_equal(g1, g2)
-                    for (j1, g1), (j2, g2)
-                    in zip(ref.assignment, spec.assignment)))
     # Hard failure, not just a report field: CI's bench-smoke step relies
     # on this to catch speculative-bisection divergence from the oracle.
-    assert same, \
-        f"speculative bisection diverged from sequential at J={n_jobs}"
-    row["speculative_identical_to_sequential"] = same
+    row["speculative_identical_to_sequential"] = check_identical(
+        schedules["sequential"], schedules["speculative"],
+        f"speculative bisection diverged from sequential at J={n_jobs}",
+        check_theta=True)
     row["end_to_end_speedup"] = round(
         row["modes"]["sequential"]["end_to_end_s"]
         / max(1e-9, row["modes"]["speculative"]["end_to_end_s"]), 2)
+    return row
+
+
+def bench_placement(n_jobs: int, seed: int = 1,
+                    columnar_only: bool = False) -> dict:
+    """SJF-BCO end-to-end: columnar branch-vectorised placement (the
+    whole sweep x bisect forest as one [branches, S] array program) vs
+    the default scalar per-branch walk, identical modes otherwise
+    (incremental engine, batched sweep, speculative bisection; each
+    placement runs its own ladder defaults -- see ``bisect_levels``).
+    Schedules are asserted bit-identical.  Note the scalar walk is the
+    faster CPU path at these sizes (its copy-on-write lineages already
+    share placement work between branches, with none of the per-step
+    vectorisation overhead); the columnar rows track the cost of the
+    strictly-array engine that trace-scale and accelerator work build
+    on, so the gap is the number to watch across PRs.
+
+    ``columnar_only`` skips the scalar oracle -- used for the
+    |J| = 16384 point, the first recorded schedule at that scale."""
+    cluster, jobs = philly_case(n_jobs, seed)
+    horizon = max(1200, 12 * n_jobs)
+    row: dict = {"J": n_jobs, "sweep_mode": "batched",
+                 "bisect_mode": "speculative", "modes": {}}
+    schedules = {}
+    modes = ("columnar",) if columnar_only else ("scalar", "columnar")
+    for placement in modes:
+        request = ScheduleRequest(cluster=cluster, jobs=jobs,
+                                  horizon=horizon,
+                                  params={"placement": placement})
+        sched, t_sched = timed(lambda req=request:
+                               get_policy("sjf-bco")(req))
+        sim, t_sim = timed(lambda a=sched.assignment:
+                           simulate(cluster, jobs, a))
+        schedules[placement] = sched
+        row["modes"][placement] = {
+            "schedule_s": round(t_sched, 4),
+            "simulate_s": round(t_sim, 4),
+            "end_to_end_s": round(t_sched + t_sim, 4),
+            "theta": sched.theta,
+            "kappa": sched.kappa,
+            "est_makespan": sched.est_makespan,
+            "sim_makespan": sim.makespan,
+        }
+    if not columnar_only:
+        # Hard failure, not just a report field: CI's bench-smoke step
+        # relies on this to catch columnar-placement divergence.
+        row["columnar_identical_to_scalar"] = check_identical(
+            schedules["scalar"], schedules["columnar"],
+            f"columnar placement diverged from scalar at J={n_jobs}",
+            check_theta=True)
+        row["schedule_speedup"] = round(
+            row["modes"]["scalar"]["schedule_s"]
+            / max(1e-9, row["modes"]["columnar"]["schedule_s"]), 2)
     return row
 
 
@@ -208,8 +259,7 @@ def bench_evaluate_many(n_jobs: int, n_cands: int = 64, seed: int = 0,
                         repeats: int = 5) -> dict:
     """evaluate_many on [C, J, S] vs a loop of C evaluate() calls."""
     rng = np.random.default_rng(seed)
-    cluster = philly_cluster(20, seed=seed)
-    jobs = philly_workload(seed=seed, mix=mix_for(n_jobs))
+    cluster, jobs = philly_case(n_jobs, seed)
     S = cluster.num_servers
     stack = np.zeros((n_cands, len(jobs), S), dtype=np.int64)
     for c in range(n_cands):
@@ -234,17 +284,13 @@ def bench_evaluate_many(n_jobs: int, n_cands: int = 64, seed: int = 0,
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--quick", action="store_true",
-                    help="CI smoke: small sizes only")
-    ap.add_argument("--out", default="BENCH_contention.json")
-    args = ap.parse_args()
+    args = make_parser(__doc__, "BENCH_contention.json").parse_args()
 
     sizes = [16, 64] if args.quick else [16, 64, 256]
     report = {"bench": "contention-engine",
               "quick": args.quick,
               "scheduler": [], "sweep": [], "bisect": [],
-              "evaluate_many": []}
+              "placement": [], "evaluate_many": []}
     for n in sizes:
         row = bench_scheduler(n)
         report["scheduler"].append(row)
@@ -270,15 +316,29 @@ def main() -> None:
               f"  speculative {row['modes']['speculative']['end_to_end_s']:.2f}s"
               f"  x{row['end_to_end_speedup']:.2f}"
               f"  identical={row['speculative_identical_to_sequential']}")
+    # Columnar-vs-scalar identity is part of the --quick CI smoke too
+    # (hard assert inside bench_placement).
+    for n in (sizes if args.quick else [256, 1024]):
+        row = bench_placement(n)
+        report["placement"].append(row)
+        print(f"placement |J|={n:5d}: scalar "
+              f"{row['modes']['scalar']['schedule_s']:.2f}s"
+              f"  columnar {row['modes']['columnar']['schedule_s']:.2f}s"
+              f"  x{row['schedule_speedup']:.2f}"
+              f"  identical={row['columnar_identical_to_scalar']}")
+    if not args.quick:
+        row = bench_placement(16384, columnar_only=True)
+        report["placement"].append(row)
+        print(f"placement |J|=16384: columnar "
+              f"{row['modes']['columnar']['schedule_s']:.2f}s"
+              f"  (columnar-only point: tracks the array engine at scale)")
     for n in sizes:
         row = bench_evaluate_many(n, n_cands=16 if args.quick else 64)
         report["evaluate_many"].append(row)
         print(f"evaluate_many |J|={n:4d} C={row['C']}: loop {row['loop_s']}s"
               f" batched {row['batched_s']}s  x{row['speedup']:.1f}")
 
-    with open(args.out, "w") as fh:
-        json.dump(report, fh, indent=2)
-    print(f"wrote {args.out}")
+    write_report(report, args.out)
 
 
 if __name__ == "__main__":

@@ -6,7 +6,10 @@ and reports scheduling throughput (decisions/sec over the chooser calls)
 plus p50/p99 per-decision latency, the numbers an operator would watch on
 a live daemon.  A second section prices journal durability: the same
 trace against the in-memory store vs the stdlib-sqlite write-ahead store
-(appends/sec and the end-to-end slowdown).
+(appends/sec and the end-to-end slowdown).  A third section prices the
+``feedback="actual"`` repricing loop (completions pulled back into the
+placement clocks via ``observe_finish``) against the default
+``"estimate"`` mode on the same trace.
 
 ``--quick`` doubles as CI's correctness smoke with hard asserts, not
 report fields:
@@ -23,31 +26,30 @@ Usage::
 """
 from __future__ import annotations
 
-import argparse
-import json
 import os
 import tempfile
 import time
 
 import numpy as np
 
-from repro.core import ScheduleRequest, get_policy, philly_cluster, \
-    philly_workload
+from repro.core import ScheduleRequest, get_policy
 from repro.service import (Daemon, QueueManager, SchedulerService,
                            SubmitRequest, TenantConfig)
 
 try:                                    # run as a module: -m benchmarks....
-    from benchmarks.common import mix_for
+    from benchmarks._bench_util import (make_parser, philly_case,
+                                        same_schedule, write_report)
 except ImportError:                     # run as a script from benchmarks/
-    from common import mix_for
+    from _bench_util import (make_parser, philly_case, same_schedule,
+                             write_report)
 
 HORIZON = 10**6                         # open-ended stream: budget = horizon
 
 
 def _trace(n_jobs: int, traffic: str, seed: int):
     """A |J|-job Philly-mix submission trace under the given traffic."""
-    cluster = philly_cluster(max(20, n_jobs // 16), seed=seed)
-    jobs = philly_workload(seed=seed, mix=mix_for(n_jobs))
+    cluster, jobs = philly_case(n_jobs, seed=seed,
+                                servers=max(20, n_jobs // 16))
     rng = np.random.default_rng(seed)
     if traffic == "poisson":
         arrivals = np.floor(np.cumsum(
@@ -61,31 +63,23 @@ def _trace(n_jobs: int, traffic: str, seed: int):
     return cluster, jobs, arrivals
 
 
-def _same_schedule(a, b) -> bool:
-    return bool(np.array_equal(a.est_start, b.est_start)
-                and np.array_equal(a.est_finish, b.est_finish)
-                and len(a.assignment) == len(b.assignment)
-                and all(ja == jb and np.array_equal(ga, gb)
-                        for (ja, ga), (jb, gb) in zip(a.assignment,
-                                                      b.assignment)))
-
-
 def _drive(cluster, jobs, arrivals, **svc_kwargs):
-    """Submit the whole trace, drain, return (service, schedule, wall)."""
+    """Submit the whole trace, drain; returns (service, schedule, sim,
+    wall seconds)."""
     svc = SchedulerService(cluster, policy="sjf-bco", horizon=HORIZON,
                            **svc_kwargs)
     t0 = time.perf_counter()
     for job, arrival in zip(jobs, arrivals):
         svc.submit(SubmitRequest(job, int(arrival)))
-    schedule, _ = svc.drain()
+    schedule, sim = svc.drain()
     wall = time.perf_counter() - t0
-    return svc, schedule, wall
+    return svc, schedule, sim, wall
 
 
 def bench_traffic(n_jobs: int, traffic: str, seed: int = 1) -> dict:
     """Throughput + decision-latency percentiles for one traffic shape."""
     cluster, jobs, arrivals = _trace(n_jobs, traffic, seed)
-    svc, schedule, wall = _drive(cluster, jobs, arrivals)
+    svc, schedule, _, wall = _drive(cluster, jobs, arrivals)
     lat = np.asarray(svc.daemon.decision_latencies)
     placed = len(schedule.assignment)
     return {
@@ -104,14 +98,14 @@ def bench_traffic(n_jobs: int, traffic: str, seed: int = 1) -> dict:
 def bench_stores(n_jobs: int, seed: int = 1) -> dict:
     """Journal-durability cost: in-memory vs sqlite write-ahead store."""
     cluster, jobs, arrivals = _trace(n_jobs, "poisson", seed)
-    _, mem_sched, mem_wall = _drive(cluster, jobs, arrivals)
+    _, mem_sched, _, mem_wall = _drive(cluster, jobs, arrivals)
     with tempfile.TemporaryDirectory() as td:
         path = os.path.join(td, "journal.db")
-        svc, sq_sched, sq_wall = _drive(cluster, jobs, arrivals,
-                                        store_path=path)
+        svc, sq_sched, _, sq_wall = _drive(cluster, jobs, arrivals,
+                                           store_path=path)
         entries = len(svc.daemon.store)
         svc.close()
-    assert _same_schedule(mem_sched, sq_sched), \
+    assert same_schedule(mem_sched, sq_sched), \
         "sqlite-backed daemon diverged from the in-memory one"
     return {
         "J": n_jobs,
@@ -123,14 +117,57 @@ def bench_stores(n_jobs: int, seed: int = 1) -> dict:
     }
 
 
+def bench_feedback(n_jobs: int, seed: int = 1) -> dict:
+    """Price the ``feedback="actual"`` repricing loop vs ``"estimate"``.
+
+    Both modes drain the same Poisson trace.  ``"actual"`` runs the
+    monitor every round and pulls each observed completion back into the
+    placement clocks (:meth:`PlacementState.observe_finish`), so later
+    decisions see real finishes instead of pessimistic estimates -- the
+    row records what that buys (placements moved, estimate error) and
+    what it costs (wall slowdown)."""
+    cluster, jobs, arrivals = _trace(n_jobs, "poisson", seed)
+    out = {}
+    for mode in ("estimate", "actual"):
+        svc, schedule, sim, wall = _drive(cluster, jobs, arrivals,
+                                          feedback=mode)
+        placed = len(schedule.assignment)
+        # Drained runs must place and complete every submitted job.
+        assert placed == len(jobs), (mode, placed, len(jobs))
+        assert int((sim.finish >= 0).sum()) == len(jobs), \
+            f"{mode}: not all jobs completed in simulation"
+        out[mode] = {"schedule": schedule, "sim": sim, "wall": wall,
+                     "rounds": svc.daemon.rounds}
+    est, act = out["estimate"], out["actual"]
+    gpus = {mode: dict(out[mode]["schedule"].assignment)
+            for mode in ("estimate", "actual")}
+    moved = sum(1 for jid in gpus["estimate"]
+                if not np.array_equal(gpus["estimate"][jid],
+                                      gpus["actual"][jid]))
+    row = {"J": n_jobs}
+    for mode in ("estimate", "actual"):
+        sim = out[mode]["sim"]
+        row[mode] = {
+            "wall_s": round(out[mode]["wall"], 4),
+            "rounds": out[mode]["rounds"],
+            "est_makespan": out[mode]["schedule"].est_makespan,
+            "sim_makespan": float(sim.finish.max()),
+            "avg_jct": sim.avg_jct,
+        }
+    row["placements_moved_by_feedback"] = moved
+    row["feedback_overhead"] = round(
+        act["wall"] / max(1e-9, est["wall"]), 2)
+    return row
+
+
 def smoke_identity(n_jobs: int, seed: int = 1) -> dict:
     """--quick hard asserts: daemon == schedule_arrivals, also across a
     simulated crash/recovery."""
     cluster, jobs, arrivals = _trace(n_jobs, "poisson", seed)
     ref = get_policy("sjf-bco")(ScheduleRequest(
         cluster, list(jobs), arrivals=arrivals, horizon=HORIZON))
-    svc, schedule, _ = _drive(cluster, jobs, arrivals)
-    assert _same_schedule(ref, schedule), \
+    svc, schedule, _, _ = _drive(cluster, jobs, arrivals)
+    assert same_schedule(ref, schedule), \
         "daemon path diverged from schedule_arrivals"
 
     # crash: truncate the journal to ~60% and recover by replay
@@ -143,7 +180,7 @@ def smoke_identity(n_jobs: int, seed: int = 1) -> dict:
     for job, arrival in list(zip(jobs, arrivals))[len(daemon.jobs):]:
         daemon.admit(job, int(arrival))
     recovered, _ = daemon.drain()
-    assert _same_schedule(ref, recovered), \
+    assert same_schedule(ref, recovered), \
         "recovered daemon diverged from schedule_arrivals"
     return {"J": n_jobs, "journal_entries": len(store),
             "replayed_entries": replayed,
@@ -152,15 +189,11 @@ def smoke_identity(n_jobs: int, seed: int = 1) -> dict:
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--quick", action="store_true",
-                    help="CI smoke: small sizes + identity asserts")
-    ap.add_argument("--out", default="BENCH_service.json")
-    args = ap.parse_args()
+    args = make_parser(__doc__, "BENCH_service.json").parse_args()
 
     sizes = [64, 256] if args.quick else [256, 1024, 4096]
     report = {"bench": "service-throughput", "quick": args.quick,
-              "traffic": [], "stores": [], "identity": []}
+              "traffic": [], "stores": [], "feedback": [], "identity": []}
     for n in sizes:
         for traffic in ("poisson", "burst"):
             row = bench_traffic(n, traffic)
@@ -177,15 +210,20 @@ def main() -> None:
               f"  sqlite {row['sqlite_wall_s']:.3f}s"
               f"  ({row['sqlite_appends_per_sec']:.0f} appends/s,"
               f" x{row['durability_overhead']:.2f})")
+    for n in store_sizes:
+        row = bench_feedback(n)
+        report["feedback"].append(row)
+        print(f"feedback |J|={n:5d}  estimate {row['estimate']['wall_s']:.3f}s"
+              f"  actual {row['actual']['wall_s']:.3f}s"
+              f"  (x{row['feedback_overhead']:.2f},"
+              f" {row['placements_moved_by_feedback']} placements moved)")
     row = smoke_identity(sizes[0])
     report["identity"].append(row)
     print(f"identity |J|={row['J']}  one-shot: ok   after recovery of"
           f" {row['replayed_entries']}/{row['journal_entries']}"
           f" journal entries: ok")
 
-    with open(args.out, "w") as fh:
-        json.dump(report, fh, indent=2)
-    print(f"wrote {args.out}")
+    write_report(report, args.out)
 
 
 if __name__ == "__main__":

@@ -28,23 +28,20 @@ Usage::
 """
 from __future__ import annotations
 
-import argparse
-import json
-import time
-
 import numpy as np
 
-from repro.core import philly_cluster, philly_workload, simulate
+from repro.core import simulate
 
 try:                                    # run as a module: -m benchmarks....
-    from benchmarks.common import mix_for
+    from benchmarks._bench_util import (check_same_sim, make_parser,
+                                        philly_case, timed, write_report)
 except ImportError:                     # run as a script from benchmarks/
-    from common import mix_for
+    from _bench_util import (check_same_sim, make_parser, philly_case,
+                             timed, write_report)
 
 
 def _case_inputs(n_jobs: int, seed: int):
-    cluster = philly_cluster(20, seed=seed)
-    jobs = philly_workload(seed=seed, mix=mix_for(n_jobs))
+    cluster, jobs = philly_case(n_jobs, seed)
     rng = np.random.default_rng(seed)
     assignment = [(j.jid, np.sort(rng.choice(cluster.num_gpus,
                                              size=j.num_gpus, replace=False)))
@@ -54,32 +51,22 @@ def _case_inputs(n_jobs: int, seed: int):
     return cluster, jobs, assignment, arrivals
 
 
-def _sims_equal(a, b) -> bool:
-    return bool(a.events == b.events
-                and np.array_equal(a.start, b.start)
-                and np.array_equal(a.finish, b.finish)
-                and a.avg_jct == b.avg_jct
-                and a.busy_gpu_slots == b.busy_gpu_slots)
-
-
 def bench_simulate(n_jobs: int, seed: int = 1, repeats: int = 5) -> dict:
     cluster, jobs, assignment, arrivals = _case_inputs(n_jobs, seed)
     row: dict = {"J": n_jobs, "cases": {}}
     for case, arr in (("batch", None), ("online", arrivals)):
         sims, times = {}, {}
         for readiness in ("tracked", "rescan"):
-            best = float("inf")
-            for _ in range(repeats):
-                t0 = time.perf_counter()
-                sim = simulate(cluster, jobs, assignment, arrivals=arr,
-                               readiness=readiness)
-                best = min(best, time.perf_counter() - t0)
-            sims[readiness], times[readiness] = sim, best
-        a, b = sims["tracked"], sims["rescan"]
+            sims[readiness], times[readiness] = timed(
+                lambda r=readiness: simulate(cluster, jobs, assignment,
+                                             arrivals=arr, readiness=r),
+                repeats=repeats)
+        a = sims["tracked"]
         # Hard failure, not just a report field: CI's bench-smoke step
         # relies on this to catch readiness-tracking divergence.
-        same = _sims_equal(a, b)
-        assert same, f"tracked readiness diverged from rescan at J={n_jobs}"
+        same = check_same_sim(
+            a, sims["rescan"],
+            f"tracked readiness diverged from rescan at J={n_jobs}")
         row["cases"][case] = {
             "tracked_s": round(times["tracked"], 4),
             "rescan_s": round(times["rescan"], 4),
@@ -100,19 +87,16 @@ def bench_stepping(n_jobs: int, seed: int = 1, repeats: int = 5) -> dict:
     for case, arr in (("batch", None), ("online", arrivals)):
         sims, times = {}, {}
         for stepping in ("multi", "single"):
-            best = float("inf")
-            for _ in range(repeats):
-                t0 = time.perf_counter()
-                sim = simulate(cluster, jobs, assignment, arrivals=arr,
-                               stepping=stepping)
-                best = min(best, time.perf_counter() - t0)
-            sims[stepping], times[stepping] = sim, best
-        a, b = sims["multi"], sims["single"]
+            sims[stepping], times[stepping] = timed(
+                lambda s=stepping: simulate(cluster, jobs, assignment,
+                                            arrivals=arr, stepping=s),
+                repeats=repeats)
+        a = sims["multi"]
         # Hard failure, not just a report field: CI's bench-smoke step
         # relies on this to catch multi-window stepping divergence.
-        same = _sims_equal(a, b)
-        assert same, \
-            f"multi-window stepping diverged from single at J={n_jobs}"
+        same = check_same_sim(
+            a, sims["single"],
+            f"multi-window stepping diverged from single at J={n_jobs}")
         row["cases"][case] = {
             "multi_s": round(times["multi"], 4),
             "single_s": round(times["single"], 4),
@@ -125,11 +109,7 @@ def bench_stepping(n_jobs: int, seed: int = 1, repeats: int = 5) -> dict:
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--quick", action="store_true",
-                    help="CI smoke: small sizes only")
-    ap.add_argument("--out", default="BENCH_simulator.json")
-    args = ap.parse_args()
+    args = make_parser(__doc__, "BENCH_simulator.json").parse_args()
 
     sizes = [64, 256] if args.quick else [256, 1024]
     report = {"bench": "simulator-readiness", "quick": args.quick,
@@ -149,9 +129,7 @@ def main() -> None:
                   f"  multi {r['multi_s']:.3f}s  x{r['speedup']:.2f}"
                   f"  identical={r['identical_to_single']}")
 
-    with open(args.out, "w") as fh:
-        json.dump(report, fh, indent=2)
-    print(f"wrote {args.out}")
+    write_report(report, args.out)
 
 
 if __name__ == "__main__":

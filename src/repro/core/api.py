@@ -266,6 +266,39 @@ def list_choosers() -> list[str]:
 
 
 # --------------------------------------------------------------------------
+# Placement-engine axis
+# --------------------------------------------------------------------------
+
+# How the bisection policies advance their (theta, kappa) attempt forest:
+# "columnar" (default) runs the whole forest as one branch-vectorised
+# array program over deduplicated state rows
+# (:class:`repro.core.columnar.ColumnarPlacement`); "scalar" walks one
+# :class:`PlacementState` per branch (with the COW lineage sharing of
+# ``try_place_group``) and is the bit-identity oracle.  Same selectable
+# -oracle pattern as the ``engine``/``sweep``/``bisect`` axes.
+PLACEMENTS = ("scalar", "columnar")
+
+
+def resolve_placement(params: dict) -> str:
+    """The request's ``placement`` param, validated (default "scalar").
+
+    "scalar" is the per-branch ``PlacementState`` walk -- the bit-identity
+    oracle and, on CPU at bench scale, the faster end-to-end path (its
+    copy-on-write lineages already share ~all placement work between
+    probe branches, and it pays no per-step vectorisation overhead).
+    "columnar" advances the whole sweep x bisect forest as one
+    [branches, S] array program (:class:`ColumnarPlacement`) -- identical
+    decisions, strictly-array state; it is the substrate for trace-scale
+    runs and accelerator offload (see docs/ARCHITECTURE.md).
+    """
+    placement = params.get("placement", "scalar")
+    if placement not in PLACEMENTS:
+        raise ValueError(f"unknown placement {placement!r}; "
+                         f"choose from {PLACEMENTS}")
+    return placement
+
+
+# --------------------------------------------------------------------------
 # Estimates (Table 1 / §5.1)
 # --------------------------------------------------------------------------
 
@@ -790,7 +823,8 @@ def bisect_theta(attempt: Callable[..., "ScheduleResult | None"],
                  horizon: int, policy: str,
                  warm_start: bool = False,
                  attempt_many: "Callable[[list[float]], dict[float, ScheduleResult | None]] | None" = None,
-                 levels: int = 3, floor: float = -np.inf) -> ScheduleResult:
+                 levels: int = 3, floor: float = -np.inf,
+                 prune: bool = True) -> ScheduleResult:
     """Algorithm 1's outer loop: bisection on the busy-time budget theta_u.
 
     ``attempt(theta)`` returns the best schedule feasible under that
@@ -814,6 +848,15 @@ def bisect_theta(attempt: Callable[..., "ScheduleResult | None"],
     i.e. infeasible, probe).  Unconsumed probe results are discarded, so
     the final schedule -- best feasible theta, its kappa, its placements
     -- is bit-identical to the sequential oracle's.
+
+    ``prune=True`` (the default) additionally drops ladder entries in the
+    bottom quarter of the bracket -- the right trade when every extra
+    probe walks its own per-branch placement lineage.  Engines whose
+    marginal branch cost is near zero (the columnar placement program,
+    where an extra theta is one more row of the same array ops) pass
+    ``prune=False`` to keep the whole ladder and commit several bisection
+    decisions per round.  Pruning never changes the result, only how
+    many rounds the bisection needs.
     """
     best: ScheduleResult | None = None
     prev: ScheduleResult | None = None
@@ -837,7 +880,8 @@ def bisect_theta(attempt: Callable[..., "ScheduleResult | None"],
                 # expensive attempts.  Pruning never changes the result:
                 # a pruned theta the walk does need is simply evaluated
                 # as the next round's bracket midpoint.
-                cut = max(floor, left + (right - left) / 4.0)
+                cut = max(floor, left + (right - left) / 4.0) if prune \
+                    else floor
                 todo = [th for th in probe_thetas(left, right, levels, cut)
                         if th not in results]
                 results.update(attempt_many(todo))
@@ -919,11 +963,17 @@ def pick_best_finish(state: PlacementState, job: Job, pickers: list[Picker],
     return True
 
 
+# Re-exported here so the columnar engine is reachable from the one
+# scheduling surface (placed after ScheduleResult: columnar.py imports it
+# lazily for result construction).
+from repro.core.columnar import ColumnarPlacement  # noqa: E402
+
 __all__ = [
     "ScheduleRequest", "ScheduleResult", "SchedulingPolicy",
     "register_policy", "get_policy", "list_policies",
     "register_chooser", "get_chooser", "list_choosers", "ChooserFactory",
     "PlacementState", "Picker", "Chooser", "SharedState",
+    "ColumnarPlacement", "PLACEMENTS", "resolve_placement",
     "try_place", "try_place_group", "finalize", "bisect_theta",
     "probe_thetas", "schedule_arrivals",
     "pick_best_finish", "nominal_rho", "rho_hat",

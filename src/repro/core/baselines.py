@@ -26,8 +26,9 @@ import numpy as np
 from repro.core.api import (Chooser, PlacementState, Picker, ScheduleRequest,
                             ScheduleResult, SharedState, bisect_theta,
                             finalize, nominal_rho, register_chooser,
-                            register_policy, schedule_arrivals, try_place,
-                            try_place_group)
+                            register_policy, resolve_placement,
+                            schedule_arrivals, try_place, try_place_group)
+from repro.core.columnar import ColumnarPlacement
 from repro.core.jobs import Job
 
 __all__ = ["first_fit_policy", "list_scheduling_policy", "random_policy_policy",
@@ -52,10 +53,36 @@ def _ls_pick(state: PlacementState, job: Job, rho_nom: float, u: float,
     return order[: job.num_gpus]
 
 
+def _ff_pick_many(cluster, U: np.ndarray, feasible: np.ndarray,
+                  job: Job) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorised :func:`_ff_pick` over a batch of branch rows: per row,
+    the first G_j feasible GPUs in id order.  A stable argsort of the
+    negated mask lists feasible ids first, in id order -- exactly the
+    scalar ``np.flatnonzero`` prefix."""
+    ok = feasible.sum(axis=1) >= job.num_gpus
+    gpus = np.argsort(~feasible, axis=1, kind="stable")[:, :job.num_gpus]
+    return gpus, ok
+
+
+def _ls_pick_many(cluster, U: np.ndarray, feasible: np.ndarray,
+                  job: Job) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorised :func:`_ls_pick` over a batch of branch rows: per row,
+    the G_j least-loaded feasible GPUs.  The stable argsort over
+    inf-masked clocks orders ties by GPU id, exactly like the scalar
+    subarray sort (pool members keep their relative index order)."""
+    ok = feasible.sum(axis=1) >= job.num_gpus
+    gpus = np.argsort(np.where(feasible, U, np.inf), axis=1,
+                      kind="stable")[:, :job.num_gpus]
+    return gpus, ok
+
+
 # theta enters both pickers only through the U + rho/u <= theta + 1e-9
-# pool, so the speculative bisection may advance theta groups in lockstep.
+# pool, so the speculative bisection may advance theta groups in lockstep
+# and the columnar engine may batch whole branch stacks per pick.
 _ff_pick.theta_pool = True
 _ls_pick.theta_pool = True
+_ff_pick.pick_many = _ff_pick_many
+_ls_pick.pick_many = _ls_pick_many
 
 
 def _picker_chooser(picker: Picker, cluster, u: float) -> Chooser:
@@ -82,11 +109,38 @@ def ls_chooser(cluster, u: float, params: dict) -> Chooser:
     return _picker_chooser(_ls_pick, cluster, u)
 
 
+def _columnar_attempts(cluster, jobs: list[Job], rho_noms: dict[int, float],
+                       u: float, thetas: list[float], picker: Picker,
+                       engine: str | None, name: str
+                       ) -> "dict[float, ScheduleResult | None]":
+    """All theta attempts of one picker as a single columnar program.
+
+    One branch per theta of a :class:`ColumnarPlacement`; the whole
+    ladder advances a job per :meth:`place` call, sharing (and
+    re-merging) state rows wherever the budgets pick the same GPUs.
+    Decision-for-decision identical to the scalar try_place loop per
+    theta, hence bit-identical schedules."""
+    ths = sorted(float(th) for th in thetas)
+    col = ColumnarPlacement(cluster, ths, jobs, u, engine=engine)
+    for job in jobs:                       # request order (no SJF sort)
+        col.place(job, rho_noms[job.jid], (picker,), 0)
+        if not col.alive.any():
+            break
+    return {th: col.result(b, th, None, name) for b, th in enumerate(ths)}
+
+
 def _picker_policy(request: ScheduleRequest, picker: Picker, name: str
                    ) -> ScheduleResult:
-    """Shared FF/LS skeleton: online epoch loop or batch theta bisection."""
+    """Shared FF/LS skeleton: online epoch loop or batch theta bisection.
+
+    Honours the ``engine``/``bisect``/``warm_start``/``placement`` params
+    exactly as ``sjf-bco`` does (``placement="scalar"``, the default, is
+    the per-branch oracle walk and the fallback under ``warm_start``;
+    ``"columnar"`` batches each attempt's theta ladder as one
+    :class:`~repro.core.columnar.ColumnarPlacement` program)."""
     cluster, u = request.cluster, request.u
     engine = request.params.get("engine")
+    placement = resolve_placement(request.params)
 
     if not request.is_batch:
         return schedule_arrivals(
@@ -96,8 +150,18 @@ def _picker_policy(request: ScheduleRequest, picker: Picker, name: str
 
     jobs = request.jobs
 
+    bisect_mode = request.params.get("bisect", "speculative")
+    if bisect_mode not in ("speculative", "sequential"):
+        raise ValueError(f"unknown bisect mode {bisect_mode!r}; "
+                         "choose 'speculative' or 'sequential'")
+    warm = bool(request.params.get("warm_start"))
+    use_columnar = placement == "columnar" and not warm
+
     def attempt(theta: float,
                 prev: ScheduleResult | None = None) -> ScheduleResult | None:
+        if use_columnar:
+            return _columnar_attempts(cluster, jobs, rho_noms, u, [theta],
+                                      picker, engine, name)[float(theta)]
         hints = dict(prev.assignment) if prev is not None else {}
         state = PlacementState(cluster, engine=engine)
         for job in jobs:
@@ -106,15 +170,13 @@ def _picker_policy(request: ScheduleRequest, picker: Picker, name: str
                 return None
         return finalize(state, len(jobs), theta, None, name)
 
-    bisect_mode = request.params.get("bisect", "speculative")
-    if bisect_mode not in ("speculative", "sequential"):
-        raise ValueError(f"unknown bisect mode {bisect_mode!r}; "
-                         "choose 'speculative' or 'sequential'")
-    warm = bool(request.params.get("warm_start"))
     attempt_many = None
     if bisect_mode == "speculative" and not warm:
         def attempt_many(thetas: list[float]
                          ) -> "dict[float, ScheduleResult | None]":
+            if use_columnar:
+                return _columnar_attempts(cluster, jobs, rho_noms, u,
+                                          thetas, picker, engine, name)
             # One shared state for the whole probe ladder; theta groups
             # advance in lockstep and fork (copy-on-write) only where the
             # budgets change a placement decision.
@@ -171,15 +233,26 @@ def _rand_picker(rng: np.random.Generator) -> Picker:
 @register_chooser("rand")
 def rand_chooser(cluster, u: float, params: dict) -> Chooser:
     """Online RAND: random feasible GPUs per arrival.  Stateful (the rng
-    advances with every attempt), so crash recovery cannot replay it
-    decision-for-decision; ``repro.service`` flags this via the factory's
-    ``stateful`` attribute."""
-    picker = _rand_picker(np.random.default_rng(params.get("seed", 0)))
+    advances with every attempt): the chooser carries a ``stateful``
+    attribute plus ``get_state``/``set_state`` accessors exposing the
+    generator's ``bit_generator.state`` (a JSON-safe dict of ints), which
+    the service daemon journals after every decision so crash recovery
+    replays RAND decision-for-decision too."""
+    rng = np.random.default_rng(params.get("seed", 0))
+    picker = _rand_picker(rng)
 
     def choose(state: PlacementState, job: Job, th: float) -> bool:
         return try_place(state, job, picker, nominal_rho(cluster, job), u, th)
 
+    def get_state() -> dict:
+        return rng.bit_generator.state
+
+    def set_state(snapshot: dict) -> None:
+        rng.bit_generator.state = snapshot
+
     choose.stateful = True
+    choose.get_state = get_state
+    choose.set_state = set_state
     return choose
 
 
@@ -188,9 +261,13 @@ rand_chooser.stateful = True
 
 @register_policy("rand")
 def random_policy_policy(request: ScheduleRequest) -> ScheduleResult:
-    """RAND with theta_u = T.  ``request.params``: ``seed`` (default 0)."""
+    """RAND with theta_u = T.  ``request.params``: ``seed`` (default 0).
+    The picker is stateful (rng draws per attempt), so there is no
+    columnar path: the ``placement`` param is validated but both values
+    run the scalar walk (columnar == scalar trivially)."""
     cluster, u = request.cluster, request.u
     engine = request.params.get("engine")
+    resolve_placement(request.params)
     theta = float(request.horizon)
 
     if not request.is_batch:
@@ -230,9 +307,12 @@ def reserved_bandwidth_policy(request: ScheduleRequest) -> ScheduleResult:
     contention-free bandwidth (rho charged at its nominal lower estimate,
     placement = least-loaded GPUs).  The simulator *does* model contention,
     so the actual makespan of this schedule exposes the optimism the paper
-    argues against."""
+    argues against.  Commits at the nominal rho (no refined re-check
+    ladder), so there is no columnar path: the ``placement`` param is
+    validated but both values run the scalar walk."""
     cluster, u = request.cluster, request.u
     engine = request.params.get("engine")
+    resolve_placement(request.params)
     place_nominal = reserved_chooser(cluster, u, request.params)
 
     if not request.is_batch:

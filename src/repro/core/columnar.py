@@ -1,0 +1,534 @@
+"""Columnar branch-vectorised placement: the whole sweep x bisect forest
+as one array program.
+
+The speculative machinery of :mod:`repro.core.api` (``SharedState`` +
+``try_place_group``) advances a *lineage forest* of per-branch
+:class:`~repro.core.api.PlacementState` objects: branches fork with
+copy-on-write clones at the first divergent placement and never re-merge,
+so cross-theta sharing decays to ~5-15% and the scheduler remains a scalar
+Python walk per lineage.  :class:`ColumnarPlacement` replaces the forest
+with a columnar layout:
+
+  * every (theta, kappa) **branch** maps onto a deduplicated state **row**;
+    the row store is a pair of ``[rows, N]`` clock matrices (busy-time U,
+    real-time R), ``[rows, |J|]`` est-start/est-finish matrices, and a
+    per-row decision log (the committed ``(jid, gpus)`` sequence, whose
+    running hash is the row's state fingerprint);
+  * each :meth:`place` call advances **every** live branch by one job as
+    masked vectorised ops: the Eq. (16) pools (``U + rho/u <= theta``) are
+    threshold counts on one sorted vector per row, the FA-FFP/LBSGF/FF/LS
+    argmin picks run as one ``picker.pick_many`` call over the whole
+    ``[groups, N]`` batch, refined-rho probes are scored for all groups in
+    one :func:`~repro.core.contention.scalar_tau_many` /
+    :func:`~repro.core.contention.evaluate_stack` pass, and the Eq. (16)
+    re-check splits each theta run with a single vectorised comparison;
+  * branches whose decisions coincide are **re-merged**: a committed step
+    is a pure function of (parent row, chosen GPU set), so children are
+    deduplicated by the ``(parent row, gpus)`` key -- exactly the state
+    hash the COW forest cannot exploit once lineages have forked.
+
+Decision-for-decision the engine replays :func:`repro.core.api.try_place`
+per branch: the same pool thresholds, the same picker tie-breaks (the
+``pick_many`` forms are elementwise-identical to the scalar pickers), the
+same memoised rho_hat(y^k) scores, the same ``max(rho, rho_try * 1.05)``
+escalation ladder, and the same float expressions in the same order -- so
+schedules are bit-identical to the scalar oracle (pinned by
+``tests/test_columnar_equivalence.py`` and the ``--quick`` bench smokes).
+The engine backs ``placement="columnar"`` of the bisection policies; the
+scalar walk stays selectable as ``placement="scalar"``.
+"""
+from __future__ import annotations
+
+import bisect as _bisect
+
+import numpy as np
+
+from repro.core import contention
+from repro.core.cluster import Cluster
+from repro.core.contention import (_job_terms, evaluate_stack,
+                                   predict_exec_time, resolve_engine,
+                                   scalar_tau_many, slots_for_many)
+from repro.core.jobs import Job
+
+__all__ = ["ColumnarPlacement", "server_sums"]
+
+
+def server_sums(cluster: Cluster, W: np.ndarray) -> np.ndarray:
+    """Per-(row, server) sums of a ``[rows, N]`` per-GPU weight matrix.
+
+    The batched form of ``np.bincount(cluster.gpu_server, weights=w)``:
+    one flat bincount over row-major keys accumulates every (row, server)
+    bin in GPU-id order -- the same additions in the same order as the
+    scalar pickers' per-server bincounts, so the sums are bit-identical
+    per row.  Shared by the vectorised ``pick_many`` forms of FA-FFP
+    (occupancy scores) and LBSGF (server loads)."""
+    R, N = W.shape
+    S = cluster.num_servers
+    keys = (np.arange(R)[:, None] * S
+            + cluster.gpu_server[None, :]).ravel()
+    return np.bincount(keys, weights=np.ascontiguousarray(W).ravel(),
+                       minlength=R * S).reshape(R, S)
+
+
+class _Work:
+    """One resolution-ladder work item: a run of branches sharing a row, a
+    picker, the current escalated rho, and the memoised candidate scores
+    (shared down the retry chain, as in ``try_place_group``)."""
+
+    __slots__ = ("row", "pid", "branches", "rho_try", "scored")
+
+    def __init__(self, row: int, pid: int, branches: np.ndarray,
+                 rho_try: float, scored: dict):
+        self.row = row
+        self.pid = pid
+        self.branches = branches
+        self.rho_try = rho_try
+        self.scored = scored
+
+
+class ColumnarPlacement:
+    """Branch-vectorised placement over ``[rows, N]`` clock matrices.
+
+    ``thetas`` fixes the branch axis: branch ``b`` replays the scalar
+    placement walk at budget ``thetas[b]`` (callers encode the kappa sweep
+    by assigning pickers per branch in :meth:`place`).  ``jobs`` is the
+    request's jid-indexed job list (the per-jid Eq. (8) terms and the
+    reference-engine snapshots are gathered from it).  ``engine`` selects
+    how rho_hat(y^k) probes evaluate, exactly as for
+    :class:`~repro.core.api.PlacementState`: ``"incremental"`` suffix
+    counts + one ``scalar_tau_many`` per step, ``"batched"`` one padded
+    :func:`~repro.core.contention.evaluate_stack` pass over the branch
+    stack, ``"reference"`` the per-candidate ``evaluate`` loop.
+    """
+
+    #: try_place's escalation-ladder depth (same constant, same semantics).
+    TRIES = 4
+
+    def __init__(self, cluster: Cluster, thetas, jobs: list[Job], u: float,
+                 engine: str | None = None):
+        self.cluster = cluster
+        self.engine = resolve_engine(engine)
+        self.u = float(u)
+        self.jobs = jobs
+        self.thetas = np.asarray(thetas, dtype=np.float64)
+        B = len(self.thetas)
+        if B == 0:
+            raise ValueError("columnar placement needs at least one branch")
+        self.n_branches = B
+        self.n_jobs = len(jobs)
+        self.alive = np.ones(B, dtype=bool)
+        self.row_of = np.zeros(B, dtype=np.int64)
+        # Placement-independent Eq. (8) terms, gathered by jid for the
+        # batched-engine branch stacks.
+        self._G_t, self._share_t, self._compute_t = _job_terms(jobs)
+
+        N = cluster.num_gpus
+        S = cluster.num_servers
+        cap = max(1, B)
+        self.U = np.zeros((cap, N))          # busy-time clocks (Eq. 15/16)
+        self.R = np.zeros((cap, N))          # real-time clocks (gang start)
+        self._free = list(range(1, cap))
+        self._live_rows: set[int] = {0}
+        # Per-row python structures (few rows thanks to dedup; everything
+        # hot is in the matrices above).  Committed est_start/est_finish
+        # live as per-decision lists parallel to _jid_seq -- O(placed)
+        # per row instead of O(|J|), so clones stay cheap at trace scale;
+        # result() scatters them back into dense arrays.
+        self._assignment: dict[int, list] = {0: []}
+        self._jid_seq: dict[int, list[int]] = {0: []}
+        self._y_seq: dict[int, list[np.ndarray]] = {0: []}
+        self._start_seq: dict[int, list[float]] = {0: []}
+        self._fin_seq: dict[int, list[float]] = {0: []}
+        # Per-server sorted est_finish of straddling placed jobs, shared
+        # copy-on-write between cloned rows (see PlacementState.clone).
+        self._straddle_fin: dict[int, list[list[float]]] = \
+            {0: [[] for _ in range(S)]}
+        self._fin_owned: dict[int, list[bool]] = {0: [True] * S}
+        # Running decision-history fingerprint (the dedup "state hash").
+        self._state_hash: dict[int, int] = {0: 0}
+        # Picker tuple already validated by place() (identity-cached).
+        self._checked_pickers: tuple | None = None
+
+    # -- row store ---------------------------------------------------------
+
+    def _alloc_row(self) -> int:
+        if not self._free:
+            cap = self.U.shape[0]
+            grow = np.zeros_like(self.U)
+            self.U = np.concatenate([self.U, grow])
+            self.R = np.concatenate([self.R, np.zeros_like(grow)])
+            self._free.extend(range(cap, 2 * cap))
+        r = self._free.pop()
+        self._live_rows.add(r)
+        return r
+
+    def _free_row(self, r: int) -> None:
+        self._live_rows.discard(r)
+        self._free.append(r)
+        for store in (self._assignment, self._jid_seq, self._y_seq,
+                      self._start_seq, self._fin_seq,
+                      self._straddle_fin, self._fin_owned, self._state_hash):
+            store.pop(r, None)
+
+    def _clone_row(self, parent: int) -> int:
+        """Copy-on-write fork of a row (the columnar PlacementState.clone):
+        O(N + placed) copies; the sorted-finish lists are shared until a
+        commit first writes into one (both sides drop ownership)."""
+        r = self._alloc_row()
+        self.U[r] = self.U[parent]
+        self.R[r] = self.R[parent]
+        self._assignment[r] = list(self._assignment[parent])
+        self._jid_seq[r] = list(self._jid_seq[parent])
+        self._y_seq[r] = list(self._y_seq[parent])
+        self._start_seq[r] = list(self._start_seq[parent])
+        self._fin_seq[r] = list(self._fin_seq[parent])
+        self._straddle_fin[r] = list(self._straddle_fin[parent])
+        S = self.cluster.num_servers
+        self._fin_owned[r] = [False] * S
+        self._fin_owned[parent] = [False] * S
+        self._state_hash[r] = self._state_hash[parent]
+        return r
+
+    # -- scoring (rho_hat(y^k) probes, batched over candidates) ------------
+
+    def _score(self, job: Job, need: list[tuple["_Work", bytes, np.ndarray]]
+               ) -> None:
+        """Score every unseen (row, gpus) candidate of this step in one
+        engine pass and fill the work items' memo dicts with
+        ``(rho, start, y)``.  Values are bit-identical to
+        ``PlacementState.refined_rho`` on the equivalent scalar state."""
+        cl = self.cluster
+        S = cl.num_servers
+        C = len(need)
+        starts = np.empty(C)
+        ys: list[np.ndarray] = []
+        for c, (w, _, g) in enumerate(need):
+            starts[c] = float(self.R[w.row, g].max()) if len(g) else 0.0
+            ys.append(np.bincount(cl.gpu_server[g], minlength=S))
+        if self.engine == "incremental":
+            ps = np.empty(C, dtype=np.int64)
+            ns = np.empty(C, dtype=np.int64)
+            G = job.num_gpus
+            for c, (w, _, g) in enumerate(need):
+                sf = self._straddle_fin[w.row]
+                cut = starts[c] + 1e-9
+                p = 0
+                n_srv = 0
+                for s, yv in enumerate(ys[c].tolist()):
+                    if yv > 0:
+                        n_srv += 1
+                        if yv < G:
+                            fin = sf[s]
+                            p = max(p, len(fin)
+                                    - _bisect.bisect_right(fin, cut) + 1)
+                ps[c] = p
+                ns[c] = n_srv
+            contention.EVAL_COUNTS["probes"] += C
+            taus = scalar_tau_many(cl, job, ps, ns)
+            rhos = slots_for_many(job.iters, taus)
+        elif self.engine == "batched":
+            rhos = self._score_batched(job, need, starts, ys)
+        else:                                   # "reference"
+            rhos = np.empty(C)
+            for c, (w, _, g) in enumerate(need):
+                jids = self._jid_seq[w.row]
+                fins = self._fin_seq[w.row]
+                cut = starts[c] + 1e-9
+                overlap = [j for j, f in zip(jids, fins) if f > cut]
+                Y_snap = np.asarray(
+                    [y for y, f in zip(self._y_seq[w.row], fins)
+                     if f > cut], dtype=np.int64
+                ).reshape(len(overlap), S)
+                rhos[c] = predict_exec_time(
+                    cl, job, [self.jobs[j] for j in overlap], Y_snap, ys[c])
+        for c, (w, key, g) in enumerate(need):
+            w.scored[key] = (float(rhos[c]), float(starts[c]), ys[c])
+
+    def _score_batched(self, job: Job, need, starts: np.ndarray,
+                       ys: list[np.ndarray]) -> np.ndarray:
+        """All candidates in one padded-branch-stack ``evaluate_stack``
+        pass: candidate c's rows are its row's placed jobs (inactive where
+        their window misses the candidate's start) plus the candidate
+        itself; per-candidate term rows are gathered by jid.  Padding rows
+        stay inactive/zero, which leaves active rows' contention untouched
+        (a zero row straddles nothing)."""
+        cl = self.cluster
+        S = cl.num_servers
+        C = len(need)
+        counts = [len(self._jid_seq[w.row]) for (w, _, _) in need]
+        Pmax = max(counts)
+        Y = np.zeros((C, Pmax + 1, S), dtype=np.int64)
+        active = np.zeros((C, Pmax + 1), dtype=bool)
+        Gt = np.zeros((C, Pmax + 1), dtype=np.int64)
+        sh = np.zeros((C, Pmax + 1))
+        # Padding rows keep compute=1 so their (never-read) tau stays
+        # finite; their Y rows are zero, so they perturb nothing active.
+        cp = np.ones((C, Pmax + 1))
+        wG, wsh, wcp = _job_terms([job])
+        for c, (w, _, g) in enumerate(need):
+            P = counts[c]
+            if P:
+                jids = np.asarray(self._jid_seq[w.row], dtype=np.int64)
+                Y[c, :P] = np.stack(self._y_seq[w.row])
+                active[c, :P] = \
+                    np.asarray(self._fin_seq[w.row]) > starts[c] + 1e-9
+                Gt[c, :P] = self._G_t[jids]
+                sh[c, :P] = self._share_t[jids]
+                cp[c, :P] = self._compute_t[jids]
+            Y[c, P] = ys[c]
+            active[c, P] = True
+            Gt[c, P] = wG[0]
+            sh[c, P] = wsh[0]
+            cp[c, P] = wcp[0]
+        model = evaluate_stack(cl, Gt, sh, cp, Y, active=active)
+        taus = np.asarray([model.tau[c, counts[c]] for c in range(C)])
+        return slots_for_many(job.iters, taus)
+
+    # -- the one-job step --------------------------------------------------
+
+    def place(self, job: Job, rho_nom: float, pickers, picker_of) -> None:
+        """Advance every live branch by one job.
+
+        ``pickers`` is the tuple of candidate pickers (each carrying the
+        ``theta_pool`` contract and a vectorised ``pick_many``);
+        ``picker_of`` assigns one to each branch (scalar or ``[branches]``
+        array of indices into ``pickers`` -- the kappa axis of SJF-BCO).
+        Branches sharing (row, picker) advance in lockstep and split only
+        where the scalar walk's decisions diverge; committed branches are
+        re-merged onto deduplicated child rows.
+        """
+        if pickers is not self._checked_pickers:
+            for picker in pickers:
+                if not getattr(picker, "theta_pool", False) \
+                        or getattr(picker, "pick_many", None) is None:
+                    raise ValueError(
+                        f"picker {getattr(picker, '__name__', picker)!r} "
+                        "lacks theta_pool/pick_many; the columnar engine "
+                        "needs theta to enter only through the feasibility "
+                        "pool and a vectorised pick")
+            self._checked_pickers = pickers
+        live = np.flatnonzero(self.alive)
+        if not len(live):
+            return
+        u = self.u
+        picker_of = np.broadcast_to(np.asarray(picker_of, dtype=np.int64),
+                                    (self.n_branches,))
+        # Contiguous (row, picker) work groups, branches theta-ascending
+        # (then branch id) within each -- one stable lexsort instead of a
+        # python dict walk.
+        rows_l = self.row_of[live]
+        pids_l = picker_of[live]
+        order = np.lexsort((live, self.thetas[live], pids_l, rows_l))
+        lb, rb, pb = live[order], rows_l[order], pids_l[order]
+        gcuts = np.flatnonzero((rb[1:] != rb[:-1]) | (pb[1:] != pb[:-1])) + 1
+        bounds = np.concatenate([[0], gcuts, [len(lb)]])
+        work = [_Work(int(rb[s]), int(pb[s]), lb[s:e], rho_nom, {})
+                for s, e in zip(bounds[:-1], bounds[1:])]
+        commits: list[tuple] = []       # (branches, row, gpus, rho, start, y)
+        dead: list[np.ndarray] = []
+        for _ in range(self.TRIES):
+            # Pool split: within each work item, group branches by how many
+            # GPUs clear the rho_try filter -- equal counts <=> equal pools
+            # (threshold sets are nested in theta), hence identical picks.
+            # The counts at each item's extreme thetas come from one
+            # batched compare over the [work, N] clock block; only items
+            # whose extremes disagree (rare) pay the full per-theta split.
+            nw = len(work)
+            rows_w = np.fromiter((w.row for w in work), np.int64, nw)
+            rho_w = np.fromiter((w.rho_try for w in work), np.float64, nw)
+            V = self.U[rows_w] + (rho_w / u)[:, None]
+            th_lo = self.thetas[np.fromiter((w.branches[0] for w in work),
+                                            np.int64, nw)]
+            th_hi = self.thetas[np.fromiter((w.branches[-1] for w in work),
+                                            np.int64, nw)]
+            c_lo = (V <= th_lo[:, None] + 1e-9).sum(axis=1)
+            c_hi = (V <= th_hi[:, None] + 1e-9).sum(axis=1)
+            runs: list[tuple[_Work, np.ndarray, int]] = []
+            for i, w in enumerate(work):
+                if len(w.branches) == 1 or c_lo[i] == c_hi[i]:
+                    runs.append((w, w.branches, i))
+                else:
+                    counts = np.searchsorted(np.sort(V[i]),
+                                             self.thetas[w.branches] + 1e-9,
+                                             side="right")
+                    cuts = np.flatnonzero(counts[1:] != counts[:-1]) + 1
+                    for sub in np.split(w.branches, cuts):
+                        runs.append((w, sub, i))
+            nr = len(runs)
+            v_idx = np.fromiter((r[2] for r in runs), np.int64, nr)
+            th_rep = self.thetas[np.fromiter((r[1][0] for r in runs),
+                                             np.int64, nr)]
+            feas_all = V[v_idx] <= th_rep[:, None] + 1e-9
+            rows_r = rows_w[v_idx]
+            # Vectorised picks: one pick_many call per distinct picker over
+            # the whole [runs, N] batch.
+            picks: list[np.ndarray | None] = [None] * nr
+            by_pid: dict[int, list[int]] = {}
+            for i, (w, _, _) in enumerate(runs):
+                by_pid.setdefault(w.pid, []).append(i)
+            for pid, idxs in sorted(by_pid.items()):
+                if len(idxs) == nr:             # single-picker fast path
+                    U_g, feas = self.U[rows_r], feas_all
+                else:
+                    U_g, feas = self.U[rows_r[idxs]], feas_all[idxs]
+                gp, okv = pickers[pid].pick_many(self.cluster, U_g, feas,
+                                                 job)
+                for j, i in enumerate(idxs):
+                    picks[i] = gp[j] if okv[j] else None
+            # Batched scoring of every first-seen candidate of this level.
+            need: list[tuple[_Work, bytes, np.ndarray]] = []
+            for i, (w, _, _) in enumerate(runs):
+                g = picks[i]
+                if g is None:
+                    continue
+                key = g.tobytes()
+                if key not in w.scored:
+                    w.scored[key] = None      # claimed; filled by _score
+                    need.append((w, key, g))
+            if need:
+                self._score(job, need)
+            # Eq. (16) re-check: each run splits into a committing upper
+            # theta range and a retrying lower one.  All runs place the
+            # same G-gang, so the refined-rho bounds come from one batched
+            # [picked, G] gather instead of a max() per run.
+            next_work: list[_Work] = []
+            ok_i: list[int] = []
+            ok_g: list[np.ndarray] = []
+            ok_sc: list[tuple] = []
+            for i, (w, sub, _) in enumerate(runs):
+                g = picks[i]
+                if g is None:
+                    dead.append(sub)
+                else:
+                    ok_i.append(i)
+                    ok_g.append(g)
+                    ok_sc.append(w.scored[g.tobytes()])
+            if ok_i:
+                gmat = np.stack(ok_g)
+                rhos = np.fromiter((sc[0] for sc in ok_sc), np.float64,
+                                   len(ok_sc))
+                bnd = (self.U[rows_r[ok_i][:, None], gmat]
+                       + (rhos / u)[:, None]).max(axis=1)
+                for j, i in enumerate(ok_i):
+                    w, sub, _ = runs[i]
+                    rho, start, y = ok_sc[j]
+                    passes = self.thetas[sub] + 1e-9 >= bnd[j]
+                    hi, lo = sub[passes], sub[~passes]
+                    if len(hi):
+                        commits.append((hi, w.row, ok_g[j], rho, start, y))
+                    if len(lo):
+                        next_work.append(_Work(w.row, w.pid, lo,
+                                               max(rho, w.rho_try * 1.05),
+                                               w.scored))
+            work = next_work
+            if not work:
+                break
+        for w in work:                        # escalation ladder exhausted
+            dead.append(w.branches)
+        self._apply(job, commits, dead)
+
+    def _apply(self, job: Job, commits: list[tuple],
+               dead: list[np.ndarray]) -> None:
+        """Fold a step's outcomes into the row store: kill failed branches,
+        dedup commits by (parent row, gpus) -- the re-merge the lineage
+        forest cannot do -- clone rows only at true divergences, and apply
+        all clock/est updates as one vectorised write per matrix."""
+        jid = job.jid
+        for bs in dead:
+            if len(bs):
+                self.alive[bs] = False
+        # Merge identical decisions: a child state is a pure function of
+        # (parent row, committed gpus), so branches picking the same set
+        # off the same row land on ONE child row.
+        merged: dict[tuple[int, bytes], list] = {}
+        order: list[tuple[int, bytes]] = []
+        for bs, row, g, rho, start, y in commits:
+            key = (row, g.tobytes())
+            ent = merged.get(key)
+            if ent is None:
+                merged[key] = [bs, row, g, rho, start, y]
+                order.append(key)
+            else:
+                ent[0] = np.concatenate([ent[0], bs])
+        by_parent: dict[int, list] = {}
+        for key in order:
+            ent = merged[key]
+            by_parent.setdefault(ent[1], []).append(ent)
+        # Assign child rows: the first class reuses the parent in place
+        # (every branch leaves it this step), the rest fork copy-on-write.
+        child_rows: list[tuple[int, list]] = []
+        for parent in sorted(by_parent):
+            classes = by_parent[parent]
+            for k, ent in enumerate(classes):
+                child = parent if k == 0 else self._clone_row(parent)
+                child_rows.append((child, ent))
+        if child_rows:
+            u = self.u
+            rows_arr = np.asarray([c for c, _ in child_rows])
+            gmat = np.stack([ent[2] for _, ent in child_rows])
+            rhos = np.asarray([ent[3] for _, ent in child_rows])
+            starts = np.asarray([ent[4] for _, ent in child_rows])
+            # The columnar Eq. (15) charge: one masked write per matrix.
+            # (Index pairs are unique: child rows are distinct and a gang's
+            # GPUs are distinct, so the fancy += is the scalar addition.)
+            self.U[rows_arr[:, None], gmat] += (rhos / u)[:, None]
+            self.R[rows_arr[:, None], gmat] = (starts + rhos)[:, None]
+            G = job.num_gpus
+            for child, ent in child_rows:
+                bs, _, g, rho, start, y = ent
+                self.row_of[bs] = child
+                self._assignment[child].append((jid, g))
+                self._jid_seq[child].append(jid)
+                self._y_seq[child].append(y)
+                fin = start + rho
+                self._start_seq[child].append(start)
+                self._fin_seq[child].append(fin)
+                sf = self._straddle_fin[child]
+                owned = self._fin_owned[child]
+                for s, yv in enumerate(y.tolist()):
+                    if 0 < yv < G:
+                        if not owned[s]:         # copy-on-first-write
+                            sf[s] = list(sf[s])
+                            owned[s] = True
+                        _bisect.insort(sf[s], fin)
+                self._state_hash[child] = hash(
+                    (self._state_hash[child], jid, g.tobytes()))
+        # Release rows no branch references any more.
+        referenced = set(self.row_of[self.alive].tolist())
+        for r in [r for r in self._live_rows if r not in referenced]:
+            self._free_row(r)
+
+    # -- results -----------------------------------------------------------
+
+    @property
+    def n_rows(self) -> int:
+        """Distinct live states (the dedup the lineage forest lacks)."""
+        return len(self._live_rows)
+
+    def state_hash(self, b: int) -> int | None:
+        """Decision-history fingerprint of branch ``b`` (None if dead)."""
+        if not self.alive[b]:
+            return None
+        return self._state_hash[int(self.row_of[b])]
+
+    def result(self, b: int, theta: float, kappa: int | None,
+               policy: str):
+        """Freeze branch ``b`` into a ScheduleResult (None if it failed).
+        Same construction as :func:`repro.core.api.finalize` on the
+        equivalent scalar state."""
+        from repro.core.api import ScheduleResult
+        if not self.alive[b]:
+            return None
+        row = int(self.row_of[b])
+        est_start = np.full(self.n_jobs, -1.0)
+        est_finish = np.full(self.n_jobs, -1.0)
+        jids = self._jid_seq[row]
+        if jids:
+            est_start[jids] = self._start_seq[row]
+            est_finish[jids] = self._fin_seq[row]
+        return ScheduleResult(
+            assignment=list(self._assignment[row]),
+            est_start=est_start, est_finish=est_finish,
+            est_makespan=float(est_finish.max(initial=0.0)),
+            theta=theta, kappa=kappa, policy=policy,
+            max_busy_time=float(self.U[row].max(initial=0.0)))

@@ -216,25 +216,35 @@ def stack_model(cluster: Cluster, G: np.ndarray, share: np.ndarray,
     """Eqs. (6)-(8) on a prepared [C, J, S] candidate stack.
 
     The vectorised core shared by :func:`evaluate_many` (which adds Job
-    -list handling and Eq. (1) validation on top) and the simulator's
+    -list handling and Eq. (1) validation on top), the simulator's
     multi-window stepping (which pre-computes the placement-independent
     terms ``G``/``share``/``compute`` once per run and feeds window
-    stacks straight in).  ``active`` [C, J] masks rows out per candidate
-    by zeroing them -- a zero row straddles nothing, so every other
-    row's contention is exactly as if the row were absent.
+    stacks straight in), and :func:`evaluate_stack`.  The term arrays may
+    be shared across candidates ([J], broadcast over the stack) or
+    per-candidate ([C, J] -- the columnar placement engine's branch
+    stacks, where each candidate row set comes from a different decision
+    history); both shapes follow the same elementwise expressions, so the
+    shared form is the per-candidate form with repeated rows.  ``active``
+    [C, J] masks rows out per candidate by zeroing them -- a zero row
+    straddles nothing, so every other row's contention is exactly as if
+    the row were absent.
 
     When the Pallas tau kernel is enabled (see :func:`tau_backend`), the
     inner straddle/per-server/max reduction and the Eq. (8) combination
-    run inside one jitted kernel instead of this NumPy pipeline.
+    run inside one jitted kernel instead of this NumPy pipeline; the
+    candidate axis is the kernel's grid dimension for both term shapes.
     """
     Y = Y_stack
     if active is not None:
         Y = np.where(active[:, :, None], Y, 0)
+    G2 = np.broadcast_to(np.asarray(G), Y.shape[:2])
+    share2 = np.broadcast_to(np.asarray(share), Y.shape[:2])
+    compute2 = np.broadcast_to(np.asarray(compute), Y.shape[:2])
     if TAU_BACKEND != "numpy":
         from repro.kernels.tau import tau_stack
         p, n_srv_i, tau = tau_stack(cluster, G, share, compute, Y)
     else:
-        straddle = (Y > 0) & (Y < G[None, :, None])    # [C, J, S]
+        straddle = (Y > 0) & (Y < G2[:, :, None])      # [C, J, S]
         per_server = straddle.sum(axis=1)              # [C, S]
         p = np.where(straddle, per_server[:, None, :], 0).max(axis=2)
         p = p.astype(np.int64)
@@ -244,9 +254,9 @@ def stack_model(cluster: Cluster, G: np.ndarray, share: np.ndarray,
     f = degradation(cluster.alpha, k)
     bandwidth = np.where(n_srv_i > 1, cluster.b_inter / f, cluster.b_intra)
     gamma = cluster.xi2 * n_srv_i.astype(np.float64)
-    exchange = 2.0 * share[None, :] / bandwidth
-    reduce_t = np.broadcast_to(share / cluster.gpu_speed, p.shape)
-    compute_b = np.broadcast_to(compute, p.shape)
+    exchange = 2.0 * share2 / bandwidth
+    reduce_t = share2 / cluster.gpu_speed
+    compute_b = compute2
     if tau is None:
         tau = exchange + reduce_t + gamma + compute_b
     phi = np.floor(1.0 / tau).astype(np.int64)
@@ -340,6 +350,46 @@ def evaluate_many(cluster: Cluster, jobs: list[Job], Y_stack: np.ndarray,
         expect = np.where(active, G[None, :], 0)
     else:
         expect = np.broadcast_to(G[None, :], Y.shape[:2])
+    if not np.array_equal(Y.sum(axis=2), expect):
+        raise ValueError("placement does not cover every job's GPUs (Eq. 1)")
+
+    EVAL_COUNTS["batched_calls"] += 1
+    EVAL_COUNTS["batched_rows"] += Y.shape[0]
+    return stack_model(cluster, G, share, compute, Y)
+
+
+def evaluate_stack(cluster: Cluster, G: np.ndarray, share: np.ndarray,
+                   compute: np.ndarray, Y_stack: np.ndarray,
+                   active: np.ndarray | None = None) -> IterModel:
+    """Score a padded candidate stack whose rows differ *per candidate*.
+
+    The columnar-stack entry point: where :func:`evaluate_many` shares one
+    job list (and hence one [J] term vector) across all candidates, here
+    each candidate carries its own row set -- ``G``/``share``/``compute``
+    are [C, J] with candidate c's row j holding the Eq. (8) terms of
+    whatever job occupies that slot of c's stack (zero-padded, inactive
+    rows beyond c's depth).  This is how the columnar placement engine
+    scores one probe per *branch row* in a single pass without gathering
+    the branches onto a shared job order.  Shared [J] terms are accepted
+    too and broadcast, making :func:`evaluate_many` the special case.
+
+    Same Eq. (1) validation, counters, and :func:`stack_model` core as
+    :func:`evaluate_many`; bit-identical to evaluating each candidate's
+    active rows with :func:`evaluate`.
+    """
+    Y = np.asarray(Y_stack)
+    if Y.ndim != 3 or Y.shape[2] != cluster.num_servers:
+        raise ValueError(
+            f"Y_stack shape {Y.shape} != (C, J, {cluster.num_servers})")
+    G2 = np.broadcast_to(np.asarray(G), Y.shape[:2])
+    if active is not None:
+        active = np.asarray(active, dtype=bool)
+        if active.shape != Y.shape[:2]:
+            raise ValueError(f"active shape {active.shape} != {Y.shape[:2]}")
+        Y = np.where(active[:, :, None], Y, 0)
+        expect = np.where(active, G2, 0)
+    else:
+        expect = G2
     if not np.array_equal(Y.sum(axis=2), expect):
         raise ValueError("placement does not cover every job's GPUs (Eq. 1)")
 
@@ -656,6 +706,17 @@ def slots_for(iters: int, tau: float) -> float:
     match np.floor/ceil exactly; this is just the scalar fast path.)"""
     phi = max(1, math.floor(1.0 / tau))
     return float(math.ceil(iters / phi))
+
+
+def slots_for_many(iters: int, tau: np.ndarray) -> np.ndarray:
+    """Vectorised :func:`slots_for`: rho-hat slot counts for a batch of
+    taus in one pass.  np.floor/np.ceil on float64 match math.floor/ceil
+    exactly, phi is a small exact integer in float64, and int/int true
+    division equals float64 division for exactly representable operands --
+    so every element is bit-identical to the scalar form.  The columnar
+    placement engine's per-step probe batches route through this."""
+    phi = np.maximum(1.0, np.floor(1.0 / np.asarray(tau, dtype=np.float64)))
+    return np.ceil(iters / phi)
 
 
 def predict_exec_time(cluster: Cluster, job: Job, jobs_snapshot: list[Job],

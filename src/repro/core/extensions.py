@@ -20,7 +20,7 @@ import dataclasses
 from repro.core.api import (PlacementState, ScheduleRequest, ScheduleResult,
                             bisect_theta, finalize, get_policy, nominal_rho,
                             pick_best_finish, register_policy,
-                            schedule_arrivals)
+                            resolve_placement, schedule_arrivals)
 from repro.core.jobs import Job
 from repro.core.simulator import simulate
 from repro.core.sjf_bco import fa_ffp, lbsgf, sjf_bco_chooser
@@ -32,9 +32,16 @@ __all__ = ["sjf_bco_adaptive_policy", "contention_sweep"]
 def sjf_bco_adaptive_policy(request: ScheduleRequest) -> ScheduleResult:
     """Bisection on theta_u with the adaptive pack-or-spread choice; with
     arrivals, the same choice runs in the online epoch loop (identical to
-    SJF-BCO online, which is already adaptive)."""
+    SJF-BCO online, which is already adaptive).
+
+    The ``placement`` param is validated for interface consistency, but
+    the adaptive choice compares two refined scores per job
+    (:func:`pick_best_finish`) rather than advancing one picker's pool,
+    so both values run the scalar walk -- columnar == scalar trivially
+    here."""
     cluster, u = request.cluster, request.u
     engine = request.params.get("engine")
+    resolve_placement(request.params)
 
     if not request.is_batch:
         # Online, the adaptive choice IS SJF-BCO's epoch rule: one shared

@@ -32,9 +32,11 @@ import numpy as np
 from repro.core.api import (Chooser, PlacementState, ScheduleRequest,
                             ScheduleResult, SharedState, bisect_theta,
                             finalize, nominal_rho, pick_best_finish,
-                            register_chooser, register_policy, rho_hat,
-                            schedule_arrivals, try_place, try_place_group)
+                            register_chooser, register_policy,
+                            resolve_placement, rho_hat, schedule_arrivals,
+                            try_place, try_place_group)
 from repro.core.cluster import Cluster
+from repro.core.columnar import ColumnarPlacement, server_sums
 from repro.core.jobs import Job
 
 __all__ = ["fa_ffp", "lbsgf", "nominal_rho", "rho_hat", "sjf_bco_policy"]
@@ -110,11 +112,89 @@ def lbsgf(state: PlacementState, job: Job, rho_nom: float, u: float,
     return pool[order][: job.num_gpus]
 
 
+def _fa_ffp_many(cluster: Cluster, U: np.ndarray, feasible: np.ndarray,
+                 job: Job) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorised FA-FFP over a batch of branch rows.
+
+    ``U`` [rows, N] holds each branch row's busy-time clocks and
+    ``feasible`` [rows, N] its Eq. (16) pool; returns ``(gpus, ok)`` with
+    ``gpus`` [rows, G_j] and ``ok`` [rows] (False where the pool is too
+    small -- :func:`fa_ffp` returns None there).  Every row reproduces the
+    scalar pick exactly: the per-server counts/occupancies come from the
+    same GPU-id-order bincounts (:func:`~repro.core.columnar.server_sums`),
+    the best-fit server from one flat lexsort whose within-row keys match
+    the scalar lexsort (ties broken identically by lexsort stability), and
+    the within-server / fallback orders from stable argsorts over masked
+    keys, which order ties by GPU id exactly like the scalar pool sorts."""
+    R, N = U.shape
+    S = cluster.num_servers
+    Gj = job.num_gpus
+    ok = feasible.sum(axis=1) >= Gj
+    cnt = server_sums(cluster, feasible.astype(np.float64)).astype(np.int64)
+    occupied = server_sums(cluster, U)
+    fits = cnt >= Gj
+    has_fit = fits.any(axis=1)
+    # Best server per row by (fewest feasible slots left, most occupied,
+    # lowest id): one flat lexsort with the row as the primary key, so row
+    # r's candidates occupy positions r*S..(r+1)*S-1 of the order.
+    r_flat = np.repeat(np.arange(R), S)
+    s_flat = np.tile(np.arange(S), R)
+    k_fit = np.where(fits, cnt - Gj, N + 1).ravel()
+    k_occ = np.where(fits, -occupied, np.inf).ravel()
+    order = np.lexsort((s_flat, k_occ, k_fit, r_flat))
+    best_srv = s_flat[order[np.arange(R) * S]]
+    in_best = feasible & (cluster.gpu_server[None, :] == best_srv[:, None])
+    packed = np.argsort(np.where(in_best, U, np.inf), axis=1,
+                        kind="stable")[:, :Gj]
+    spread = np.argsort(np.where(feasible, U, np.inf), axis=1,
+                        kind="stable")[:, :Gj]
+    return np.where(has_fit[:, None], packed, spread), ok
+
+
+def _lbsgf_many(cluster: Cluster, U: np.ndarray, feasible: np.ndarray,
+                job: Job) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorised LBSGF over a batch of branch rows.
+
+    Same contract as :func:`_fa_ffp_many`.  Per row: server loads from the
+    GPU-id-order bincount, the least-busy server order from a stable
+    argsort of load/capacity (ties by server id, as in the scalar
+    argsort), the lambda_j-sized top-m pool from the same cumulative
+    -capacity threshold count, and the final server-major/least-U GPU
+    order from one flat lexsort whose within-row keys equal the scalar
+    ``np.lexsort((U[pool], ranks))`` -- so every row's pick is
+    bit-identical to :func:`lbsgf`."""
+    R, N = U.shape
+    S = cluster.num_servers
+    Gj = job.num_gpus
+    caps = cluster.capacities_array
+    srv_load = server_sums(cluster, U)
+    srv_order = np.argsort(srv_load / caps[None, :], axis=1, kind="stable")
+    need = job.lam * Gj
+    cum = np.cumsum(caps[srv_order], axis=1)
+    m = np.minimum((cum < need).sum(axis=1) + 1, S)
+    pos = np.arange(S)[None, :]
+    rank_vals = np.where(pos < m[:, None], pos, -1)
+    srv_rank = np.empty((R, S), dtype=np.int64)
+    np.put_along_axis(srv_rank, srv_order, rank_vals, axis=1)
+    ranks = srv_rank[np.arange(R)[:, None], cluster.gpu_server[None, :]]
+    pool = feasible & (ranks >= 0)
+    ok = pool.sum(axis=1) >= Gj
+    r_flat = np.repeat(np.arange(R), N)
+    k_rank = np.where(pool, ranks, S + 1).ravel()
+    k_U = np.where(pool, U, np.inf).ravel()
+    order = np.lexsort((k_U, k_rank, r_flat))
+    gpus = order.reshape(R, N)[:, :Gj] - (np.arange(R) * N)[:, None]
+    return gpus, ok
+
+
 # theta enters both pickers only through the U + rho/u <= theta + 1e-9
 # feasibility pool, which is what lets the speculative bisection advance a
-# whole group of thetas in lockstep (see api.try_place_group).
+# whole group of thetas in lockstep (see api.try_place_group) and the
+# columnar engine batch whole branch stacks per pick (pick_many).
 fa_ffp.theta_pool = True
 lbsgf.theta_pool = True
+fa_ffp.pick_many = _fa_ffp_many
+lbsgf.pick_many = _lbsgf_many
 
 
 # The adaptive pack-or-spread choice IS SJF-BCO's online rule (extensions'
@@ -271,6 +351,40 @@ def _sweep_speculative(cluster: Cluster, jobs_sorted: list[Job],
     return results
 
 
+def _sweep_columnar(cluster: Cluster, jobs: list[Job],
+                    jobs_sorted: list[Job], rho_noms: dict[int, float],
+                    u: float, thetas: list[float], kappas: list[int],
+                    engine: str | None
+                    ) -> dict[float, dict[int, ScheduleResult | None]]:
+    """Every (theta, kappa) attempt as ONE columnar array program.
+
+    Each (theta, kappa) pair is a branch of a single
+    :class:`~repro.core.columnar.ColumnarPlacement`; one :meth:`place`
+    call per sorted job advances the whole forest -- the kappa axis enters
+    purely as the per-branch FA-FFP/LBSGF picker assignment (G_j <= kappa
+    packs, else spreads), the theta axis purely through the Eq. (16)
+    pools.  Branches whose decisions coincide share one state row (and
+    re-merge when they re-coincide), which subsumes both the batched
+    sweep's shared FA-FFP prefixes and the speculative bisection's
+    copy-on-write lineages.  Decision-for-decision identical to
+    :func:`_attempt` per pair, hence bit-identical schedules."""
+    kap = sorted(set(kappas))
+    pairs = [(float(th), k) for th in sorted(thetas) for k in kap]
+    col = ColumnarPlacement(cluster, [th for th, _ in pairs], jobs, u,
+                            engine=engine)
+    kappa_arr = np.asarray([k for _, k in pairs], dtype=np.int64)
+    for job in jobs_sorted:
+        picker_of = (job.num_gpus > kappa_arr).astype(np.int64)
+        col.place(job, rho_noms[job.jid], (fa_ffp, lbsgf), picker_of)
+        if not col.alive.any():
+            break                                              # line 14
+    results: dict[float, dict[int, ScheduleResult | None]] = \
+        {float(th): {} for th in thetas}
+    for b, (th, k) in enumerate(pairs):
+        results[th][k] = col.result(b, th, k, "SJF-BCO")
+    return results
+
+
 @register_policy("sjf-bco")
 def sjf_bco_policy(request: ScheduleRequest) -> ScheduleResult:
     """Algorithm 1 (batch) / finish-minimising epoch scheduler (online).
@@ -297,15 +411,34 @@ def sjf_bco_policy(request: ScheduleRequest) -> ScheduleResult:
         structure and a cold start, so ``sweep="sequential"`` or
         ``warm_start=True`` fall back to the sequential bisection.
       * ``bisect_levels`` -- how many bisection decisions each
-        speculative round precomputes (default 4: the probe ladder is
-        the descending assume-feasible chain, at most one probe per
-        level).
+        speculative round precomputes (the probe ladder is the
+        descending assume-feasible chain, at most one probe per level).
+        Default 4 for the scalar walk, 8 for the columnar engine (an
+        extra probe theta there is one more branch row of the same
+        array ops).
+      * ``bisect_prune`` -- whether the ladder drops tail probes below
+        the bracket's likely-infeasible cutoff (default: pruned for the
+        scalar walk, unpruned for columnar).  Never changes results,
+        only which probes are precomputed.
       * ``warm_start`` -- seed each theta's attempts with the placements
         committed at the previous feasible theta (off by default; changes
         the search trajectory, not the accounting).
+      * ``placement`` -- ``"scalar"`` (default) is the per-branch
+        :class:`~repro.core.api.PlacementState` walk, the bit-identity
+        oracle and the fastest CPU path at bench scale (its
+        copy-on-write lineages already share placement work between
+        branches); ``"columnar"`` advances the whole (theta, kappa)
+        forest of each attempt/round as one
+        :class:`~repro.core.columnar.ColumnarPlacement` array program
+        with deduplicated branch rows -- identical decisions held in
+        strictly-array state (the trace-scale / accelerator substrate).
+        Columnar needs the cold-start batched sweep (hints change
+        decisions), so ``sweep="sequential"`` or ``warm_start=True``
+        fall back to the scalar walk.
     """
     cluster, u = request.cluster, request.u
     engine = request.params.get("engine")
+    placement = resolve_placement(request.params)
     sweep = request.params.get("sweep", "batched")
     if sweep not in ("batched", "sequential"):
         raise ValueError(
@@ -331,15 +464,22 @@ def sjf_bco_policy(request: ScheduleRequest) -> ScheduleResult:
         if 1 not in kappas:
             kappas.insert(0, 1)
 
+    warm = bool(request.params.get("warm_start"))
+    use_columnar = placement == "columnar" and sweep == "batched" and not warm
+
     def attempt(theta: float,
                 prev: ScheduleResult | None = None) -> ScheduleResult | None:
         hints = dict(prev.assignment) if prev is not None else None
-        if sweep == "batched":
+        if use_columnar:
+            sweep_results = _sweep_columnar(cluster, jobs, jobs_sorted,
+                                            rho_noms, u, [theta], kappas,
+                                            engine)[float(theta)]
+        elif sweep == "batched":
             sweep_results = _sweep_batched(cluster, jobs_sorted, rho_noms,
                                            u, theta, kappas, engine, hints)
         best_theta: ScheduleResult | None = None
         for kappa in kappas:                                       # line 7
-            if sweep == "batched":
+            if use_columnar or sweep == "batched":
                 cand = sweep_results[kappa]
             else:
                 state = _attempt(cluster, jobs_sorted, rho_noms, u, theta,
@@ -352,14 +492,18 @@ def sjf_bco_policy(request: ScheduleRequest) -> ScheduleResult:
                 best_theta = cand                                  # lines 17-18
         return best_theta
 
-    warm = bool(request.params.get("warm_start"))
     attempt_many = None
     if bisect_mode == "speculative" and sweep == "batched" and not warm:
         def attempt_many(thetas: list[float]
                          ) -> dict[float, ScheduleResult | None]:
-            sweep_results = _sweep_speculative(cluster, jobs_sorted,
-                                               rho_noms, u, thetas, kappas,
-                                               engine)
+            if use_columnar:
+                sweep_results = _sweep_columnar(cluster, jobs, jobs_sorted,
+                                                rho_noms, u, thetas, kappas,
+                                                engine)
+            else:
+                sweep_results = _sweep_speculative(cluster, jobs_sorted,
+                                                   rho_noms, u, thetas,
+                                                   kappas, engine)
             out: dict[float, ScheduleResult | None] = {}
             for th in thetas:
                 best_theta: ScheduleResult | None = None
@@ -373,7 +517,15 @@ def sjf_bco_policy(request: ScheduleRequest) -> ScheduleResult:
                 out[th] = best_theta
             return out
 
+    # The columnar program prices an extra probe theta at one more branch
+    # row of the same array ops, so it keeps the whole ladder (no bracket
+    # pruning) and speculates deeper by default; the scalar walk pays one
+    # placement lineage per probe and keeps the conservative ladder.
+    default_levels = 8 if use_columnar else 4
     return bisect_theta(attempt, request.horizon, "SJF-BCO",
                         warm_start=warm, attempt_many=attempt_many,
-                        levels=int(request.params.get("bisect_levels", 4)),
-                        floor=max(rho_noms.values()) / u)
+                        levels=int(request.params.get("bisect_levels",
+                                                      default_levels)),
+                        floor=max(rho_noms.values()) / u,
+                        prune=bool(request.params.get("bisect_prune",
+                                                      not use_columnar)))

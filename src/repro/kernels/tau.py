@@ -53,23 +53,28 @@ def _tau_kernel(y_ref, g_ref, share_ref, reduce_ref, compute_ref,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "xi1", "xi2", "alpha", "b_inter", "b_intra", "gpu_speed", "interpret"))
+    "xi1", "xi2", "alpha", "b_inter", "b_intra", "gpu_speed", "terms_2d",
+    "interpret"))
 def _tau_stack_jit(Y, G, share, compute, *, xi1, xi2, alpha, b_inter,
-                   b_intra, gpu_speed, interpret):
+                   b_intra, gpu_speed, terms_2d, interpret):
     C, J, S = Y.shape
     ftype = share.dtype
     itype = Y.dtype
     reduce_t = share / gpu_speed
+    # Shared [J] terms pin every grid step to block (0, 0); per-candidate
+    # [C, J] terms ride the same grid axis as the Y stack -- the branch
+    # axis of the columnar placement engine IS the kernel grid dimension.
+    term_idx = (lambda c: (c, 0)) if terms_2d else (lambda c: (0, 0))
     return pl.pallas_call(
         functools.partial(_tau_kernel, xi1=xi1, xi2=xi2, alpha=alpha,
                           b_inter=b_inter, b_intra=b_intra),
         grid=(C,),
         in_specs=[
             pl.BlockSpec((1, J, S), lambda c: (c, 0, 0)),
-            pl.BlockSpec((1, J), lambda c: (0, 0)),
-            pl.BlockSpec((1, J), lambda c: (0, 0)),
-            pl.BlockSpec((1, J), lambda c: (0, 0)),
-            pl.BlockSpec((1, J), lambda c: (0, 0)),
+            pl.BlockSpec((1, J), term_idx),
+            pl.BlockSpec((1, J), term_idx),
+            pl.BlockSpec((1, J), term_idx),
+            pl.BlockSpec((1, J), term_idx),
         ],
         out_specs=[
             pl.BlockSpec((1, J), lambda c: (c, 0)),
@@ -83,7 +88,10 @@ def _tau_stack_jit(Y, G, share, compute, *, xi1, xi2, alpha, b_inter,
         ],
         compiler_params=CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
-    )(Y, G[None, :], share[None, :], reduce_t[None, :], compute[None, :])
+    )(Y, G if terms_2d else G[None, :],
+      share if terms_2d else share[None, :],
+      reduce_t if terms_2d else reduce_t[None, :],
+      compute if terms_2d else compute[None, :])
 
 
 def tau_stack(cluster, G: np.ndarray, share: np.ndarray,
@@ -94,11 +102,17 @@ def tau_stack(cluster, G: np.ndarray, share: np.ndarray,
 
     ``Y`` [C, J, S] is the (already masked) candidate stack; ``G``,
     ``share`` and ``compute`` are the placement-independent per-job terms
-    (see ``repro.core.contention._job_terms``).  ``interpret`` defaults to
+    (see ``repro.core.contention._job_terms``), either shared across the
+    stack ([J]) or per-candidate ([C, J], the columnar branch-stack
+    layout, in which case the candidate/branch axis becomes the kernel's
+    grid dimension for the term blocks too).  ``interpret`` defaults to
     Pallas interpret mode on CPU backends.
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
+    G = np.asarray(G)
+    if G.ndim not in (1, 2):
+        raise ValueError(f"G must be [J] or [C, J], got shape {G.shape}")
     itype = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
     ftype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
     p, n_srv, tau = _tau_stack_jit(
@@ -107,6 +121,6 @@ def tau_stack(cluster, G: np.ndarray, share: np.ndarray,
         xi1=float(cluster.xi1), xi2=float(cluster.xi2),
         alpha=float(cluster.alpha), b_inter=float(cluster.b_inter),
         b_intra=float(cluster.b_intra), gpu_speed=float(cluster.gpu_speed),
-        interpret=bool(interpret))
+        terms_2d=G.ndim == 2, interpret=bool(interpret))
     return (np.asarray(p, dtype=np.int64), np.asarray(n_srv, dtype=np.int64),
             np.asarray(tau, dtype=np.float64))

@@ -29,8 +29,10 @@ Crash recovery (:meth:`Daemon.recover`) is pure journal replay: rebuild
 the job records, re-commit journaled placements -- with the exact
 ``(gpus, rho, start)`` floats, in journal order, so U/R clocks come back
 bit-for-bit -- and re-enqueue anything caught mid-``PLACING``; the
-deterministic chooser then re-derives the same placement the crashed
-process was about to make.
+chooser then re-derives the same placement the crashed process was about
+to make.  Stateful choosers (RAND) journal their rng state inside every
+outcome transition, and replay restores it, so even stochastic policies
+recover decision-for-decision.
 """
 from __future__ import annotations
 
@@ -172,8 +174,14 @@ class Daemon:
             t0 = time.perf_counter()
             ok = chooser(self.state, record.job, theta)
             self.decision_latencies.append(time.perf_counter() - t0)
+            # Stateful choosers (RAND) snapshot their post-decision rng
+            # state INSIDE the outcome transition: one atomic append, so
+            # there is no crash window between the outcome and the state
+            # the next decision must start from.
+            get_state = getattr(chooser, "get_state", None)
+            extra = {} if get_state is None else {"rng": get_state()}
             if not ok:
-                self._transition(record, JobState.FAILED)
+                self._transition(record, JobState.FAILED, **extra)
                 continue
             jid, gpus, rho, start = self._last_commit
             if jid != record.jid:          # chooser must place THIS job
@@ -182,7 +190,7 @@ class Daemon:
             record.gpus, record.rho, record.start = gpus, rho, start
             self._transition(record, JobState.RUNNING,
                              gpus=[int(g) for g in gpus],
-                             rho=rho, start=start)
+                             rho=rho, start=start, **extra)
         if self.monitor_every and self.rounds % self.monitor_every == 0:
             self.monitor()
         return True
@@ -245,9 +253,11 @@ class Daemon:
         operands, same order -- the recovered U/R clocks are bit-identical
         to the crashed daemon's), and jobs whose last word is ``QUEUED``
         or ``PLACING`` are re-enqueued (the latter via a journaled
-        recovery transition).  Stateful choosers (RAND's rng) cannot be
-        replayed decision-for-decision; recovery is exact for the
-        deterministic policies."""
+        recovery transition).  Stateful choosers (RAND's rng) restore the
+        generator state snapshotted in each outcome transition, so a job
+        caught mid-``PLACING`` is re-decided from exactly the pre-decision
+        rng state -- recovery is decision-for-decision exact for every
+        registered policy, stochastic ones included."""
         daemon = cls(cluster, store, queue, **kwargs)
         for entry in store.entries():
             daemon._replay(entry)
@@ -297,6 +307,9 @@ class Daemon:
                 if self.feedback == "actual":
                     self.state.observe_finish(record.job, record.gpus,
                                               record.finish)
+            snapshot = entry.payload.get("rng")
+            if snapshot is not None:
+                self._chooser_for(record.tenant).set_state(snapshot)
         else:
             raise ValueError(f"unknown journal entry kind {entry.kind!r}")
 

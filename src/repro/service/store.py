@@ -36,8 +36,9 @@ class JournalEntry:
 
     ``kind`` is ``"submit"`` (payload: tenant, arrival, job fields),
     ``"transition"`` (payload: ``to`` state plus, for RUNNING, the exact
-    ``gpus``/``rho``/``start``; for DONE, ``finish``) or ``"advance"``
-    (payload: the virtual-clock slot ``t`` of a scheduling round)."""
+    ``gpus``/``rho``/``start``; for DONE, ``finish``; for outcomes of a
+    stateful chooser, its post-decision ``rng`` generator state) or
+    ``"advance"`` (payload: the virtual-clock slot ``t`` of a round)."""
 
     seq: int
     ts: float                  # virtual-clock stamp (deterministic tests)

@@ -1,0 +1,202 @@
+"""Columnar branch-vectorised placement vs the scalar oracle: bit-identity.
+
+Mirrors ``tests/test_bisect_equivalence.py`` for the ``placement`` axis:
+the :class:`~repro.core.columnar.ColumnarPlacement` engine must reproduce
+the per-branch scalar walk decision-for-decision --
+
+  * at the engine level: random clusters / jobs / theta ladders, every
+    branch's survival, busy-time clocks, assignment and committed floats
+    against an independent per-branch :func:`try_place` walk;
+  * at the policy level: ``placement="columnar"`` vs ``"scalar"`` ends on
+    the same (theta, kappa) and bit-equal schedules across policies,
+    engines and bisect modes;
+  * trivially for the policies with no columnar path (adaptive / rand /
+    reserved): the param validates and both values coincide.
+
+A hypothesis property sweep runs when hypothesis is installed (the CI
+image may not ship it; the seeded numpy sweep below covers the same
+space deterministically either way).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (Cluster, Job, ScheduleRequest, get_policy,
+                        philly_cluster, philly_workload)
+from repro.core.api import (ColumnarPlacement, PlacementState, finalize,
+                            nominal_rho, try_place)
+from repro.core.sjf_bco import fa_ffp, lbsgf
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                 # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def _philly_case(seed, n_jobs=42, n_servers=8):
+    cluster = philly_cluster(n_servers, seed=seed)
+    mix = ((1, n_jobs // 3), (2, n_jobs // 6), (4, n_jobs // 4),
+           (8, n_jobs // 6), (16, n_jobs // 12))
+    jobs = philly_workload(seed=seed, mix=mix)
+    return cluster, jobs
+
+
+def _random_case(rng, max_servers=6):
+    """A small random cluster + workload + theta ladder + kappa split."""
+    caps = rng.choice([4, 8, 16], size=rng.integers(2, max_servers + 1))
+    cluster = Cluster(tuple(int(c) for c in caps))
+    n = int(rng.integers(4, 14))
+    jobs = [Job(jid=j,
+                num_gpus=int(rng.integers(1, min(cluster.num_gpus, 16) + 1)),
+                iters=int(rng.integers(200, 4000)),
+                grad_size=float(rng.uniform(0.5e-3, 2.0e-3)),
+                batch=int(rng.integers(16, 64)),
+                dt_fwd=float(rng.uniform(2.0e-4, 5.0e-4)),
+                dt_bwd=float(rng.uniform(4.0e-3, 1.2e-2)))
+            for j in range(n)]
+    u = float(rng.uniform(1.0, 4.0))
+    rho_noms = {j.jid: nominal_rho(cluster, j) for j in jobs}
+    floor = max(rho_noms.values()) / u
+    # An ascending ladder straddling the feasibility boundary: some
+    # branches should die, some survive.
+    thetas = sorted(float(floor * f)
+                    for f in rng.uniform(0.3, 40.0, size=rng.integers(3, 9)))
+    kappas = sorted({int(k) for k in
+                     rng.choice([1, 2, 4, 8, 16], size=rng.integers(1, 4))})
+    return cluster, jobs, u, rho_noms, thetas, kappas
+
+
+def _assert_schedules_equal(a, b):
+    assert a.theta == b.theta
+    assert a.kappa == b.kappa
+    assert a.est_makespan == b.est_makespan
+    assert a.max_busy_time == b.max_busy_time
+    assert len(a.assignment) == len(b.assignment)
+    for (j1, g1), (j2, g2) in zip(a.assignment, b.assignment):
+        assert j1 == j2
+        assert np.array_equal(g1, g2)
+    assert np.array_equal(a.est_start, b.est_start)
+    assert np.array_equal(a.est_finish, b.est_finish)
+
+
+def _check_columnar_vs_scalar_walk(cluster, jobs, u, rho_noms, thetas,
+                                   kappas, engine):
+    """Drive one ColumnarPlacement over the (theta, kappa) grid and an
+    independent scalar try_place walk per branch; compare everything."""
+    order = sorted(jobs, key=lambda j: (rho_noms[j.jid], j.jid))
+    pairs = [(float(th), k) for th in thetas for k in kappas]
+    col = ColumnarPlacement(cluster, [th for th, _ in pairs], jobs, u,
+                            engine=engine)
+    kappa_arr = np.asarray([k for _, k in pairs], dtype=np.int64)
+    for job in order:
+        picker_of = (job.num_gpus > kappa_arr).astype(np.int64)
+        col.place(job, rho_noms[job.jid], (fa_ffp, lbsgf), picker_of)
+        if not col.alive.any():
+            break
+    for b, (theta, kappa) in enumerate(pairs):
+        state = PlacementState(cluster, engine=engine)
+        ok = True
+        for job in order:
+            picker = fa_ffp if job.num_gpus <= kappa else lbsgf
+            if not try_place(state, job, picker, rho_noms[job.jid], u,
+                             theta):
+                ok = False
+                break
+        assert bool(col.alive[b]) == ok, (b, theta, kappa)
+        if not ok:
+            assert col.result(b, theta, kappa, "x") is None
+            continue
+        row = int(col.row_of[b])
+        assert np.array_equal(col.U[row], state.U), (b, theta, kappa)
+        assert np.array_equal(col.R[row], state.R), (b, theta, kappa)
+        _assert_schedules_equal(col.result(b, theta, kappa, "x"),
+                                finalize(state, len(jobs), theta, kappa,
+                                         "x"))
+
+
+class TestColumnarEngineRandomSweep:
+    """Random clusters / jobs / ladders, engine-level decision identity."""
+
+    @pytest.mark.parametrize("seed", range(12))
+    def test_random_case_matches_scalar_walk(self, seed):
+        rng = np.random.default_rng(seed)
+        cluster, jobs, u, rho_noms, thetas, kappas = _random_case(rng)
+        engine = ("incremental", "batched", "reference")[seed % 3]
+        _check_columnar_vs_scalar_walk(cluster, jobs, u, rho_noms, thetas,
+                                       kappas, engine)
+
+
+class TestColumnarPolicyEquivalence:
+    @pytest.mark.parametrize("seed", range(2))
+    @pytest.mark.parametrize("engine", ["incremental", "batched",
+                                        "reference"])
+    @pytest.mark.parametrize("bisect", ["speculative", "sequential"])
+    def test_sjf_bco(self, seed, engine, bisect):
+        cluster, jobs = _philly_case(seed)
+        results = {}
+        for placement in ("scalar", "columnar"):
+            request = ScheduleRequest(
+                cluster=cluster, jobs=jobs, horizon=2400,
+                params={"engine": engine, "bisect": bisect,
+                        "placement": placement})
+            results[placement] = get_policy("sjf-bco")(request)
+        _assert_schedules_equal(results["scalar"], results["columnar"])
+
+    @pytest.mark.parametrize("seed", range(2))
+    @pytest.mark.parametrize("policy", ["ff", "ls"])
+    @pytest.mark.parametrize("bisect", ["speculative", "sequential"])
+    def test_single_picker_policies(self, seed, policy, bisect):
+        cluster, jobs = _philly_case(seed)
+        results = {}
+        for placement in ("scalar", "columnar"):
+            request = ScheduleRequest(
+                cluster=cluster, jobs=jobs, horizon=2400,
+                params={"bisect": bisect, "placement": placement})
+            results[placement] = get_policy(policy)(request)
+        _assert_schedules_equal(results["scalar"], results["columnar"])
+
+    @pytest.mark.parametrize("policy,params", [
+        ("sjf-bco-adaptive", {}),
+        ("rand", {"seed": 3}),
+        ("reserved", {"reserved_fraction": 0.25}),
+    ])
+    def test_scalar_only_policies_accept_the_param(self, policy, params):
+        """Policies with no columnar path still validate ``placement``
+        and coincide trivially for both values."""
+        cluster, jobs = _philly_case(1, n_jobs=24, n_servers=6)
+        results = {}
+        for placement in ("scalar", "columnar"):
+            request = ScheduleRequest(
+                cluster=cluster, jobs=jobs, horizon=2400,
+                params={**params, "placement": placement})
+            results[placement] = get_policy(policy)(request)
+        _assert_schedules_equal(results["scalar"], results["columnar"])
+        with pytest.raises(ValueError, match="placement"):
+            get_policy(policy)(ScheduleRequest(
+                cluster=cluster, jobs=jobs, horizon=2400,
+                params={**params, "placement": "bogus"}))
+
+    def test_warm_start_falls_back_to_scalar(self):
+        """warm_start changes the search trajectory, so columnar must
+        quietly fall back -- both placements give the warm result."""
+        cluster, jobs = _philly_case(0, n_jobs=24, n_servers=6)
+        results = {}
+        for placement in ("scalar", "columnar"):
+            request = ScheduleRequest(
+                cluster=cluster, jobs=jobs, horizon=2400,
+                params={"warm_start": True, "placement": placement})
+            results[placement] = get_policy("sjf-bco")(request)
+        _assert_schedules_equal(results["scalar"], results["columnar"])
+
+
+if HAVE_HYPOTHESIS:                                 # pragma: no branch
+    class TestColumnarHypothesis:
+        @settings(max_examples=25, deadline=None)
+        @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+        def test_property_random_sweep(self, seed):
+            rng = np.random.default_rng(seed)
+            cluster, jobs, u, rho_noms, thetas, kappas = _random_case(rng)
+            engine = ("incremental", "batched", "reference")[seed % 3]
+            _check_columnar_vs_scalar_walk(cluster, jobs, u, rho_noms,
+                                           thetas, kappas, engine)

@@ -5,8 +5,9 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.core import (ScheduleRequest, get_policy, philly_cluster,
-                        philly_workload, simulate)
+from repro.core import (Cluster, Job, PlacementState, ScheduleRequest,
+                        get_policy, philly_cluster, philly_workload,
+                        simulate)
 from repro.service import (Daemon, InvalidTransition, JobRecord, JobState,
                            MemoryStore, QueueManager, SchedulerService,
                            SqliteStore, SubmitRequest, TenantConfig)
@@ -256,6 +257,62 @@ class TestDaemonIdentity:
             SchedulerService(philly_cluster(4, seed=1), feedback="oracle")
 
 
+class TestObserveFinish:
+    """``feedback="actual"`` repricing: after ``observe_finish`` the
+    rho-hat snapshot and real-time clocks match a hand-computed
+    pull-back."""
+
+    @staticmethod
+    def _job(jid, gpus):
+        return Job(jid=jid, num_gpus=gpus, iters=1000, grad_size=1e-3,
+                   batch=32, dt_fwd=1e-4, dt_bwd=1e-3)
+
+    def test_hand_computed_pullback(self):
+        cluster = Cluster(capacities=(4, 4))
+        state = PlacementState(cluster)
+        # Job 0 straddles both servers: y = [4, 2], 0 < y_s < G on both.
+        a = self._job(0, 6)
+        gpus_a = np.arange(6)
+        state.commit(a, gpus_a, rho=12.0, start=0.0, u=1.5)
+        # Job 1 then reuses GPUs 3,4 (one per server, itself a straddler)
+        # -- their real-time clocks now belong to job 1, so job 0's
+        # pull-back must NOT touch them.
+        b = self._job(1, 2)
+        state.commit(b, np.array([3, 4]), rho=3.0, start=12.0, u=1.5)
+        assert state._straddle_fin == [[12.0, 15.0], [12.0, 15.0]]
+
+        state.observe_finish(a, gpus_a, 9.5)
+
+        assert state.est_finish[0] == 9.5            # snapshot repriced
+        # Straddler suffix lists: job 0's 12.0 replaced by 9.5 on both
+        # servers; job 1's 15.0 entries untouched.
+        assert state._straddle_fin == [[9.5, 15.0], [9.5, 15.0]]
+        # GPUs whose R was last written by job 0 pull back to 9.5 ...
+        assert np.array_equal(state.R[[0, 1, 2, 5]], np.full(4, 9.5))
+        # ... but GPUs 3,4 keep job 1's later clock, and busy-time U is
+        # never rewritten (Eq. 15 already charged rho/u at commit).
+        assert np.array_equal(state.R[[3, 4]], np.full(2, 15.0))
+        expect_u = np.zeros(8)
+        expect_u[:6] += 12.0 / 1.5
+        expect_u[3:5] += 3.0 / 1.5
+        assert np.array_equal(state.U, expect_u)
+        # A second observation of the SAME finish is a no-op.
+        before = [list(f) for f in state._straddle_fin]
+        state.observe_finish(a, gpus_a, 9.5)
+        assert state._straddle_fin == before
+
+    def test_idempotent_when_estimate_was_exact(self):
+        cluster = Cluster(capacities=(4, 4))
+        state = PlacementState(cluster)
+        a = self._job(0, 6)
+        gpus = np.arange(6)
+        state.commit(a, gpus, rho=10.0, start=0.0, u=1.5)
+        r_before = state.R.copy()
+        state.observe_finish(a, gpus, 10.0)          # finish == estimate
+        assert np.array_equal(state.R, r_before)
+        assert state._straddle_fin == [[10.0], [10.0]]
+
+
 class TestCrashRecovery:
     def test_fault_injection_every_journal_prefix(self):
         """Kill the daemon after EVERY journaled event; recovery plus the
@@ -281,6 +338,50 @@ class TestCrashRecovery:
             sched, _ = daemon.drain()
             assert _same_schedule(full, sched), f"prefix {k}"
         assert placing_seen > 0     # the interesting crash window was hit
+
+    def test_rand_recovery_replays_rng_decisions(self):
+        """Stateful RAND: the rng snapshot journaled inside each outcome
+        transition restores the generator, so killing the daemon after
+        EVERY journal prefix still reproduces the stochastic schedule
+        decision-for-decision -- the same guarantee the deterministic
+        policies get."""
+        cluster = philly_cluster(8, seed=1)
+        jobs = _jobs(14)
+        arrivals = _arrivals(len(jobs))
+        svc = SchedulerService(cluster, policy="rand", params={"seed": 11})
+        _submit_all(svc, jobs, arrivals)
+        full, _ = svc.drain()
+        store = svc.daemon.store
+        rng_snapshots = sum(1 for e in store.entries()
+                            if e.kind == "transition" and "rng" in e.payload)
+        assert rng_snapshots == len(jobs)   # one per decision outcome
+        cfg = TenantConfig("rand", params=(("seed", 11),))
+        for k in range(len(store) + 1):
+            daemon = Daemon.recover(cluster, store.prefix(k),
+                                    QueueManager(cfg))
+            for j, a in list(zip(jobs, arrivals))[len(daemon.jobs):]:
+                daemon.admit(j, int(a))
+            sched, _ = daemon.drain()
+            assert _same_schedule(full, sched), f"prefix {k}"
+
+    def test_sqlite_rng_state_roundtrip(self, tmp_path):
+        """PCG64 state ints (128-bit) survive the sqlite JSON round-trip,
+        so a reopened store recovers RAND exactly too."""
+        cluster = philly_cluster(6, seed=2)
+        jobs = _jobs(10)
+        arrivals = _arrivals(len(jobs), hi=60)
+        path = str(tmp_path / "rand.db")
+        svc = SchedulerService(cluster, policy="rand", params={"seed": 5},
+                               store_path=path)
+        _submit_all(svc, jobs, arrivals)
+        full, _ = svc.drain()
+        svc.close()
+        cfg = TenantConfig("rand", params=(("seed", 5),))
+        back = SqliteStore(path)
+        daemon = Daemon.recover(cluster, back, QueueManager(cfg))
+        live = svc.daemon._choosers["default"].get_state()
+        assert daemon._choosers["default"].get_state() == live
+        back.close()
 
     def test_sqlite_crash_and_reopen(self, tmp_path):
         cluster = philly_cluster(8, seed=1)
