@@ -1,0 +1,162 @@
+"""Cross-policy leaderboard over the paper's experiment grids.
+
+Every registered policy -- the paper's SJF-BCO and its §7 baselines plus
+the preemptive/elastic family (``sjf-bco-dynamic``, ``gadget-elastic``,
+``wang-ca``) -- runs the same :func:`repro.core.run_scenario` grids:
+
+  * the Fig. 4 batch grid (Philly mix, 20 servers, |J| sweep),
+  * a Fig. 6-style server sweep at fixed |J|,
+  * a Fig. 7-style online sweep over Poisson arrival rates,
+
+reporting makespan, average JCT, average queueing delay and the
+time-weighted mean contention level per (grid point, policy) into
+``BENCH_leaderboard.json``.
+
+``--quick`` doubles as CI's correctness smoke with hard asserts:
+
+  * ``sjf-bco-dynamic`` makespan <= ``sjf-bco`` on every Fig. 4 point
+    (the batch portfolio guarantees it by construction);
+  * scalar vs incremental oracle identity UNDER PREEMPTION: the dynamic
+    policy's segmented schedule is bit-identical across contention
+    engines, and its simulation is event-for-event identical across the
+    readiness axes.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_leaderboard.py [--quick] [--out F]
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (ArrivalSpec, ClusterSpec, Cluster, Job, Scenario,
+                        ScheduleRequest, WorkloadSpec, get_policy,
+                        run_scenario, simulate)
+
+try:
+    from benchmarks._bench_util import (make_parser, same_schedule, same_sim,
+                                        write_report)
+except ImportError:
+    from _bench_util import (make_parser, same_schedule, same_sim,
+                             write_report)
+
+POLICIES = ("sjf-bco", "sjf-bco-dynamic", "gadget-elastic", "wang-ca",
+            "ff", "ls", "rand", "reserved")
+HORIZON = 1200
+SEED = 1
+
+
+def _row(policy: str, scenario: Scenario, point: dict) -> dict:
+    rep = run_scenario(scenario)
+    return {"policy": policy, **point,
+            "makespan": float(rep.makespan),
+            "avg_jct": float(rep.avg_jct),
+            "avg_queueing_delay": float(rep.avg_queueing_delay),
+            "mean_contention": float(rep.contention.mean),
+            "segments": len(rep.schedule.assignment),
+            "preempted": rep.schedule.quotas is not None}
+
+
+def fig4_grid(n_jobs_sweep) -> list[dict]:
+    """Batch Philly grid: |J| sweep at 20 servers (the Fig. 4 setting)."""
+    rows = []
+    for n in n_jobs_sweep:
+        for policy in POLICIES:
+            rows.append(_row(policy, Scenario(
+                cluster=ClusterSpec(num_servers=20, seed=SEED),
+                workload=WorkloadSpec(seed=SEED, num_jobs=n),
+                policy=policy, horizon=HORIZON),
+                {"grid": "fig4", "n_jobs": n}))
+            print("  fig4 |J|=%3d %-16s makespan %8.1f avg JCT %8.1f" % (
+                n, rows[-1]["policy"], rows[-1]["makespan"],
+                rows[-1]["avg_jct"]))
+    return rows
+
+
+def fig6_grid(servers_sweep, n_jobs: int) -> list[dict]:
+    """Server-count sweep at fixed |J| (the Fig. 6 scarcity axis)."""
+    rows = []
+    for s in servers_sweep:
+        for policy in POLICIES:
+            rows.append(_row(policy, Scenario(
+                cluster=ClusterSpec(num_servers=s, seed=SEED),
+                workload=WorkloadSpec(seed=SEED, num_jobs=n_jobs),
+                policy=policy, horizon=HORIZON),
+                {"grid": "fig6", "servers": s, "n_jobs": n_jobs}))
+    return rows
+
+
+def fig7_grid(rates_sweep, n_jobs: int) -> list[dict]:
+    """Online Poisson sweep (the Fig. 7 load axis): queueing delay and
+    preemption live here."""
+    rows = []
+    for rate in rates_sweep:
+        for policy in POLICIES:
+            rows.append(_row(policy, Scenario(
+                cluster=ClusterSpec(num_servers=8, seed=SEED),
+                workload=WorkloadSpec(seed=SEED, num_jobs=n_jobs),
+                arrivals=ArrivalSpec(rate=rate, seed=SEED),
+                policy=policy, horizon=10**6),
+                {"grid": "fig7", "rate": rate, "n_jobs": n_jobs}))
+    return rows
+
+
+def validate_fig4(rows: list[dict]) -> dict:
+    """Hard assert: the dynamic portfolio never loses to SJF-BCO on
+    makespan, at every Fig. 4 grid point."""
+    points = sorted({r["n_jobs"] for r in rows if r["grid"] == "fig4"})
+    for n in points:
+        by = {r["policy"]: r for r in rows
+              if r["grid"] == "fig4" and r["n_jobs"] == n}
+        assert by["sjf-bco-dynamic"]["makespan"] <= by["sjf-bco"]["makespan"], \
+            f"fig4 |J|={n}: dynamic lost to sjf-bco"
+    return {"dynamic_never_worse_fig4": True, "points": points}
+
+
+def preemption_oracle_smoke() -> dict:
+    """Scalar vs incremental identity under preemption (hard asserts)."""
+    cluster = Cluster(capacities=(4, 4))
+    jobs = [Job(jid=0, num_gpus=8, iters=4000, grad_size=0.25, batch=32,
+                dt_fwd=3e-4, dt_bwd=8e-3)]
+    jobs += [Job(jid=i, num_gpus=2, iters=200, grad_size=0.05, batch=32,
+                 dt_fwd=3e-4, dt_bwd=8e-3) for i in range(1, 4)]
+    arrivals = np.array([0, 5, 6, 7], dtype=np.int64)
+    scheds = {}
+    for engine in ("reference", "incremental"):
+        request = ScheduleRequest(cluster=cluster, jobs=jobs,
+                                  arrivals=arrivals, horizon=10**6,
+                                  params={"engine": engine})
+        scheds[engine] = get_policy("sjf-bco-dynamic")(request)
+    assert scheds["reference"].quotas is not None, \
+        "oracle smoke trace no longer triggers preemption"
+    assert same_schedule(scheds["reference"], scheds["incremental"]), \
+        "engine divergence under preemption"
+    quotas = scheds["reference"].quotas
+    sims = {r: simulate(cluster, jobs, scheds["reference"].assignment,
+                        arrivals=arrivals, quotas=quotas, readiness=r)
+            for r in ("tracked", "rescan")}
+    assert same_sim(sims["tracked"], sims["rescan"]), \
+        "readiness divergence under preemption"
+    return {"engines_identical": True, "readiness_identical": True,
+            "segments": len(scheds["reference"].assignment)}
+
+
+def main() -> None:
+    args = make_parser(__doc__, "BENCH_leaderboard.json").parse_args()
+    if args.quick:
+        rows = (fig4_grid([16]) + fig6_grid([8], 16)
+                + fig7_grid([0.5], 16))
+    else:
+        rows = (fig4_grid([16, 32, 64]) + fig6_grid([12, 20], 48)
+                + fig7_grid([0.2, 0.5, 2.0], 32))
+    report = {
+        "bench": "leaderboard", "quick": bool(args.quick),
+        "policies": list(POLICIES),
+        "rows": rows,
+        "validation": {**validate_fig4(rows),
+                       "preemption_oracle": preemption_oracle_smoke()},
+    }
+    write_report(report, args.out)
+
+
+if __name__ == "__main__":
+    main()

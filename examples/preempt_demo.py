@@ -1,0 +1,73 @@
+"""Preemption demo: a long job yields its ring to two short arrivals.
+
+A 2-server cluster runs one 8-GPU job with a long residual (jid 0).  Two
+short 2-GPU jobs arrive while it runs.  Under plain SJF-BCO the paper's
+Eq. (3) forbids touching a running gang, so the short jobs queue behind
+the monster.  The ``sjf-bco-dynamic`` chooser instead *evicts* jid 0
+(checkpointing its residual work via :func:`repro.core.preempt.evict`),
+places the short arrival first, then re-places the residual -- the short
+jobs jump the queue, the long job resumes where it left off, and the
+whole decision lands in the daemon's journal as one atomic
+PLACING..decided bracket (EVICT records included), so a crashed daemon
+replays it exactly.
+
+The demo prints the journal's preemption records, the segmented schedule
+(jid 0 appears once per resume), and the average-JCT win over the
+non-preemptive baseline.
+
+Run:  PYTHONPATH=src python examples/preempt_demo.py
+"""
+import numpy as np
+
+from repro.core import Cluster, Job, ScheduleRequest, get_policy, simulate
+from repro.service import Daemon, QueueManager, TenantConfig
+
+cluster = Cluster(capacities=(4, 4))
+long_job = Job(jid=0, num_gpus=8, iters=4000, grad_size=0.25, batch=32,
+               dt_fwd=3e-4, dt_bwd=8e-3)
+shorts = [Job(jid=i, num_gpus=2, iters=200, grad_size=0.05, batch=32,
+              dt_fwd=3e-4, dt_bwd=8e-3) for i in (1, 2)]
+jobs = [long_job, *shorts]
+arrivals = [0, 5, 6]
+
+# -- preemptive daemon: the short arrivals evict the long job --------------
+daemon = Daemon(cluster, horizon=10**6,
+                queue=QueueManager(TenantConfig(policy="sjf-bco-dynamic")))
+for job, arrival in zip(jobs, arrivals):
+    daemon.admit(job, arrival)
+schedule, sim = daemon.drain()
+
+evictions = [e for e in daemon.store.entries()
+             if e.kind in ("evict", "resize")]
+print(f"journal: {len(evictions)} eviction record(s)")
+for e in evictions:
+    print(f"  seq {e.seq:2d}  {e.kind} jid={e.jid} at t={e.payload['t']:.2f}"
+          f"  residual iters={e.payload['iters']:.0f}")
+
+print("\nsegmented schedule (jid 0 resumes once per eviction):")
+for seg, ((jid, gpus), quota) in enumerate(zip(schedule.assignment,
+                                               schedule.quotas)):
+    print(f"  seg {seg}: jid {jid} on GPUs {gpus.tolist()} "
+          f"({quota:.0f} iters)")
+
+# -- baseline: plain SJF-BCO must make the shorts wait ---------------------
+request = ScheduleRequest(cluster=cluster, jobs=jobs,
+                          arrivals=np.asarray(arrivals, dtype=np.int64),
+                          horizon=10**6)
+base = get_policy("sjf-bco")(request)
+base_sim = simulate(cluster, jobs, base.assignment,
+                    arrivals=np.asarray(arrivals, dtype=np.int64))
+
+print(f"\navg JCT: {sim.avg_jct:.1f} preemptive "
+      f"vs {base_sim.avg_jct:.1f} non-preemptive "
+      f"({base_sim.avg_jct - sim.avg_jct:+.1f} slots saved; "
+      f"makespan {sim.makespan:.0f} vs {base_sim.makespan:.0f})")
+assert sim.avg_jct < base_sim.avg_jct
+assert sim.completed == base_sim.completed == len(jobs)
+
+# -- the journal replays the whole decision atomically ---------------------
+twin = Daemon.recover(cluster, daemon.store, horizon=10**6,
+                      queue=QueueManager(TenantConfig(policy="sjf-bco-dynamic")))
+assert np.array_equal(np.asarray(twin.state.seg_quota),
+                      np.asarray(daemon.state.seg_quota))
+print("\nrecovered twin daemon replays the eviction bracket bit-for-bit")

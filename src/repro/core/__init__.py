@@ -33,6 +33,7 @@ from repro.core.contention import (IncrementalEval, IterModel,
                                    predict_exec_time, reset_eval_counts,
                                    scalar_tau_many, slots_for, stack_model,
                                    tau_backend, tau_bounds, tau_ladder)
+from repro.core.preempt import evict, evictable, replace, resize
 from repro.core.simulator import SimEvent, SimResult, simulate
 from repro.core.sjf_bco import fa_ffp, lbsgf
 from repro.core.scenario import (ArrivalSpec, ClusterSpec, ContentionStats,
@@ -60,5 +61,7 @@ __all__ = [
     "SimEvent", "SimResult", "simulate",
     # algorithm subroutines
     "fa_ffp", "lbsgf",
+    # preemption / elasticity primitives
+    "evict", "evictable", "replace", "resize",
     "TheoryReport", "report",
 ]

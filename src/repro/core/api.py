@@ -145,6 +145,11 @@ class ScheduleResult:
     kappa: int | None = None
     policy: str = ""
     max_busy_time: float = 0.0
+    # Per-assignment-entry iteration quotas for preemptive schedules (a
+    # jid may then appear in several entries -- its checkpointed
+    # segments); None for the non-preemptive Eq. (3) setting.  Passed to
+    # :func:`repro.core.simulator.simulate` as ``quotas``.
+    quotas: np.ndarray | None = None
 
 
 @runtime_checkable
@@ -173,7 +178,7 @@ def _load_builtins() -> None:
     if _BUILTINS_LOADED:
         return
     _BUILTINS_LOADED = True
-    from repro.core import baselines, extensions, sjf_bco  # noqa: F401
+    from repro.core import baselines, extensions, preempt, sjf_bco  # noqa: F401
 
 
 def register_policy(name: str, *aliases: str
@@ -351,6 +356,25 @@ class PlacementState:
         self.placed_y: list[np.ndarray] = []   # per-server GPU counts
         self.est_start: dict[int, float] = {}
         self.est_finish: dict[int, float] = {}
+        # Per-assignment-entry (segment) bookkeeping.  Non-preemptive
+        # policies commit one entry per job and never read these; the
+        # preemption primitives (:mod:`repro.core.preempt`) need the EXACT
+        # committed floats (est_finish - est_start would not round-trip
+        # rho) plus the entry <-> placed-row linkage to undo/truncate a
+        # commit.  ``seg_quota`` is each entry's planned iteration share
+        # (the job's full F_j until an eviction splits it), which is what
+        # the simulator's per-segment execution consumes.
+        self.seg_rho: list[float] = []         # committed rho per entry
+        self.seg_start: list[float] = []       # committed gang start per entry
+        self.seg_quota: list[float] = []       # planned iterations per entry
+        self.seg_prev: list[int] = []          # previous entry of same jid, -1
+        self.seg_row: list[int] = []           # placed_jobs row of the entry
+        self.placed_fin: list[float] = []      # per-ROW est finish (rows of a
+        #   split job carry their own truncated finishes; est_finish keeps
+        #   only the job's latest)
+        self._entry_of: dict[int, int] = {}    # jid -> latest live entry
+        self.preempted = False                 # any evict happened here
+        self.now = 0.0                         # decision clock (advance_to)
         # Per-server sorted est_finish of straddling placed jobs (Eq. 6
         # suffix counts for the incremental engine; maintained by commit).
         # Cloning shares these lists copy-on-write: ``_fin_owned[s]`` says
@@ -364,6 +388,10 @@ class PlacementState:
         # re-commit bit-identically (est_finish - est_start would NOT
         # round-trip rho through float subtraction).
         self.commit_hook: "Callable[[Job, np.ndarray, float, float], None] | None" = None
+        # Optional observer called by :func:`repro.core.preempt.evict` with
+        # (job, t_ev, residual_job) after an eviction is applied -- the
+        # service daemon journals EVICT/RESIZE records here.
+        self.evict_hook: "Callable[[Job, float, Job], None] | None" = None
 
     def _y_of(self, gpus: np.ndarray) -> np.ndarray:
         return np.bincount(self.cluster.gpu_server[gpus],
@@ -391,21 +419,38 @@ class PlacementState:
         new.placed_y = list(self.placed_y)
         new.est_start = dict(self.est_start)
         new.est_finish = dict(self.est_finish)
+        new.seg_rho = list(self.seg_rho)
+        new.seg_start = list(self.seg_start)
+        new.seg_quota = list(self.seg_quota)
+        new.seg_prev = list(self.seg_prev)
+        new.seg_row = list(self.seg_row)
+        new.placed_fin = list(self.placed_fin)
+        new._entry_of = dict(self._entry_of)
+        new.preempted = self.preempted
+        new.now = self.now
         new._straddle_fin = list(self._straddle_fin)
         self._fin_owned = [False] * self.cluster.num_servers
         new._fin_owned = [False] * self.cluster.num_servers
         new.commit_hook = None      # observers watch one state, not forks
+        new.evict_hook = None
         return new
 
     def advance_to(self, t: float) -> None:
         """Advance the real-time clocks to ``t`` (an arrival instant): a
-        GPU idle before the arrival cannot have been used earlier."""
+        GPU idle before the arrival cannot have been used earlier.  Also
+        records ``t`` as :attr:`now`, the state's decision clock -- the
+        preemptive choosers read it as the eviction instant."""
+        self.now = max(self.now, float(t))
         np.maximum(self.R, float(t), out=self.R)
 
     def _overlaps(self, start: float) -> np.ndarray:
-        """Mask over placed jobs whose estimated window covers ``start``."""
-        return np.asarray([self.est_finish[jb.jid] > start + 1e-9
-                           for jb in self.placed_jobs], dtype=bool)
+        """Mask over placed rows whose estimated window covers ``start``.
+
+        Per-ROW finishes (not per-jid): segments of a preempted job carry
+        their own truncated finishes; for non-preemptive states the row
+        finish equals ``est_finish[jid]`` exactly."""
+        return np.asarray([fin > start + 1e-9 for fin in self.placed_fin],
+                          dtype=bool)
 
     def _probe_p(self, job: Job, y_j: np.ndarray, start: float
                  ) -> tuple[int, int]:
@@ -501,12 +546,22 @@ class PlacementState:
         (Eq. 15 accounting + the rho-hat snapshot)."""
         self.U[gpus] += rho / u
         self.R[gpus] = start + rho
-        self.assignment.append((job.jid, gpus))
+        jid = job.jid
+        prev = self._entry_of.get(jid, -1)
+        self.assignment.append((jid, gpus))
         y = self._y_of(gpus)
         self.placed_jobs.append(job)
         self.placed_y.append(y)
-        self.est_start[job.jid] = start
-        self.est_finish[job.jid] = start + rho
+        if prev < 0:                  # first segment sets the job's start
+            self.est_start[jid] = start
+        self.est_finish[jid] = start + rho
+        self.seg_rho.append(rho)
+        self.seg_start.append(start)
+        self.seg_quota.append(float(job.iters))
+        self.seg_prev.append(prev)
+        self.seg_row.append(len(self.placed_jobs) - 1)
+        self.placed_fin.append(start + rho)
+        self._entry_of[jid] = len(self.assignment) - 1
         G = job.num_gpus
         fin = start + rho
         for s, ys in enumerate(y.tolist()):
@@ -540,6 +595,9 @@ class PlacementState:
             return
         gpus = np.asarray(gpus)
         self.est_finish[jid] = finish
+        entry = self._entry_of.get(jid, -1)
+        if entry >= 0:                 # keep the row finish in sync
+            self.placed_fin[self.seg_row[entry]] = finish
         y = self._y_of(gpus)
         G = job.num_gpus
         for s, ys in enumerate(y.tolist()):
@@ -778,7 +836,9 @@ def finalize(state: PlacementState, n_jobs: int, theta: float,
                           est_finish=est_finish,
                           est_makespan=float(est_finish.max(initial=0.0)),
                           theta=theta, kappa=kappa, policy=policy,
-                          max_busy_time=float(state.U.max(initial=0.0)))
+                          max_busy_time=float(state.U.max(initial=0.0)),
+                          quotas=np.asarray(state.seg_quota)
+                          if state.preempted else None)
 
 
 # --------------------------------------------------------------------------

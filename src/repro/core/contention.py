@@ -53,9 +53,11 @@ EVAL_COUNTS = {
     "batched_calls": 0,     # evaluate_many() calls (one vectorised pass)
     "batched_rows": 0,      # total candidates scored across those calls
     "incremental_updates": 0,  # IncrementalEval row add/remove operations
+    "incremental_removes": 0,  # the remove() subset of those operations
     "probes": 0,            # O(S) single-job tau probes (no full pass)
     "ladder_calls": 0,      # simulator multi-window tau_ladder batches
     "ladder_rows": 0,       # total completion stages across those batches
+    "evictions": 0,         # preempt.evict() live-schedule row removals
 }
 
 
@@ -500,6 +502,7 @@ class IncrementalEval:
         self._apply_count_delta(row, row_straddle, -1)
         self._free.append(row)
         EVAL_COUNTS["incremental_updates"] += 1
+        EVAL_COUNTS["incremental_removes"] += 1
 
     def _refresh_terms_scalar(self, r: int) -> None:
         """Recompute k/B/exchange/tau/phi for one row from its current p.

@@ -176,6 +176,7 @@ def run_scenario(scenario: Scenario, sim_horizon: int = 10**7) -> RunReport:
     request = build_request(scenario)
     schedule = get_policy(scenario.policy)(request)
     sim = simulate(request.cluster, request.jobs, schedule.assignment,
-                   horizon=sim_horizon, arrivals=request.arrivals)
+                   horizon=sim_horizon, arrivals=request.arrivals,
+                   quotas=schedule.quotas)
     return RunReport(scenario=scenario, schedule=schedule, sim=sim,
                      contention=ContentionStats.from_sim(sim))

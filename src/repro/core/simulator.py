@@ -5,13 +5,28 @@ schedule, which has no closed form because contention (Eq. 6) depends on the
 time-varying set of concurrently active jobs.  This simulator evaluates it:
 
   * a schedule is an ordered assignment [(job, gpu_ids), ...];
-  * each GPU serves its assigned jobs FIFO in schedule order;
-  * a job starts (gang-scheduled, non-preemptive, Eqs. 1-5) when it reaches
-    the head of *all* its GPUs' queues;
+  * each GPU serves its assigned entries FIFO in schedule order;
+  * an entry starts (gang-scheduled, Eqs. 1-5) when it reaches the head of
+    *all* its GPUs' queues;
   * while active, it progresses phi_j[t] = floor(1/tau_j[t]) iterations per
     slot, with tau recomputed from Eq. (8) every time the active set changes;
-  * it completes once F_j iterations are accumulated (Eq. 9) and releases
-    its GPUs simultaneously.
+  * it completes once its iteration quota is accumulated (Eq. 9) and
+    releases its GPUs simultaneously.
+
+In the paper's non-preemptive Eq. (3) setting every job is exactly one
+assignment entry with quota F_j.  Preemptive schedules
+(:mod:`repro.core.preempt`) may list a job id several times -- its
+checkpointed SEGMENTS, each carrying an iteration quota (the
+``quotas`` argument, produced by ``ScheduleResult.quotas``); segments of
+one job execute in assignment order (a segment cannot start before its
+predecessor completes -- the checkpoint-restart dependency), may sit on
+different GPU sets (migration) and even different worker counts (elastic
+resize; the contention terms use the segment's width).  The job starts
+at its first segment's start and finishes at its last segment's finish.
+All internal bookkeeping is keyed by assignment entry; for
+single-segment schedules (quotas=None) every ordering tie-break reduces
+to the job-id FIFO order of earlier releases, so results are
+bit-identical to the non-preemptive engine.
 
 Event-driven between active-set changes (contention is piecewise constant),
 so the engine is exact w.r.t. the slot model but runs in O(events).  Under
@@ -21,21 +36,23 @@ each start/finish is one O(S + affected) row update instead of a full
 [J, S] re-evaluation -- with bit-identical results to the ``"reference"``
 per-window :func:`~repro.core.contention.evaluate`.
 
-Readiness tracking (which queued jobs may start at an event boundary) also
-has two bit-identical modes, selected with ``readiness``:
+Readiness tracking (which queued entries may start at an event boundary)
+also has two bit-identical modes, selected with ``readiness``:
 
   * ``"tracked"`` (default) -- incremental: per-GPU queue-head pointers and
-    a per-job "GPUs-at-head" counter, updated only when a job finishes
-    (O(G_j) per completion), plus arrival-sorted heaps.  Each event touches
-    only the jobs it affects.
-  * ``"rescan"`` -- the reference O(J * G) per-event rescan of every
-    scheduled job against every queue head, kept as the semantics oracle
+    a per-entry "GPUs-at-head" counter, updated only when an entry finishes
+    (O(G) per completion), plus arrival-sorted heaps.  Each event touches
+    only the entries it affects.  Segment precedence enters as one extra
+    gate: an entry whose GPUs are all at head but whose predecessor segment
+    is unfinished parks until that completion re-checks it.
+  * ``"rescan"`` -- the reference O(E * G) per-event rescan of every
+    scheduled entry against every queue head, kept as the semantics oracle
     (``tests/test_simulator_equivalence.py`` pins event-for-event
     equality).
 
-Both modes start ready jobs in sorted job-id order (the FIFO tie-break),
-so the SimEvent stream, start/finish arrays and all derived metrics are
-identical.
+Both modes start ready entries in sorted (job id, segment) order (the
+FIFO tie-break), so the SimEvent stream, start/finish arrays and all
+derived metrics are identical.
 """
 from __future__ import annotations
 
@@ -74,7 +91,7 @@ class SimEvent:
 
     t: int                     # window start (slot)
     dt: int                    # window length (slots)
-    active: int                # #concurrently running jobs (0 = idle gap)
+    active: int                # #concurrently running entries (0 = idle gap)
     contention: int            # max p_j over the active set (Eq. 6)
     busy_gpus: int             # #GPUs occupied during the window
 
@@ -89,8 +106,9 @@ class SimResult:
     completed: int
     horizon_hit: bool
     peak_contention: int       # max p_j[t] observed
-    busy_gpu_slots: float      # sum over jobs of in-service duration * G_j
+    busy_gpu_slots: float      # sum over entries of in-service time * width
     total_gpu_slots: float     # makespan * N
+
     events: list[SimEvent] = dataclasses.field(default_factory=list)
 
     @property
@@ -114,21 +132,32 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
              arrivals: np.ndarray | None = None,
              engine: str | None = None,
              readiness: str = "tracked",
-             stepping: str | None = None) -> SimResult:
+             stepping: str | None = None,
+             quotas: np.ndarray | list | None = None) -> SimResult:
     """Execute ``assignment`` on ``cluster`` and return actual timings.
 
     ``arrivals[j]`` (optional) forbids starting job j before its arrival
-    slot (online scheduling, core/online.py); ``avg_jct`` is then the mean
-    of ``finish - arrival`` over completed jobs (with ``arrivals=None``
+    slot (online scheduling); ``avg_jct`` is then the mean of
+    ``finish - arrival`` over completed jobs (with ``arrivals=None``
     every job arrives at slot 0, so it reduces to the mean finish slot).
+
+    ``quotas`` (optional) gives the iteration quota of each assignment
+    entry (same length/order as ``assignment``) and unlocks the
+    preemptive interpretation: a job id may then appear in several
+    entries -- its checkpoint-restart segments, executed in assignment
+    order -- and an entry's GPU count may differ from the job's
+    requested G_j (elastic resize).  Without it (the default), every
+    job must appear exactly once with exactly its requested GPUs and
+    its quota is F_j -- the paper's Eq. (3) setting, bit-identical to
+    the pre-preemption engine.
 
     ``engine`` selects the contention-model evaluation strategy:
     ``"reference"`` re-evaluates each window from scratch; anything else
     (``"incremental"``, and ``"batched"`` -- which has no meaning for the
     one-placement-per-window simulator) maintains the active set
     incrementally across windows.  ``readiness`` selects how queue-ready
-    jobs are discovered (``"tracked"`` incremental counters, the default,
-    vs the ``"rescan"`` reference; see the module docstring).
+    entries are discovered (``"tracked"`` incremental counters, the
+    default, vs the ``"rescan"`` reference; see the module docstring).
 
     ``stepping`` selects how window models are produced between active-set
     changes:
@@ -146,7 +175,8 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
         off (tracked readiness, non-reference engine), else ``"single"``.
 
     Results are identical across engines, readiness and stepping modes
-    (pinned by ``tests/test_simulator_equivalence.py`` and
+    (pinned by ``tests/test_simulator_equivalence.py``,
+    ``tests/test_preempt_equivalence.py`` and
     ``tests/test_bisect_equivalence.py``)."""
     n_jobs = len(jobs)
     incremental = resolve_engine(engine) != "reference"
@@ -166,61 +196,108 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
         else stepping == "multi"
     if arrivals is not None:
         arrivals = np.asarray(arrivals)
+    E = len(assignment)
+    if quotas is not None:
+        quotas = np.asarray(quotas, dtype=np.float64)
+        if quotas.shape != (E,):
+            raise ValueError(
+                f"quotas shape {quotas.shape} != ({E},): one iteration "
+                "quota per assignment entry")
+
+    # ----- entry-keyed schedule bookkeeping --------------------------------
+    # ekey = (jid, segment index) orders every tie-break; single-segment
+    # schedules make it (jid, 0), i.e. the legacy jid order.
     queues: list[list[int]] = [[] for _ in range(cluster.num_gpus)]
-    gpu_sets: dict[int, np.ndarray] = {}
+    gpu_sets: list[np.ndarray] = []
+    entry_jobs: list[Job] = []
+    ent_jid = np.empty(E, dtype=np.int64)
+    ent_seg = np.empty(E, dtype=np.int64)
+    seg_count: dict[int, int] = {}
     srv_of = cluster.gpu_server
-    y_rows: dict[int, np.ndarray] = {}   # per-server GPU counts per job
-    flat_jid: list[int] = []
+    flat_ent: list[int] = []
     flat_gpu: list[int] = []
-    for j, gpus in assignment:
+    for e, (j, gpus) in enumerate(assignment):
         gpus = np.asarray(gpus, dtype=np.int64)
         if len(gpus) != jobs[j].num_gpus:
-            raise ValueError(f"job {j}: got {len(gpus)} GPUs, wants {jobs[j].num_gpus}")
+            if quotas is None:
+                raise ValueError(
+                    f"job {j}: got {len(gpus)} GPUs, wants {jobs[j].num_gpus}")
+            # Elastic segment: the contention terms use its actual width.
+            entry_jobs.append(dataclasses.replace(jobs[j],
+                                                  num_gpus=len(gpus)))
+        else:
+            entry_jobs.append(jobs[j])
         ids = gpus.tolist()
         if len(set(ids)) != len(ids):
             raise ValueError(f"job {j}: duplicate GPUs in assignment")
-        gpu_sets[j] = gpus
+        gpu_sets.append(gpus)
+        ent_jid[e] = j
+        ent_seg[e] = seg_count.get(j, 0)
+        seg_count[j] = int(ent_seg[e]) + 1
         for g in ids:
-            queues[g].append(j)
-            flat_jid.append(j)
+            queues[g].append(e)
+            flat_ent.append(e)
             flat_gpu.append(g)
-    # All jobs' per-server GPU counts in one bincount over (job, server)
-    # pairs -- same integer counts as a per-job bincount, one C call.
+    if quotas is None:
+        for j, c in seg_count.items():
+            if c > 1:
+                raise ValueError(
+                    f"job {j} appears in {c} assignment entries; "
+                    "preemptive (multi-segment) schedules must pass quotas")
+    # Segment precedence: pred/succ chains in assignment order.
+    pred = np.full(E, -1, dtype=np.int64)
+    succ = np.full(E, -1, dtype=np.int64)
+    last_entry: dict[int, int] = {}
+    for e in range(E):
+        j = int(ent_jid[e])
+        if j in last_entry:
+            pred[e] = last_entry[j]
+            succ[last_entry[j]] = e
+        last_entry[j] = e
+    # All entries' per-server GPU counts in one bincount over
+    # (entry, server) pairs -- same integer counts as a per-entry
+    # bincount, one C call.
     S = cluster.num_servers
-    y_all = np.bincount(
-        np.asarray(flat_jid, dtype=np.int64) * S
+    y_ent = np.bincount(
+        np.asarray(flat_ent, dtype=np.int64) * S
         + srv_of[np.asarray(flat_gpu, dtype=np.int64)],
-        minlength=n_jobs * S).reshape(n_jobs, S)
-    for j in gpu_sets:
-        y_rows[j] = y_all[j]
+        minlength=E * S).reshape(E, S)
 
-    remaining = np.asarray([j.iters for j in jobs], dtype=np.float64)
+    rem_ent = quotas.copy() if quotas is not None else np.asarray(
+        [entry_jobs[e].iters for e in range(E)], dtype=np.float64)
+    widths = np.asarray([len(g) for g in gpu_sets], dtype=np.int64)
+    e_start = np.full(E, -1, dtype=np.int64)
+    e_finish = np.full(E, -1, dtype=np.int64)
     start = np.full(n_jobs, -1, dtype=np.int64)
     finish = np.full(n_jobs, -1, dtype=np.int64)
-    scheduled = set(gpu_sets)
+    ents_sorted = sorted(range(E),
+                         key=lambda e: (ent_jid[e], ent_seg[e]))
     active: list[int] = []
     inc = IncrementalEval(cluster) if incremental and not multiwindow else None
-    rows: dict[int, int] = {}            # job -> IncrementalEval row handle
+    rows: dict[int, int] = {}          # entry -> IncrementalEval row handle
     t = 0
     peak_p = 0
-    busy_now = 0                         # GPUs occupied by active jobs
+    busy_now = 0                       # GPUs occupied by active entries
     busy_gpu_slots = 0.0
     events: list[SimEvent] = []
+
+    def pred_done(e: int) -> bool:
+        p = pred[e]
+        return p < 0 or e_finish[p] >= 0
 
     ladder: dict | None = None           # multi-window stage cache
     model_vals: tuple | None = None      # (p, tau, phi) for `active` order
     if multiwindow:
-        # Placement-independent Eq. (6)/(8) terms, computed once per run;
-        # ladder stacks gather rows of them (unscheduled jobs keep zero
-        # placement rows and never enter a ladder).
-        terms = ladder_terms(cluster, jobs, y_all)
-        phi_last = np.ones(n_jobs)       # ordering hint for the guess
+        # Placement-independent Eq. (6)/(8) terms, computed once per run,
+        # per assignment entry; ladder stacks gather rows of them.
+        terms = ladder_terms(cluster, entry_jobs, y_ent)
+        phi_last = np.ones(E)            # ordering hint for the guess
         ladder_ramp = 2                  # adaptive stage depth (see below)
 
         def build_ladder(act: list[int]) -> dict:
             """One stack_model batch covering the next LADDER_DEPTH
             completion stages of ``act``: stage s masks out the first s
-            jobs of the guessed completion order (ascending slots-to-
+            entries of the guessed completion order (ascending slots-to-
             finish at current rates, stable on the active order).  The
             guess only selects which stacks exist -- each window's
             completions are computed from the stage values and verified
@@ -228,101 +305,121 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
             and never changes results."""
             act_arr = np.asarray(act, dtype=np.int64)
             A = len(act)
-            keys = np.ceil(remaining[act_arr] / phi_last[act_arr])
+            keys = np.ceil(rem_ent[act_arr] / phi_last[act_arr])
             order = np.lexsort((np.arange(A), keys))
-            jids = [act[i] for i in order]
+            ents = [act[i] for i in order]
             depth = min(A - 1, ladder_ramp)
-            jid_arr = act_arr[order]
-            p, tau, phi = tau_ladder(cluster, terms, jid_arr, depth)
+            ent_arr = act_arr[order]
+            p, tau, phi = tau_ladder(cluster, terms, ent_arr, depth)
             contention.EVAL_COUNTS["ladder_calls"] += 1
             contention.EVAL_COUNTS["ladder_rows"] += depth + 1
-            # "rem" caches `remaining` in ladder order so window updates
+            # "rem" caches `rem_ent` in ladder order so window updates
             # are contiguous slice writes; flushed back on invalidation.
-            return {"jids": jids, "jid_arr": jid_arr, "stage": 0,
+            return {"ents": ents, "ent_arr": ent_arr, "stage": 0,
                     "depth": depth, "p": p, "tau": tau, "phi": phi,
-                    "rem": remaining[jid_arr]}
+                    "rem": rem_ent[ent_arr]}
 
         def flush_ladder(lad: dict | None) -> None:
             """Write the ladder-ordered remaining cache back before the
-            ladder is dropped (build_ladder reads ``remaining``)."""
+            ladder is dropped (build_ladder reads ``rem_ent``)."""
             if lad is not None:
-                remaining[lad["jid_arr"]] = lad["rem"]
+                rem_ent[lad["ent_arr"]] = lad["rem"]
 
-    def _arrival_of(j: int) -> int:
-        return int(arrivals[j]) if arrivals is not None else 0
+    def _arrival_of(e: int) -> int:
+        return int(arrivals[ent_jid[e]]) if arrivals is not None else 0
 
     if tracked:
         # Incremental readiness: head pointer per GPU queue, and for each
-        # unstarted job the count of its GPUs where it is at the head.
-        # A job is queue-ready when that count reaches G_j, which happens
-        # exactly once; it then waits (if needed) in an arrival-sorted
-        # heap until its arrival slot.  Startable jobs pop in ascending
-        # jid order -- the same FIFO tie-break as the rescan reference.
+        # unstarted entry the count of its GPUs where it is at the head.
+        # An entry is queue-ready when that count reaches its width, which
+        # happens exactly once; if its predecessor segment is unfinished
+        # it parks (``head_ready``) until that completion re-checks it,
+        # otherwise it waits (if needed) in an arrival-sorted heap until
+        # its arrival slot.  Startable entries pop in ascending
+        # (jid, segment) order -- the same FIFO tie-break as the rescan
+        # reference (and plain jid order for single-segment schedules).
         qpos = [0] * cluster.num_gpus
-        n_gpus_of = {j: len(gpu_sets[j]) for j in scheduled}
-        at_head = dict.fromkeys(scheduled, 0)
+        at_head = [0] * E
+        head_ready = [False] * E     # queue-ready, parked on predecessor
         for q in queues:
             if q:
                 at_head[q[0]] += 1
-        startable: list[int] = []              # jid min-heap: ready + arrived
-        arrival_wait: list[tuple[int, int]] = []   # (arrival, jid) min-heap
-        for j in sorted(scheduled):
-            if at_head[j] == n_gpus_of[j]:
-                heapq.heappush(arrival_wait, (_arrival_of(j), j))
-        # All unstarted jobs, arrival-sorted, for the idle-gap jump; started
-        # entries are discarded lazily.
-        pending_heap = [(_arrival_of(j), j) for j in scheduled]
+        startable: list[tuple[int, int, int]] = []   # (jid, seg, e) heap
+        arrival_wait: list[tuple[int, int, int, int]] = []  # + arrival key
+        for e in ents_sorted:
+            if at_head[e] == widths[e]:
+                if pred_done(e):
+                    heapq.heappush(arrival_wait,
+                                   (_arrival_of(e), int(ent_jid[e]),
+                                    int(ent_seg[e]), e))
+                else:
+                    head_ready[e] = True
+        # All unstarted entries, arrival-sorted, for the idle-gap jump;
+        # started entries are discarded lazily.
+        pending_heap = [(_arrival_of(e), int(ent_jid[e]), int(ent_seg[e]), e)
+                        for e in range(E)]
         heapq.heapify(pending_heap)
-        n_unstarted = len(scheduled)
+        n_unstarted = E
 
         def ready_jobs(now: int) -> list[int]:
             while arrival_wait and arrival_wait[0][0] <= now:
-                heapq.heappush(startable, heapq.heappop(arrival_wait)[1])
+                _, j, s, e = heapq.heappop(arrival_wait)
+                heapq.heappush(startable, (j, s, e))
             out = []
             while startable:
-                out.append(heapq.heappop(startable))
+                out.append(heapq.heappop(startable)[2])
             return out
 
-        def release_gpus(j: int) -> None:
-            # Advance the head pointer on each freed GPU; the new head job
-            # gains one GPU-at-head (it cannot already be running: it was
-            # not at the head of this queue until now).
-            for g in gpu_sets[j]:
+        def _now_head_ready(e2: int) -> None:
+            if pred_done(e2):
+                heapq.heappush(arrival_wait,
+                               (_arrival_of(e2), int(ent_jid[e2]),
+                                int(ent_seg[e2]), e2))
+            else:
+                head_ready[e2] = True
+
+        def release_gpus(e: int) -> None:
+            # Advance the head pointer on each freed GPU; the new head
+            # entry gains one GPU-at-head (it cannot already be running:
+            # it was not at the head of this queue until now).
+            for g in gpu_sets[e]:
                 gi = int(g)
                 qpos[gi] += 1
                 q = queues[gi]
                 if qpos[gi] < len(q):
-                    j2 = q[qpos[gi]]
-                    at_head[j2] += 1
-                    if at_head[j2] == n_gpus_of[j2]:
-                        heapq.heappush(arrival_wait, (_arrival_of(j2), j2))
+                    e2 = q[qpos[gi]]
+                    at_head[e2] += 1
+                    if at_head[e2] == widths[e2]:
+                        _now_head_ready(e2)
 
         def next_pending_arrival() -> int:
-            while pending_heap and start[pending_heap[0][1]] >= 0:
+            while pending_heap and e_start[pending_heap[0][3]] >= 0:
                 heapq.heappop(pending_heap)
             return pending_heap[0][0]
     else:
         def ready_jobs(now: int) -> list[int]:
-            # Iterate in sorted job order: ``scheduled`` is a set, and set
-            # order would make start order -- hence FIFO tie-breaks --
-            # depend on hash seeding rather than on the schedule.
+            # Iterate in sorted (jid, segment) order so start order --
+            # hence FIFO tie-breaks -- depends on the schedule, not on
+            # set/hash ordering.
             out = []
-            for j in sorted(scheduled):
-                if start[j] >= 0:
+            for e in ents_sorted:
+                if e_start[e] >= 0:
                     continue
-                if arrivals is not None and now < arrivals[j]:
+                if arrivals is not None and now < arrivals[ent_jid[e]]:
                     continue
-                if all(queues[int(g)] and queues[int(g)][0] == j
-                       for g in gpu_sets[j]):
-                    out.append(j)
+                if not pred_done(e):
+                    continue
+                if all(queues[int(g)] and queues[int(g)][0] == e
+                       for g in gpu_sets[e]):
+                    out.append(e)
             return out
 
-        def release_gpus(j: int) -> None:
-            for g in gpu_sets[j]:
+        def release_gpus(e: int) -> None:
+            for g in gpu_sets[e]:
                 queues[int(g)].pop(0)
 
         def next_pending_arrival() -> int:
-            return min(_arrival_of(j) for j in scheduled if start[j] < 0)
+            return min(_arrival_of(e) for e in range(E) if e_start[e] < 0)
 
     while t < horizon:
         if tracked and not startable \
@@ -330,14 +427,17 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
             starters = ()        # fast path: provably nothing to start
         else:
             starters = ready_jobs(t)
-        for j in starters:
-            start[j] = t
-            active.append(j)
-            busy_now += jobs[j].num_gpus
+        for e in starters:
+            e_start[e] = t
+            j = int(ent_jid[e])
+            if start[j] < 0:     # first segment sets the job's start
+                start[j] = t
+            active.append(e)
+            busy_now += int(widths[e])
             if tracked:
                 n_unstarted -= 1
             if inc is not None:
-                rows[j] = inc.add(jobs[j], y_rows[j])
+                rows[e] = inc.add(entry_jobs[e], y_ent[e])
             elif multiwindow:
                 # A start changes every row's contention; precomputed
                 # stages for the old active set no longer apply.  Frequent
@@ -350,7 +450,7 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
                 model_vals = None
         if not active:
             has_pending = (n_unstarted > 0) if tracked \
-                else any(start[j] < 0 for j in scheduled)
+                else bool((e_start < 0).any())
             if not has_pending:
                 break
             if arrivals is not None:
@@ -365,7 +465,10 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
                                            contention=0, busy_gpus=0))
                     t = nt
                     continue
-            # Unstartable remainder (should not happen with FIFO queues).
+            # Unstartable remainder (cannot happen with FIFO queues: the
+            # earliest-committed unfinished entry is at the head of all
+            # its queues and its predecessor -- committed earlier -- has
+            # finished).
             break
         if multiwindow:
             if model_vals is None:
@@ -376,17 +479,17 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
                     # slices of the stage arrays, so per-window model
                     # access is a view, not a gather.  Active order never
                     # affects outputs (all window quantities are
-                    # aggregates or per-job values).
-                    active = list(ladder["jids"])
+                    # aggregates or per-entry values).
+                    active = list(ladder["ents"])
                 s = ladder["stage"]
                 model_vals = (ladder["p"][s, s:], ladder["tau"][s, s:],
                               ladder["phi"][s, s:])
             p_arr, tau_arr, phi_raw = model_vals
         elif inc is not None:
-            p_arr, tau_arr, phi_raw = inc.window([rows[j] for j in active])
+            p_arr, tau_arr, phi_raw = inc.window([rows[e] for e in active])
         else:
-            sub_jobs = [jobs[j] for j in active]
-            Y = cluster.placement_matrix([gpu_sets[j] for j in active])
+            sub_jobs = [entry_jobs[e] for e in active]
+            Y = cluster.placement_matrix([gpu_sets[e] for e in active])
             model = evaluate(cluster, sub_jobs, Y)
             p_arr, tau_arr, phi_raw = model.p, model.tau, model.phi
         pmax = int(p_arr.max(initial=0))
@@ -401,12 +504,12 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
             phi = phi_raw
         if multiwindow:
             s0 = ladder["stage"]
-            act = ladder["jid_arr"][s0:]
+            act = ladder["ent_arr"][s0:]
             phi_last[act] = phi          # ordering hint for ladder guesses
             rem = ladder["rem"][s0:]
         else:
             act = np.asarray(active, dtype=np.int64)
-            rem = remaining[act]
+            rem = rem_ent[act]
         # min of ceils == ceil of min (ceil is monotone), so one scalar
         # ceil after the reduction replaces the array-wide one.
         # Clamp the event window at the horizon so a job cannot "finish"
@@ -416,7 +519,7 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
         if multiwindow:
             ladder["rem"][s0:] = rem_after
         else:
-            remaining[act] = rem_after
+            rem_ent[act] = rem_after
         events.append(SimEvent(t=t, dt=dt, active=len(active),
                                contention=pmax, busy_gpus=busy_now))
         t += dt
@@ -424,17 +527,27 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
         if done_mask.any():
             keep: list[int] = []
             done_now: list[int] = []
-            for j, done in zip(active, done_mask):
+            for e, done in zip(active, done_mask):
                 if not done:
-                    keep.append(j)
+                    keep.append(e)
                     continue
-                done_now.append(j)
-                finish[j] = t
-                busy_gpu_slots += (t - start[j]) * jobs[j].num_gpus
-                busy_now -= jobs[j].num_gpus
-                release_gpus(j)
+                done_now.append(e)
+                e_finish[e] = t
+                if succ[e] < 0:      # last segment completes the job
+                    finish[ent_jid[e]] = t
+                busy_gpu_slots += (t - e_start[e]) * int(widths[e])
+                busy_now -= int(widths[e])
+                release_gpus(e)
+                if tracked and succ[e] >= 0 and head_ready[succ[e]]:
+                    # The successor segment was parked on this completion
+                    # (its GPUs were already all at head).
+                    s2 = int(succ[e])
+                    head_ready[s2] = False
+                    heapq.heappush(arrival_wait,
+                                   (_arrival_of(s2), int(ent_jid[s2]),
+                                    int(ent_seg[s2]), s2))
                 if inc is not None:
-                    inc.remove(rows.pop(j))
+                    inc.remove(rows.pop(e))
             active = keep
             if multiwindow:
                 # Advance the ladder past this window's completions when
@@ -447,7 +560,7 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
                 if active and ladder is not None:
                     k, c = ladder["stage"], len(done_now)
                     if k + c <= ladder["depth"] and \
-                            set(ladder["jids"][k:k + c]) == set(done_now):
+                            set(ladder["ents"][k:k + c]) == set(done_now):
                         ladder["stage"] = k + c
                     else:
                         if k + c > ladder["depth"] >= len(active):
@@ -460,12 +573,12 @@ def simulate(cluster: Cluster, jobs: list[Job], assignment: Assignment,
                     flush_ladder(ladder)
                     ladder = None
 
-    # Charge partial busy slots for jobs that started but never finished
+    # Charge partial busy slots for entries that started but never finished
     # (horizon hit): without this, utilization is overstated because
     # total_gpu_slots counts their window while busy_gpu_slots ignores it.
-    for j in sorted(scheduled):
-        if start[j] >= 0 and finish[j] < 0:
-            busy_gpu_slots += (t - start[j]) * jobs[j].num_gpus
+    for e in ents_sorted:
+        if e_start[e] >= 0 and e_finish[e] < 0:
+            busy_gpu_slots += (t - e_start[e]) * int(widths[e])
 
     completed_mask = finish >= 0
     completed = int(completed_mask.sum())

@@ -45,6 +45,7 @@ from repro.core.api import (PlacementState, ScheduleResult, finalize,
                             get_chooser)
 from repro.core.cluster import Cluster
 from repro.core.jobs import Job
+from repro.core.preempt import evict as apply_evict
 from repro.core.simulator import SimResult, simulate
 from repro.service.queue import QueueManager
 from repro.service.state import TERMINAL, JobRecord, JobState
@@ -102,14 +103,20 @@ class Daemon:
         self.clock = clock or VirtualClock()
         self.state = PlacementState(cluster, engine=engine)
         self.state.commit_hook = self._capture_commit
+        self.state.evict_hook = self._capture_evict
         self.records: dict[int, JobRecord] = {}
         self.jobs: list[Job] = []          # jid-indexed (jid == list index)
         self.arrivals: list[int] = []
         self.rounds = 0
         self.decision_latencies: list[float] = []   # seconds, per chooser run
         self._choosers: dict[str, object] = {}
-        self._last_commit: "tuple | None" = None
-        self._sim_cache: "tuple | None" = None      # ((n_placed, limit), sim)
+        # One chooser decision may mutate the state several times (a
+        # preemptive chooser evicts, re-places the residual, then places
+        # the arrival); the hooks record every mutation in order so step()
+        # can journal the whole decision as one PLACING..RUNNING bracket.
+        self._events: list[tuple] = []
+        self._mutations = 0                # total state mutations ever
+        self._sim_cache: "tuple | None" = None      # ((mutations, limit), sim)
 
     # -- submission -------------------------------------------------------
 
@@ -170,7 +177,7 @@ class Daemon:
             chooser = self._chooser_for(record.tenant)
             self._transition(record, JobState.PLACING)
             self.state.advance_to(record.arrival)
-            self._last_commit = None
+            self._events = []
             t0 = time.perf_counter()
             ok = chooser(self.state, record.job, theta)
             self.decision_latencies.append(time.perf_counter() - t0)
@@ -181,16 +188,63 @@ class Daemon:
             get_state = getattr(chooser, "get_state", None)
             extra = {} if get_state is None else {"rng": get_state()}
             if not ok:
+                if self._events:
+                    raise RuntimeError(
+                        f"chooser mutated the placement state while failing "
+                        f"to place job {record.jid} (trial preemption must "
+                        "run on a clone)")
                 self._transition(record, JobState.FAILED, **extra)
+                self.store.append("decided", record.jid, {},
+                                  ts=self.clock.now())
                 continue
-            jid, gpus, rho, start = self._last_commit
-            if jid != record.jid:          # chooser must place THIS job
+            events = self._events
+            if sum(1 for ev in events
+                   if ev[0] == "commit" and ev[1] == record.jid) != 1:
                 raise RuntimeError(
-                    f"chooser committed job {jid} while placing {record.jid}")
-            record.gpus, record.rho, record.start = gpus, rho, start
-            self._transition(record, JobState.RUNNING,
-                             gpus=[int(g) for g in gpus],
-                             rho=rho, start=start, **extra)
+                    f"chooser must commit job {record.jid} exactly once "
+                    f"while placing it (got events "
+                    f"{[(e[0], getattr(e[1], 'jid', e[1])) for e in events]})")
+            # Journal the decision's event stream in journal == commit
+            # order (U += charges are float-order-sensitive, so replay
+            # must re-commit in the live order); the closing ``decided``
+            # record makes the bracket atomic: replay applies all of it
+            # or none of it (_replay buffers between PLACING and the
+            # ``decided``).
+            for ev in events:
+                if ev[0] == "evict":
+                    _, vjob, t_ev, residual = ev
+                    vrec = self.records[vjob.jid]
+                    if vrec.state is not JobState.RUNNING:
+                        raise RuntimeError(
+                            f"chooser evicted job {vjob.jid} in state "
+                            f"{vrec.state.value}; preemptive policies need "
+                            "est-consistent completion feedback (run with "
+                            'monitor_every=0 or feedback="actual")')
+                    kind = "resize" \
+                        if residual.num_gpus != vjob.num_gpus else "evict"
+                    self.store.append(kind, vjob.jid,
+                                      {"t": t_ev,
+                                       "iters": residual.iters,
+                                       "num_gpus": residual.num_gpus},
+                                      ts=self.clock.now())
+                    self._transition(vrec, JobState.QUEUED)
+                    vrec.job = residual
+                elif ev[1] == record.jid:       # the arrival itself
+                    _, jid, gpus, rho, start = ev
+                    record.gpus, record.rho, record.start = gpus, rho, start
+                    self._transition(record, JobState.RUNNING,
+                                     gpus=[int(g) for g in gpus],
+                                     rho=rho, start=start, **extra)
+                else:         # the victim's residual re-placement
+                    _, jid2, gpus2, rho2, start2 = ev
+                    vrec = self.records[jid2]
+                    self._transition(vrec, JobState.PLACING)
+                    vrec.gpus, vrec.rho, vrec.start = gpus2, rho2, start2
+                    self._transition(vrec, JobState.RUNNING,
+                                     gpus=[int(g) for g in gpus2],
+                                     rho=rho2, start=start2)
+            self.store.append("decided", record.jid, {},
+                              ts=self.clock.now())
         if self.monitor_every and self.rounds % self.monitor_every == 0:
             self.monitor()
         return True
@@ -218,14 +272,16 @@ class Daemon:
         finishes are pushed into the placement state's incremental
         engines via :meth:`~repro.core.api.PlacementState.observe_finish`."""
         limit = int(at if at is not None else self.clock.now())
-        key = (len(self.state.assignment), limit)
+        key = (self._mutations, limit)
         if self._sim_cache is not None and self._sim_cache[0] == key:
             sim = self._sim_cache[1]
         else:
             sim = simulate(self.cluster, self.jobs, self.state.assignment,
                            horizon=limit,
                            arrivals=np.asarray(self.arrivals, dtype=np.int64)
-                           if self.jobs else None)
+                           if self.jobs else None,
+                           quotas=np.asarray(self.state.seg_quota)
+                           if self.state.preempted else None)
             self._sim_cache = (key, sim)
         for record in self.records.values():
             if record.state is not JobState.RUNNING:
@@ -259,7 +315,42 @@ class Daemon:
         rng state -- recovery is decision-for-decision exact for every
         registered policy, stochastic ones included."""
         daemon = cls(cluster, store, queue, **kwargs)
+        # A chooser decision is journaled as a PLACING..decided bracket
+        # (possibly containing evict/resize records, the victim's
+        # re-placement, and the arrival's own RUNNING mid-bracket -- the
+        # preempting arrival commits BEFORE the residual).  Replay
+        # buffers each bracket and applies it only when its closing
+        # ``decided`` record is present: a journal truncated mid-decision
+        # leaves the state exactly pre-decision (victim still RUNNING on
+        # its original placement), the job re-enqueues as QUEUED, and the
+        # deterministic chooser re-derives the identical decision.
+        buf: "tuple[int, list] | None" = None
         for entry in store.entries():
+            if buf is not None:
+                jid0, pending = buf
+                # Entries a live bracket can never contain mark the open
+                # one as abandoned (a crash cut it short and a recovered
+                # daemon wrote on): a new round's advance, a submission,
+                # a monitor completion, or the same job PLACING again.
+                # Its pending entries were never applied pre-crash either,
+                # so dropping them reproduces that daemon's state.
+                abandoned = entry.kind in ("advance", "submit") or (
+                    entry.kind == "transition"
+                    and (entry.payload["to"] == JobState.DONE.value
+                         or (entry.jid == jid0 and entry.payload["to"]
+                             == JobState.PLACING.value)))
+                if not abandoned:
+                    pending.append(entry)
+                    if entry.kind == "decided" and entry.jid == jid0:
+                        for buffered in pending:
+                            daemon._replay(buffered)
+                        buf = None
+                    continue
+                buf = None          # fall through: replay `entry` normally
+            if entry.kind == "transition" and \
+                    entry.payload["to"] == JobState.PLACING.value:
+                buf = (entry.jid, [entry])
+                continue
             daemon._replay(entry)
         requeue = [r for r in daemon.records.values()
                    if r.state in (JobState.QUEUED, JobState.PLACING,
@@ -310,6 +401,26 @@ class Daemon:
             snapshot = entry.payload.get("rng")
             if snapshot is not None:
                 self._chooser_for(record.tenant).set_state(snapshot)
+        elif entry.kind in ("evict", "resize"):
+            # Re-run the checkpoint-restart surgery with the journaled
+            # operands; evict() is float-exact over the committed state,
+            # so the replayed residual must equal the journaled one
+            # bit-for-bit (anything else means the journal diverged from
+            # the placements replayed so far).
+            record = self.records[entry.jid]
+            residual = apply_evict(self.state, entry.jid,
+                                   float(entry.payload["t"]), self.u,
+                                   num_gpus=int(entry.payload["num_gpus"]))
+            if residual is None or \
+                    residual.iters != float(entry.payload["iters"]):
+                raise ValueError(
+                    f"journal divergence replaying {entry.kind} of job "
+                    f"{entry.jid}: residual iters "
+                    f"{None if residual is None else residual.iters} != "
+                    f"journaled {entry.payload['iters']}")
+            record.job = residual
+        elif entry.kind == "decided":
+            pass    # pure bracket delimiter; the entries it closed did the work
         else:
             raise ValueError(f"unknown journal entry kind {entry.kind!r}")
 
@@ -318,8 +429,16 @@ class Daemon:
     def _capture_commit(self, job, gpus, rho, start) -> None:
         """PlacementState.commit_hook: capture the exact committed floats
         (journaling est_finish - est_start would not round-trip rho)."""
-        self._last_commit = (job.jid, np.asarray(gpus), float(rho),
-                             float(start))
+        self._mutations += 1
+        self._events.append(("commit", job.jid, np.asarray(gpus),
+                             float(rho), float(start)))
+
+    def _capture_evict(self, job, t_ev, residual) -> None:
+        """PlacementState.evict_hook: capture a preemption so step() can
+        journal it (an ``evict``/``resize`` record plus the victim's
+        RUNNING -> QUEUED transition) inside the decision bracket."""
+        self._mutations += 1
+        self._events.append(("evict", job, float(t_ev), residual))
 
     def _chooser_for(self, tenant: str):
         """The tenant's online chooser (built once per tenant via the

@@ -4,18 +4,23 @@ Every job a :class:`~repro.service.api.SchedulerService` accepts walks a
 validated lifecycle::
 
     PENDING -> QUEUED -> PLACING -> RUNNING -> DONE
-       |          |         |          \\-> FAILED
+       |          ^         |        |  \\-> FAILED
        |          |         +-> FAILED (no feasible placement)
        |          |         +-> QUEUED (crash recovery re-enqueue)
-       \\-> CANCELLED  <----/   (cancel only before placement)
+       |          +-----------------/   (preemption: evicted mid-run)
+       \\-> CANCELLED (cancel only before placement)
 
 ``PENDING`` is the instant between journaling a submission and admitting
 it to the queue manager; ``PLACING`` brackets exactly the window in which
 the daemon runs the policy chooser, so a journal whose last word on a job
 is ``PLACING`` identifies work lost to a crash (recovery re-enqueues it
-and the deterministic chooser re-derives the same placement).  Gang
-scheduling is non-preemptive (Eq. 3), so ``RUNNING`` jobs cannot be
-cancelled -- only observed to ``DONE`` by the monitor loop.
+and the deterministic chooser re-derives the same placement).  Under the
+paper's non-preemptive Eq. (3) setting ``RUNNING`` jobs are only observed
+to ``DONE`` by the monitor loop; the preemptive policy family
+(:mod:`repro.core.preempt`) adds ``RUNNING -> QUEUED``: an evicted job
+re-enters the queue as its residual (checkpointed) remainder, journaled
+as an ``evict``/``resize`` record so recovery replays the preemption
+exactly.
 
 Transitions not in :data:`TRANSITIONS` raise :class:`InvalidTransition`;
 both the live daemon and journal replay go through
@@ -48,13 +53,15 @@ class JobState(str, enum.Enum):
 
 
 #: Validated transition relation; ``PLACING -> QUEUED`` is the crash
-#: recovery re-enqueue, everything else is the normal lifecycle.
+#: recovery re-enqueue and ``RUNNING -> QUEUED`` the preemptive eviction
+#: (repro.core.preempt), everything else is the normal lifecycle.
 TRANSITIONS: dict[JobState, frozenset[JobState]] = {
     JobState.PENDING: frozenset({JobState.QUEUED, JobState.CANCELLED}),
     JobState.QUEUED: frozenset({JobState.PLACING, JobState.CANCELLED}),
     JobState.PLACING: frozenset({JobState.RUNNING, JobState.FAILED,
                                  JobState.QUEUED}),
-    JobState.RUNNING: frozenset({JobState.DONE, JobState.FAILED}),
+    JobState.RUNNING: frozenset({JobState.DONE, JobState.FAILED,
+                                 JobState.QUEUED}),
     JobState.DONE: frozenset(),
     JobState.CANCELLED: frozenset(),
     JobState.FAILED: frozenset(),

@@ -37,8 +37,14 @@ class JournalEntry:
     ``kind`` is ``"submit"`` (payload: tenant, arrival, job fields),
     ``"transition"`` (payload: ``to`` state plus, for RUNNING, the exact
     ``gpus``/``rho``/``start``; for DONE, ``finish``; for outcomes of a
-    stateful chooser, its post-decision ``rng`` generator state) or
-    ``"advance"`` (payload: the virtual-clock slot ``t`` of a round)."""
+    stateful chooser, its post-decision ``rng`` generator state),
+    ``"advance"`` (payload: the virtual-clock slot ``t`` of a round),
+    ``"decided"`` (empty payload: closes a chooser decision's
+    PLACING..decided bracket, making its replay all-or-nothing), or a
+    preemption record -- ``"evict"`` / ``"resize"`` (payload: the exact
+    eviction instant ``t`` plus the residual's ``iters``/``num_gpus``;
+    see :mod:`repro.core.preempt`) -- journaled inside the preempting
+    arrival's decision bracket."""
 
     seq: int
     ts: float                  # virtual-clock stamp (deterministic tests)

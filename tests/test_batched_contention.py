@@ -502,3 +502,46 @@ class TestCounters:
         row = inc.add(jobs[0], Y[0])
         inc.remove(row)
         assert eval_counts()["incremental_updates"] == 2
+
+    def test_preemption_counters_remove_readd_probe(self):
+        """The eviction-era counters: ``remove`` bumps the dedicated
+        ``incremental_removes`` counter on top of ``incremental_updates``,
+        a remove -> re-add round trip restores tau bit-for-bit, probes
+        after it are priced like fresh ones, and ``evictions`` counts
+        PlacementState surgeries (not engine updates)."""
+        rng = np.random.default_rng(7)
+        jobs = _random_jobs(rng, 2)
+        Y = np.stack([_random_placement(rng, j, CL.num_servers)
+                      for j in jobs])
+        reset_eval_counts()
+        inc = IncrementalEval(CL)
+        r0 = inc.add(jobs[0], Y[0])
+        r1 = inc.add(jobs[1], Y[1])
+        tau_before = inc.tau_of(r1)
+        tau0 = inc.tau_of(r0)
+        counts = eval_counts()
+        assert counts["incremental_removes"] == 0
+        assert counts["evictions"] == 0
+        inc.remove(r0)                          # remove ...
+        counts = eval_counts()
+        assert counts["incremental_removes"] == 1
+        assert counts["incremental_updates"] == 3    # removes count as both
+        r0b = inc.add(jobs[0], Y[0])            # ... re-add ...
+        assert inc.tau_of(r1) == tau_before     # round trip is exact
+        assert inc.tau_of(r0b) == tau0
+        probes_before = eval_counts()["probes"]
+        from repro.core import PlacementState
+        state = PlacementState(CL, engine="incremental")
+        job = jobs[0]
+        gpus = np.arange(job.num_gpus)
+        rho, start = state.refined_rho(job, gpus)   # ... probe
+        assert eval_counts()["probes"] == probes_before + 1
+        state.commit(job, gpus, rho, start, 1.5)
+        from repro.core.preempt import evict
+        assert evict(state, job.jid, rho / 2, 1.5) is not None
+        counts = eval_counts()
+        assert counts["evictions"] == 1
+        # surgery is pure clock/quota arithmetic: no engine update, no
+        # extra model evaluation is charged for an eviction
+        assert counts["incremental_removes"] == 1
+        assert counts["full"] == 0

@@ -69,7 +69,8 @@ class TestOnlineScheduling:
                                   arrivals=arrivals, horizon=10**6)
         for name in list_policies():
             sched = get_policy(name)(request)
-            sim = simulate(cluster, jobs, sched.assignment, arrivals=arrivals)
+            sim = simulate(cluster, jobs, sched.assignment, arrivals=arrivals,
+                           quotas=sched.quotas)
             assert sim.completed == len(jobs), name
             assert np.all(sim.start >= arrivals), name
 

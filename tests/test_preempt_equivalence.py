@@ -1,0 +1,287 @@
+"""The preemptive & elastic policy family on the selectable-oracle axes.
+
+Bit-identity requirements, mirroring the non-preemptive suites:
+
+  * each preemptive policy emits the same segmented schedule under every
+    contention engine;
+  * a preempted (multi-segment, quota-carrying) schedule simulates
+    event-for-event identically across the simulator's engine x
+    readiness x stepping axes;
+  * the service daemon drains the preemptive choosers decision-for-
+    decision identically to :func:`repro.core.api.schedule_arrivals`,
+    journaling EVICT / RESIZE records inside the decision bracket;
+  * killing the daemon after EVERY journal prefix -- including prefixes
+    that cut inside an EVICT bracket -- and recovering reproduces the
+    uninterrupted schedule exactly (the ``test_service`` fault-injection
+    pattern, extended through preemption).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (Cluster, Job, ScheduleRequest, get_policy, simulate)
+from repro.core.api import schedule_arrivals
+from repro.service.daemon import Daemon
+from repro.service.queue import QueueManager, TenantConfig
+from repro.service.store import MemoryStore
+
+ENGINES = ("reference", "batched", "incremental")
+PREEMPTIVE = ("sjf-bco-dynamic", "gadget-elastic", "wang-ca")
+
+
+def _evict_trace():
+    """One long 8-GPU job at t=0, then a burst of shorts: the dynamic
+    chooser preempts the long job for each short (verified below)."""
+    cluster = Cluster(capacities=(4, 4))
+    jobs = [Job(jid=0, num_gpus=8, iters=4000, grad_size=0.25, batch=32,
+                dt_fwd=3e-4, dt_bwd=8e-3)]
+    jobs += [Job(jid=i, num_gpus=2, iters=200, grad_size=0.05, batch=32,
+                 dt_fwd=3e-4, dt_bwd=8e-3) for i in range(1, 4)]
+    arrivals = np.array([0, 5, 6, 7], dtype=np.int64)
+    return cluster, jobs, arrivals, 10**6
+
+
+def _resize_trace():
+    """A tight theta: the arrival cannot queue behind the wide job within
+    the Eq. (16) budget, so gadget-elastic shrinks it (RESIZE record)."""
+    cluster = Cluster(capacities=(4,))
+    jobs = [Job(jid=0, num_gpus=4, iters=2000, grad_size=0.25, batch=32,
+                dt_fwd=3e-4, dt_bwd=8e-3),
+            Job(jid=1, num_gpus=2, iters=100, grad_size=0.05, batch=32,
+                dt_fwd=3e-4, dt_bwd=8e-3)]
+    arrivals = np.array([0, 5], dtype=np.int64)
+    # rho(job 0) ~ 50 slots -> U charge ~ 33.4; theta = 35 admits it but
+    # not an arrival queued behind it (33.4 + ~1.7 > 35), while the
+    # post-shrink replacements fit (~5 and ~33.3).
+    return cluster, jobs, arrivals, 35
+
+
+def _same_schedule(a, b):
+    if len(a.assignment) != len(b.assignment):
+        return False
+    for (j1, g1), (j2, g2) in zip(a.assignment, b.assignment):
+        if j1 != j2 or not np.array_equal(g1, g2):
+            return False
+    if (a.quotas is None) != (b.quotas is None):
+        return False
+    if a.quotas is not None and not np.array_equal(a.quotas, b.quotas):
+        return False
+    return True
+
+
+def _assert_sims_equal(a, b):
+    assert a.events == b.events
+    assert np.array_equal(a.start, b.start)
+    assert np.array_equal(a.finish, b.finish)
+    assert a.makespan == b.makespan
+    assert a.avg_jct == b.avg_jct
+    assert a.completed == b.completed
+    assert a.peak_contention == b.peak_contention
+    assert a.busy_gpu_slots == b.busy_gpu_slots
+
+
+class TestEngineEquivalence:
+    @pytest.mark.parametrize("policy,trace", [
+        ("sjf-bco-dynamic", _evict_trace),
+        ("gadget-elastic", _evict_trace),
+        ("wang-ca", _evict_trace),
+        ("gadget-elastic", _resize_trace)])   # theta=35 is gadget-only
+    def test_online_schedules_identical_across_engines(self, policy, trace):
+        cluster, jobs, arrivals, horizon = trace()
+        scheds = []
+        for engine in ENGINES:
+            request = ScheduleRequest(cluster=cluster, jobs=jobs,
+                                      arrivals=arrivals, horizon=horizon,
+                                      params={"engine": engine})
+            scheds.append(get_policy(policy)(request))
+        for other in scheds[1:]:
+            assert _same_schedule(scheds[0], other)
+
+    @pytest.mark.parametrize("policy", ["sjf-bco-dynamic", "wang-ca"])
+    def test_batch_schedules_identical_across_engines(self, policy):
+        from repro.core import philly_cluster, philly_workload
+        cluster = philly_cluster(6, seed=3)
+        jobs = [dataclasses.replace(j, jid=i) for i, j in
+                enumerate(philly_workload(seed=3)[:24])]
+        scheds = []
+        for engine in ENGINES:
+            request = ScheduleRequest(cluster=cluster, jobs=jobs,
+                                      horizon=1200,
+                                      params={"engine": engine})
+            scheds.append(get_policy(policy)(request))
+        for other in scheds[1:]:
+            assert _same_schedule(scheds[0], other)
+
+    def test_dynamic_trace_actually_preempts(self):
+        cluster, jobs, arrivals, horizon = _evict_trace()
+        request = ScheduleRequest(cluster=cluster, jobs=jobs,
+                                  arrivals=arrivals, horizon=horizon)
+        sched = get_policy("sjf-bco-dynamic")(request)
+        assert sched.quotas is not None        # the schedule is segmented
+        jids = [j for j, _ in sched.assignment]
+        assert len(jids) > len(jobs)           # at least one split
+        sim = simulate(cluster, jobs, sched.assignment, arrivals=arrivals,
+                       quotas=sched.quotas)
+        assert sim.completed == len(jobs)
+        # the preemption must actually pay off for the shorts
+        base = get_policy("sjf-bco")(dataclasses.replace(request))
+        sim_base = simulate(cluster, jobs, base.assignment, arrivals=arrivals)
+        assert sim.avg_jct < sim_base.avg_jct
+
+    def test_elastic_trace_actually_resizes(self):
+        cluster, jobs, arrivals, horizon = _resize_trace()
+        request = ScheduleRequest(cluster=cluster, jobs=jobs,
+                                  arrivals=arrivals, horizon=horizon)
+        sched = get_policy("gadget-elastic")(request)
+        assert sched.quotas is not None
+        widths = {j: len(g) for j, g in sched.assignment}   # last seg wins
+        assert widths[0] < jobs[0].num_gpus    # the wide job shrank
+        sim = simulate(cluster, jobs, sched.assignment, arrivals=arrivals,
+                       quotas=sched.quotas)
+        assert sim.completed == len(jobs)
+
+
+class TestSimulatorAxesOnSegments:
+    def _segmented(self):
+        cluster, jobs, arrivals, horizon = _evict_trace()
+        request = ScheduleRequest(cluster=cluster, jobs=jobs,
+                                  arrivals=arrivals, horizon=horizon)
+        sched = get_policy("sjf-bco-dynamic")(request)
+        assert sched.quotas is not None
+        return cluster, jobs, arrivals, sched
+
+    @pytest.mark.parametrize("engine", ["reference", "incremental"])
+    @pytest.mark.parametrize("readiness", ["tracked", "rescan"])
+    def test_segmented_schedule_identical_across_axes(self, engine,
+                                                      readiness):
+        cluster, jobs, arrivals, sched = self._segmented()
+        oracle = simulate(cluster, jobs, sched.assignment, arrivals=arrivals,
+                          quotas=sched.quotas, engine="reference",
+                          readiness="rescan")
+        sim = simulate(cluster, jobs, sched.assignment, arrivals=arrivals,
+                       quotas=sched.quotas, engine=engine,
+                       readiness=readiness)
+        _assert_sims_equal(oracle, sim)
+
+    def test_multi_stepping_matches_single(self):
+        cluster, jobs, arrivals, sched = self._segmented()
+        single = simulate(cluster, jobs, sched.assignment, arrivals=arrivals,
+                          quotas=sched.quotas, stepping="single")
+        multi = simulate(cluster, jobs, sched.assignment, arrivals=arrivals,
+                         quotas=sched.quotas, stepping="multi")
+        _assert_sims_equal(single, multi)
+
+    def test_quota_guard_rejects_unlabelled_segments(self):
+        cluster, jobs, arrivals, sched = self._segmented()
+        with pytest.raises(ValueError, match="must pass quotas"):
+            simulate(cluster, jobs, sched.assignment, arrivals=arrivals)
+
+
+class TestDaemonEquivalence:
+    def _drain(self, policy, trace):
+        cluster, jobs, arrivals, horizon = trace()
+        store = MemoryStore()
+        daemon = Daemon(cluster, store,
+                        QueueManager(default=TenantConfig(policy=policy)),
+                        horizon=horizon)
+        for job, a in zip(jobs, arrivals):
+            daemon.admit(job, arrival=int(a))
+        sched, sim = daemon.drain()
+        return cluster, jobs, arrivals, horizon, store, sched, sim
+
+    @pytest.mark.parametrize("policy,trace", [
+        ("sjf-bco-dynamic", _evict_trace),
+        ("gadget-elastic", _evict_trace),
+        ("wang-ca", _evict_trace),
+        ("gadget-elastic", _resize_trace)])
+    def test_daemon_matches_schedule_arrivals(self, policy, trace):
+        (cluster, jobs, arrivals, horizon,
+         store, sched, _) = self._drain(policy, trace)
+        request = ScheduleRequest(cluster=cluster, jobs=jobs,
+                                  arrivals=arrivals, horizon=horizon)
+        oneshot = get_policy(policy)(request)
+        assert _same_schedule(sched, oneshot)
+
+    def test_dynamic_daemon_journals_evict(self):
+        *_, store, _, _ = self._drain("sjf-bco-dynamic", _evict_trace)
+        kinds = [e.kind for e in store.entries()]
+        assert "evict" in kinds
+        # the evict record sits strictly inside a PLACING..decided bracket
+        i = kinds.index("evict")
+        assert "decided" in kinds[i:]
+
+    def test_elastic_daemon_journals_resize(self):
+        *_, store, _, _ = self._drain("gadget-elastic", _resize_trace)
+        kinds = [e.kind for e in store.entries()]
+        assert "resize" in kinds
+
+    @pytest.mark.parametrize("policy,trace", [
+        ("sjf-bco-dynamic", _evict_trace),
+        ("gadget-elastic", _resize_trace)])
+    def test_recovery_identical_at_every_prefix(self, policy, trace):
+        """Crash after EVERY journaled event; prefixes cutting inside an
+        EVICT/RESIZE bracket must recover to the pre-decision state and
+        re-derive the identical preemption."""
+        (cluster, jobs, arrivals, horizon,
+         store, full, _) = self._drain(policy, trace)
+        entries = store.entries()
+        in_bracket_cuts = 0
+        open_jid = None
+        for k in range(len(entries) + 1):
+            if k and entries[k - 1].kind == "transition" and \
+                    entries[k - 1].payload["to"] == "PLACING":
+                open_jid = entries[k - 1].jid
+            if k and entries[k - 1].kind == "decided":
+                open_jid = None
+            if open_jid is not None and any(
+                    e.kind in ("evict", "resize") for e in entries[:k]
+                    if e.seq > 0) and entries[k - 1].kind in (
+                        "evict", "resize"):
+                in_bracket_cuts += 1
+            daemon = Daemon.recover(
+                cluster, store.prefix(k),
+                QueueManager(default=TenantConfig(policy=policy)),
+                horizon=horizon)
+            for job, a in list(zip(jobs, arrivals))[len(daemon.jobs):]:
+                daemon.admit(job, arrival=int(a))
+            sched, _ = daemon.drain()
+            assert _same_schedule(full, sched), f"prefix {k}"
+        assert in_bracket_cuts > 0    # the interesting window was hit
+
+    def test_recover_then_crash_then_recover(self):
+        """A journal that already contains an abandoned (dangling)
+        bracket -- crash, recover, write on, crash again -- still
+        recovers: the abandoned bracket is skipped, not half-applied."""
+        (cluster, jobs, arrivals, horizon,
+         store, full, _) = self._drain("sjf-bco-dynamic", _evict_trace)
+        entries = store.entries()
+        cuts = [k for k in range(1, len(entries))
+                if entries[k - 1].kind in ("evict", "resize")]
+        assert cuts
+        k = cuts[0]                        # cut right after an evict record
+        snap = store.prefix(k)
+        daemon = Daemon.recover(
+            cluster, snap,
+            QueueManager(default=TenantConfig(policy="sjf-bco-dynamic")),
+            horizon=horizon)
+        for job, a in list(zip(jobs, arrivals))[len(daemon.jobs):]:
+            daemon.admit(job, arrival=int(a))
+        daemon.drain()                     # journal now has dangling + new
+        again = Daemon.recover(
+            cluster, daemon.store,
+            QueueManager(default=TenantConfig(policy="sjf-bco-dynamic")),
+            horizon=horizon)
+        sched, _ = again.drain()
+        assert _same_schedule(full, sched)
+
+    def test_schedule_arrivals_chooser_matches_policy(self):
+        """The registry chooser is literally the policy's online path."""
+        from repro.core.api import get_chooser
+        cluster, jobs, arrivals, horizon = _evict_trace()
+        request = ScheduleRequest(cluster=cluster, jobs=jobs,
+                                  arrivals=arrivals, horizon=horizon)
+        via_policy = get_policy("sjf-bco-dynamic")(request)
+        chooser = get_chooser("sjf-bco-dynamic")(cluster, 1.5, {})
+        via_loop = schedule_arrivals(request, chooser, "SJF-BCO-DYN")
+        assert _same_schedule(via_policy, via_loop)

@@ -1,0 +1,237 @@
+"""Property-based invariant suite for the preemption primitives.
+
+Drives a random evict / replace / resize / arrival sequence (hypothesis
+when available, a seed-sampled fallback otherwise -- the same gate as
+``test_substrate``) simultaneously through all three contention engines
+and asserts, after EVERY op:
+
+  (a) the engines agree bit-for-bit (U/R clocks, est windows, straddler
+      suffix lists, assignment, per-segment quotas), and a fresh state
+      replaying the exact op log -- the core of what
+      ``Daemon.recover`` does -- rebuilds the incremental state's clocks
+      bit-identically;
+  (b) no GPU is oversubscribed: per GPU, the committed segment windows
+      are pairwise disjoint;
+  (c) total residual work is conserved: per job, the segment quotas plus
+      any sidelined residual sum back to the submitted F_j;
+  (d) a ``refined_rho`` probe equals the post-commit stored rho for
+      every placement, on every engine.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import PlacementState, philly_cluster, philly_workload
+from repro.core.api import nominal_rho
+from repro.core.preempt import _best_candidate, evict, evictable, replace
+
+ENGINES = ("reference", "batched", "incremental")
+U_FACTOR = 1.5
+THETA = 1e9
+
+
+def _assert_engines_agree(states):
+    ref = states[ENGINES[0]]
+    for name in ENGINES[1:]:
+        st_ = states[name]
+        assert np.array_equal(ref.U, st_.U), name
+        assert np.array_equal(ref.R, st_.R), name
+        assert ref.est_start == st_.est_start, name
+        assert ref.est_finish == st_.est_finish, name
+        assert ref.seg_rho == st_.seg_rho, name
+        assert ref.seg_start == st_.seg_start, name
+        assert ref.seg_quota == st_.seg_quota, name
+        assert ref.placed_fin == st_.placed_fin, name
+        assert ref._straddle_fin == st_._straddle_fin, name
+        assert len(ref.assignment) == len(st_.assignment), name
+        for (j1, g1), (j2, g2) in zip(ref.assignment, st_.assignment):
+            assert j1 == j2 and np.array_equal(g1, g2), name
+
+
+def _assert_no_oversubscription(state):
+    """Per GPU, the committed segment windows are pairwise disjoint."""
+    per_gpu: dict[int, list[tuple[float, float]]] = {}
+    for e, (jid, gpus) in enumerate(state.assignment):
+        start = state.seg_start[e]
+        fin = state.placed_fin[state.seg_row[e]]
+        for g in gpus.tolist():
+            per_gpu.setdefault(g, []).append((start, fin))
+    for g, spans in per_gpu.items():
+        spans.sort()
+        for (s0, f0), (s1, f1) in zip(spans, spans[1:]):
+            assert s1 >= f0 - 1e-9, \
+                f"GPU {g} oversubscribed: [{s0},{f0}) overlaps [{s1},{f1})"
+
+
+def _assert_conservation(state, totals, sidelined):
+    """Per job: segment quotas + sidelined residual == submitted F_j."""
+    placed: dict[int, float] = {}
+    for e, (jid, _) in enumerate(state.assignment):
+        placed[jid] = placed.get(jid, 0.0) + state.seg_quota[e]
+    for jid, total in totals.items():
+        got = placed.get(jid, 0.0) + sidelined.get(jid, 0.0)
+        assert got == pytest.approx(total, rel=1e-9), \
+            f"job {jid}: {got} != submitted {total}"
+
+
+def _replay_oplog(cluster, oplog, engine):
+    """A fresh state fed the exact recorded ops -- the core-level analogue
+    of the service daemon's journal replay."""
+    fresh = PlacementState(cluster, engine=engine)
+    for op in oplog:
+        if op[0] == "advance":
+            fresh.advance_to(op[1])
+        elif op[0] == "commit":
+            _, job, gpus, rho, start = op
+            fresh.commit(job, gpus, rho, start, U_FACTOR)
+        else:
+            _, jid, t, num_gpus = op
+            res = evict(fresh, jid, t, U_FACTOR, num_gpus=num_gpus)
+            assert res is not None
+    return fresh
+
+
+def _commit_everywhere(states, oplog, job):
+    """Place ``job`` via the shared FA-FFP/LBSGF pick on every engine;
+    each engine derives its own candidate and they must agree (that IS
+    invariant (a)).  Returns False when no engine can place it."""
+    picks = {}
+    for name, st_ in states.items():
+        picks[name] = _best_candidate(st_, job, nominal_rho(st_.cluster, job),
+                                      U_FACTOR, THETA)
+    ref = picks[ENGINES[0]]
+    for name in ENGINES[1:]:
+        if ref is None:
+            assert picks[name] is None, name
+        else:
+            fin, gpus, rho, start = ref
+            fin2, gpus2, rho2, start2 = picks[name]
+            assert (fin, rho, start) == (fin2, rho2, start2), name
+            assert np.array_equal(gpus, gpus2), name
+    if ref is None:
+        return False
+    for name, st_ in states.items():
+        fin, gpus, rho, start = picks[name]
+        # (d) the probe the pick was scored with == what commit stores
+        rho_probe, start_probe = st_.refined_rho(job, gpus)
+        assert (rho_probe, start_probe) == (rho, start), name
+        st_.commit(job, gpus, rho, start, U_FACTOR)
+        assert st_.seg_rho[-1] == rho and st_.seg_start[-1] == start, name
+        assert st_.est_finish[job.jid] == start + rho, name
+    oplog.append(("commit", job, picks[ENGINES[0]][1], ref[2], ref[3]))
+    return True
+
+
+def _run_sequence(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    cluster = philly_cluster(3, seed=int(rng.integers(10)))
+    jobs = [dataclasses.replace(j, jid=i) for i, j in enumerate(
+        philly_workload(seed=int(rng.integers(100)))[:8])]
+    states = {e: PlacementState(cluster, engine=e) for e in ENGINES}
+    oplog: list[tuple] = []
+    totals: dict[int, float] = {}
+    sidelined: dict[int, float] = {}
+    pending = list(jobs)
+    clock = 0.0
+    evictions = 0
+    for _ in range(24):
+        clock += float(rng.integers(0, 40))
+        for st_ in states.values():
+            st_.advance_to(clock)
+        oplog.append(("advance", clock))
+        do_arrive = pending and (rng.random() < 0.6 or not states[
+            ENGINES[0]].est_finish)
+        if do_arrive:
+            job = pending.pop(0)
+            totals[job.jid] = float(job.iters)
+            if not _commit_everywhere(states, oplog, job):
+                del totals[job.jid]
+        else:
+            st0 = states[ENGINES[0]]
+            live = sorted(jid for jid, f in st0.est_finish.items()
+                          if f > clock + 1e-9
+                          and evictable(st0, jid, clock)
+                          and jid not in sidelined)
+            if not live:
+                continue
+            victim = live[int(rng.integers(len(live)))]
+            vjob = st0.placed_jobs[st0.seg_row[st0._entry_of[victim]]]
+            shrink = rng.random() < 0.3 and vjob.num_gpus > 1
+            ng = max(1, vjob.num_gpus // 2) if shrink else None
+            residuals = {}
+            for name, st_ in states.items():
+                residuals[name] = evict(st_, victim, clock, U_FACTOR,
+                                        num_gpus=ng)
+            ref = residuals[ENGINES[0]]
+            assert all(r == ref for r in residuals.values())
+            assert ref is not None     # evictable() said so
+            evictions += 1
+            oplog.append(("evict", victim, clock,
+                          ng if ng is not None else ref.num_gpus))
+            if not _commit_everywhere(states, oplog, ref):
+                sidelined[victim] = float(ref.iters)
+        _assert_engines_agree(states)
+        for st_ in states.values():
+            _assert_no_oversubscription(st_)
+        _assert_conservation(states[ENGINES[0]], totals, sidelined)
+    if evictions == 0:
+        # Unlucky draw: force one clean-removal eviction so every seed
+        # exercises the primitives.
+        big = dataclasses.replace(jobs[0], jid=len(jobs), iters=10**5)
+        totals[big.jid] = float(big.iters)
+        assert _commit_everywhere(states, oplog, big)
+        st0 = states[ENGINES[0]]
+        t = st0.seg_start[st0._entry_of[big.jid]]
+        for st_ in states.values():
+            assert evict(st_, big.jid, t, U_FACTOR) is not None
+        oplog.append(("evict", big.jid, t, big.num_gpus))
+        sidelined[big.jid] = float(big.iters)
+        evictions += 1
+        _assert_engines_agree(states)
+        _assert_conservation(states[ENGINES[0]], totals, sidelined)
+    assert evictions > 0, "sequence never exercised the primitives"
+    # (a) the op log rebuilds the live clocks bit-for-bit, on any engine
+    live = states["incremental"]
+    for engine in ENGINES:
+        fresh = _replay_oplog(cluster, oplog, engine)
+        assert np.array_equal(fresh.U, live.U), engine
+        assert np.array_equal(fresh.R, live.R), engine
+        assert fresh.seg_quota == live.seg_quota, engine
+        assert fresh._straddle_fin == live._straddle_fin, engine
+        assert fresh.est_finish == live.est_finish, engine
+
+
+def test_replace_respects_budget():
+    """replace() refuses a residual that would bust Eq. (16)."""
+    cluster = philly_cluster(2, seed=0)
+    jobs = philly_workload(seed=0)[:2]
+    jobs = [dataclasses.replace(j, jid=i) for i, j in enumerate(jobs)]
+    state = PlacementState(cluster)
+    assert _best_candidate(state, jobs[0],
+                           nominal_rho(cluster, jobs[0]), U_FACTOR, THETA)
+    fin, gpus, rho, start = _best_candidate(
+        state, jobs[0], nominal_rho(cluster, jobs[0]), U_FACTOR, THETA)
+    state.commit(jobs[0], gpus, rho, start, U_FACTOR)
+    res = evict(state, 0, rho / 2, U_FACTOR)
+    assert res is not None and 0 < res.iters < jobs[0].iters
+    tight = float(state.U[gpus].max())          # no headroom at all
+    assert not replace(state, res, gpus, tight, U_FACTOR)
+    assert replace(state, res, gpus, THETA, U_FACTOR)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_random_preemption_invariants(seed):
+        _run_sequence(seed)
+else:
+    @pytest.mark.parametrize("seed", [0, 1, 7, 2**31 - 1])
+    def test_random_preemption_invariants(seed):
+        _run_sequence(seed)
