@@ -36,6 +36,12 @@ Four measurements per job count |J| (16 / 64 / 256 by default):
      schedule at that scale.
   5. *Kernel microbench*: ``evaluate_many`` on a [C, J, S] stack vs a
      Python loop of C ``evaluate()`` calls over the same placements.
+  6. *Heterogeneity*: a cluster whose per-GPU ``gpu_speeds`` / per-server
+     ``links`` arrays merely restate the homogeneous scalars is asserted
+     bit-identical to the scalar cluster (schedule AND SimEvent stream --
+     the degenerate-identity contract of the hetero refactor, enforced in
+     CI via ``--quick``), plus one mixed-tier timing point recording what
+     the generalized Eq. (8) terms cost end-to-end.
 
 Emits ``BENCH_contention.json`` -- part of the repo's perf trajectory --
 with wall-clock numbers and the model-evaluation counters (engine
@@ -47,6 +53,7 @@ Usage::
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
@@ -255,6 +262,67 @@ def bench_placement(n_jobs: int, seed: int = 1,
     return row
 
 
+def bench_hetero(n_jobs: int, seed: int = 1) -> dict:
+    """Degenerate-hetero identity (hard assert) + one mixed-tier point.
+
+    A cluster whose ``gpu_speeds``/``links`` restate the scalars must be
+    bit-identical to the scalar cluster -- schedule and simulation both
+    (CI's bench smoke runs this under ``--quick``).  The mixed-tier row
+    then times SJF-BCO + simulate on a genuinely heterogeneous cluster
+    (half the servers at quarter speed, half the uplinks isolated), so
+    the cost of the generalized Eq. (8) terms is tracked across PRs."""
+    cluster, jobs = philly_case(n_jobs, seed)
+    uniform = dataclasses.replace(
+        cluster,
+        gpu_speeds=(cluster.gpu_speed,) * cluster.num_gpus,
+        links=((cluster.b_inter, "shared"),) * cluster.num_servers)
+    assert not uniform.is_heterogeneous
+    horizon = max(1200, 12 * n_jobs)
+    row: dict = {"J": n_jobs, "modes": {}}
+    schedules, sims = {}, {}
+    for name, cl in (("scalar", cluster), ("degenerate", uniform)):
+        request = ScheduleRequest(cluster=cl, jobs=jobs, horizon=horizon)
+        sched, t_sched = timed(lambda req=request:
+                               get_policy("sjf-bco")(req))
+        sim, t_sim = timed(lambda c=cl, a=sched.assignment:
+                           simulate(c, jobs, a))
+        schedules[name], sims[name] = sched, sim
+        row["modes"][name] = {
+            "schedule_s": round(t_sched, 4),
+            "simulate_s": round(t_sim, 4),
+            "sim_makespan": sim.makespan,
+        }
+    # Hard failure, not just a report field: CI's bench-smoke step relies
+    # on this to catch degenerate-hetero divergence from the scalars.
+    row["degenerate_identical_to_scalar"] = check_identical(
+        schedules["scalar"], schedules["degenerate"],
+        f"degenerate hetero cluster diverged from scalars at J={n_jobs}",
+        check_theta=True)
+    if sims["scalar"].events != sims["degenerate"].events:
+        raise AssertionError(
+            f"degenerate hetero SimEvent stream diverged at J={n_jobs}")
+    # Mixed tiers: half the servers at quarter speed, half isolated.
+    speeds, links = [], []
+    for s, cap in enumerate(cluster.capacities):
+        speeds += [cluster.gpu_speed * (0.25 if s % 2 else 1.0)] * cap
+        links.append((cluster.b_inter, "isolated" if s % 2 else "shared"))
+    mixed = dataclasses.replace(cluster, gpu_speeds=tuple(speeds),
+                                links=tuple(links))
+    request = ScheduleRequest(cluster=mixed, jobs=jobs, horizon=horizon)
+    sched, t_sched = timed(lambda req=request: get_policy("sjf-bco")(req))
+    sim, t_sim = timed(lambda a=sched.assignment:
+                       simulate(mixed, jobs, a))
+    row["modes"]["mixed"] = {
+        "schedule_s": round(t_sched, 4),
+        "simulate_s": round(t_sim, 4),
+        "sim_makespan": sim.makespan,
+    }
+    row["mixed_overhead"] = round(
+        row["modes"]["mixed"]["schedule_s"]
+        / max(1e-9, row["modes"]["scalar"]["schedule_s"]), 2)
+    return row
+
+
 def bench_evaluate_many(n_jobs: int, n_cands: int = 64, seed: int = 0,
                         repeats: int = 5) -> dict:
     """evaluate_many on [C, J, S] vs a loop of C evaluate() calls."""
@@ -290,7 +358,7 @@ def main() -> None:
     report = {"bench": "contention-engine",
               "quick": args.quick,
               "scheduler": [], "sweep": [], "bisect": [],
-              "placement": [], "evaluate_many": []}
+              "placement": [], "evaluate_many": [], "hetero": []}
     for n in sizes:
         row = bench_scheduler(n)
         report["scheduler"].append(row)
@@ -337,6 +405,16 @@ def main() -> None:
         report["evaluate_many"].append(row)
         print(f"evaluate_many |J|={n:4d} C={row['C']}: loop {row['loop_s']}s"
               f" batched {row['batched_s']}s  x{row['speedup']:.1f}")
+    # Degenerate-hetero identity is part of the --quick CI smoke too
+    # (hard asserts inside bench_hetero).
+    for n in sizes:
+        row = bench_hetero(n)
+        report["hetero"].append(row)
+        print(f"hetero |J|={n:4d}: scalar "
+              f"{row['modes']['scalar']['schedule_s']:.2f}s"
+              f"  mixed {row['modes']['mixed']['schedule_s']:.2f}s"
+              f"  x{row['mixed_overhead']:.2f}"
+              f"  identical={row['degenerate_identical_to_scalar']}")
 
     write_report(report, args.out)
 

@@ -1,0 +1,103 @@
+"""Heterogeneity demo: per-GPU speed tiers and per-link bandwidth classes.
+
+1. Replay the bundled Alibaba-style trace (``examples/sample_trace.csv``)
+   through the service daemon twice: once on a homogeneous cluster, once
+   on a two-tier cluster where half the servers run at a fraction of the
+   nominal GPU speed.  SJF-BCO's placement **visibly flips**: the
+   speed-aware schedule shifts GPU-slots off the slow servers (Eq. (1)
+   prices a ring at its slowest occupied server's floor).
+2. Cross-simulate: run the speed-blind schedule on the two-tier cluster
+   next to the speed-aware one.  With MB-scale gradients the reduce term
+   ``share / C`` is a small slice of tau, so the model trades queueing
+   on the fast servers against slow-server iterations -- the printout
+   shows both sides of that trade honestly.
+3. A directed straddle vignette: two jobs sharing two servers' uplinks,
+   priced under ``"shared"`` links (the paper's Eq. (8) divisor
+   ``f(alpha, k)``) vs ``"isolated"`` links (a dedicated fabric, divisor
+   exempt) -- the per-iteration time drops accordingly.
+
+Run:  PYTHONPATH=src python examples/hetero_demo.py [--slow-factor 0.05]
+"""
+import argparse
+import dataclasses
+import os
+
+import numpy as np
+
+from repro.core import (Cluster, Job, ScheduleRequest, evaluate, get_policy,
+                        load_trace, replay_trace, simulate)
+from repro.service import SchedulerService
+
+TRACE = os.path.join(os.path.dirname(__file__), "sample_trace.csv")
+
+parser = argparse.ArgumentParser(description=__doc__)
+parser.add_argument("--slow-factor", type=float, default=0.05,
+                    help="speed of the slow tier relative to the fast one")
+args = parser.parse_args()
+
+# -- 1. trace replay on homogeneous vs two-tier clusters -------------------
+homog = Cluster((8, 8, 8, 8))
+two_tier = dataclasses.replace(
+    homog,
+    gpu_speeds=(homog.gpu_speed,) * 16
+    + (homog.gpu_speed * args.slow_factor,) * 16)
+print(f"cluster: 4 servers x 8 GPUs; servers 2-3 at "
+      f"{args.slow_factor:.0%} speed in the two-tier variant\n")
+
+
+def server_loads(cluster, sched):
+    """GPU-slots assigned per server over the whole schedule."""
+    counts = np.zeros(cluster.num_servers, dtype=int)
+    edges = np.concatenate([[0], np.cumsum(cluster.capacities_array)])
+    for _, gpus in sched.assignment:
+        for g in gpus:
+            counts[np.searchsorted(edges, g, side="right") - 1] += 1
+    return counts
+
+
+schedules = {}
+for name, cl in (("homogeneous", homog), ("two-tier", two_tier)):
+    svc = SchedulerService(cl, policy="sjf-bco")
+    replay_trace(svc.daemon, TRACE)
+    sched, sim = svc.drain()
+    schedules[name] = sched
+    print(f"{name:12s}  per-server GPU-slots {server_loads(cl, sched)}"
+          f"  makespan {sim.makespan:.0f}  avg JCT {sim.avg_jct:.1f}")
+
+flipped = not np.array_equal(server_loads(homog, schedules["homogeneous"]),
+                             server_loads(two_tier, schedules["two-tier"]))
+print(f"\nplacement flipped vs homogeneous: {flipped}"
+      " (slow servers offloaded)\n")
+
+# -- 2. cross-simulate both schedules on the two-tier cluster --------------
+jobs, arrivals = load_trace(TRACE)
+for name in ("homogeneous", "two-tier"):
+    sim = simulate(two_tier, jobs, schedules[name].assignment,
+                   arrivals=arrivals)
+    label = "speed-blind" if name == "homogeneous" else "speed-aware"
+    print(f"{label} schedule executed on the two-tier cluster: "
+          f"makespan {sim.makespan:.0f}, avg JCT {sim.avg_jct:.1f}")
+print("(with MB-scale gradients the reduce term is a small slice of tau,"
+      "\n so slow-server iterations and fast-server queueing trade off)\n")
+
+# -- 3. shared vs isolated uplinks on a directed straddle ------------------
+caps = (2, 2)
+straddlers = [Job(jid=j, num_gpus=2, iters=3000, grad_size=1.5e-3,
+                  batch=32, dt_fwd=3e-4, dt_bwd=8e-3) for j in range(2)]
+Y = np.array([[1, 1], [1, 1]], dtype=np.int64)    # both straddle both
+for kind in ("shared", "isolated"):
+    cl = Cluster(caps)
+    cl = dataclasses.replace(cl, links=((cl.b_inter, kind),) * 2)
+    m = evaluate(cl, straddlers, Y)
+    print(f"{kind:9s} uplinks: p={m.p[0]}  B={m.bandwidth[0]:.3f} GB/slot"
+          f"  tau={m.tau[0]:.5f}  phi={m.phi[0]} iters/slot")
+print("isolated uplinks skip the Eq. (8) divisor f(alpha, k):"
+      " full bandwidth, more iterations per slot")
+
+# The batch path produces the same placements as the daemon replay --
+# the identity guarantee extends to trace-driven arrivals.
+batch = get_policy("sjf-bco")(ScheduleRequest(
+    cluster=two_tier, jobs=jobs, arrivals=arrivals, horizon=1200))
+assert all(j1 == j2 and np.array_equal(g1, g2) for (j1, g1), (j2, g2)
+           in zip(batch.assignment, schedules["two-tier"].assignment))
+print("\nbatch scheduling == daemon trace replay: identical placements")

@@ -40,6 +40,7 @@ from repro.core.scenario import (ArrivalSpec, ClusterSpec, ContentionStats,
                                  RunReport, Scenario, WorkloadSpec,
                                  run_scenario)
 from repro.core.theory import TheoryReport, report
+from repro.core.trace import load_trace, replay_trace
 
 __all__ = [
     # unified scheduling API
@@ -51,6 +52,7 @@ __all__ = [
     # scenarios
     "Scenario", "ClusterSpec", "WorkloadSpec", "ArrivalSpec",
     "RunReport", "ContentionStats", "run_scenario",
+    "load_trace", "replay_trace",
     # problem model
     "Cluster", "philly_cluster", "Job", "philly_workload",
     "IterModel", "contention_level", "degradation", "evaluate",

@@ -473,10 +473,21 @@ class PlacementState:
 
     def _probe_rho(self, job: Job, y_j: np.ndarray, start: float) -> float:
         """Incremental rho_hat(y^k): Eq. (6) via :meth:`_probe_p`, then
-        the scalar Eq. (8); tau_j needs nothing else."""
+        the scalar Eq. (8); tau_j needs nothing else.  On heterogeneous
+        clusters the candidate's worst-member device terms ride along, so
+        the probe prices the slow tier / isolated uplink it would land on."""
         p, n_srv = self._probe_p(job, y_j, start)
         contention.EVAL_COUNTS["probes"] += 1
-        tau = scalar_tau(self.cluster, job, p, n_srv)
+        cl = self.cluster
+        if cl.is_heterogeneous:
+            pos = y_j > 0
+            tau = scalar_tau(
+                cl, job, p, n_srv,
+                speed=float(cl.server_speed_floor[pos].min()),
+                bw_shared=float(cl.uplink_shared_or_inf[pos].min()),
+                bw_isolated=float(cl.uplink_isolated_or_inf[pos].min()))
+        else:
+            tau = scalar_tau(cl, job, p, n_srv)
         return slots_for(job.iters, tau)
 
     def refined_rho(self, job: Job, gpus: np.ndarray) -> tuple[float, float]:
@@ -515,10 +526,20 @@ class PlacementState:
                       for g in gpu_sets]
             ps = np.empty(len(gpu_sets), dtype=np.int64)
             n_srv = np.empty(len(gpu_sets), dtype=np.int64)
+            ys = np.empty((len(gpu_sets), self.cluster.num_servers),
+                          dtype=np.int64)
             for c, (g, start) in enumerate(zip(gpu_sets, starts)):
-                ps[c], n_srv[c] = self._probe_p(job, self._y_of(g), start)
+                ys[c] = self._y_of(g)
+                ps[c], n_srv[c] = self._probe_p(job, ys[c], start)
             contention.EVAL_COUNTS["probes"] += len(gpu_sets)
-            taus = contention.scalar_tau_many(self.cluster, job, ps, n_srv)
+            if self.cluster.is_heterogeneous:
+                speed, bw_sh, bw_iso = contention._hetero_mins(
+                    self.cluster, ys > 0)
+                taus = contention.scalar_tau_many(
+                    self.cluster, job, ps, n_srv, speed=speed,
+                    bw_shared=bw_sh, bw_isolated=bw_iso)
+            else:
+                taus = contention.scalar_tau_many(self.cluster, job, ps, n_srv)
             return [(slots_for(job.iters, float(tau)), start)
                     for tau, start in zip(taus, starts)]
         if self.engine != "batched":

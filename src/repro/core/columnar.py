@@ -224,7 +224,13 @@ class ColumnarPlacement:
                 ps[c] = p
                 ns[c] = n_srv
             contention.EVAL_COUNTS["probes"] += C
-            taus = scalar_tau_many(cl, job, ps, ns)
+            if cl.is_heterogeneous:
+                speed, bw_sh, bw_iso = contention._hetero_mins(
+                    cl, np.asarray(ys) > 0)
+                taus = scalar_tau_many(cl, job, ps, ns, speed=speed,
+                                       bw_shared=bw_sh, bw_isolated=bw_iso)
+            else:
+                taus = scalar_tau_many(cl, job, ps, ns)
             rhos = slots_for_many(job.iters, taus)
         elif self.engine == "batched":
             rhos = self._score_batched(job, need, starts, ys)

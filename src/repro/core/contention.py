@@ -24,6 +24,16 @@ Three evaluation engines share these formulas (and are bit-identical):
 
 ``EVAL_COUNTS`` tallies how often each engine runs so benchmarks can report
 "full-model evaluations saved" (see ``benchmarks/bench_contention.py``).
+
+Heterogeneous clusters (per-GPU ``gpu_speeds`` / per-server uplink
+``links`` on :class:`~repro.core.cluster.Cluster`) generalise B_j and the
+reduction speed: a job's compute speed is the minimum server speed floor
+over its occupied servers (Eq. (1) paces a ring at its slowest member),
+and its inter-server bandwidth is ``min(min_iso_bw, min_shared_bw / f)``
+-- isolated uplinks skip the Eq. (8) sharing divisor.  Every engine
+derives these from the occupancy rows via :func:`_hetero_mins`, and the
+degenerate case (uniform speeds, all-shared links) runs today's scalar
+expressions bit-identically.
 """
 from __future__ import annotations
 
@@ -184,6 +194,23 @@ def _job_terms(jobs: list[Job]) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     return G, share, compute
 
 
+def _hetero_mins(cluster: Cluster, occupied: np.ndarray
+                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Worst-member device terms per occupancy row.
+
+    ``occupied`` is a bool mask [..., S]; returns ``(speed, bw_shared,
+    bw_isolated)`` with the leading shape of ``occupied``: the slowest
+    server speed floor, slowest shared uplink, and slowest isolated uplink
+    over each row's occupied servers (+inf where a class is absent, so
+    ``min(bw_isolated, bw_shared / f)`` and ``np.minimum`` select the real
+    bottleneck).  Masked minima are pure selections, so the degenerate
+    uniform cluster reproduces the scalar fields exactly."""
+    speed = np.where(occupied, cluster.server_speed_floor, np.inf).min(axis=-1)
+    bw_sh = np.where(occupied, cluster.uplink_shared_or_inf, np.inf).min(axis=-1)
+    bw_iso = np.where(occupied, cluster.uplink_isolated_or_inf, np.inf).min(axis=-1)
+    return speed, bw_sh, bw_iso
+
+
 def evaluate(cluster: Cluster, jobs: list[Job], Y: np.ndarray) -> IterModel:
     """Evaluate Eqs. (6)-(8) for the active-job placement ``Y`` [J, S]."""
     J = len(jobs)
@@ -197,13 +224,19 @@ def evaluate(cluster: Cluster, jobs: list[Job], Y: np.ndarray) -> IterModel:
     k = np.maximum(cluster.xi1 * p, 1.0)
     multi = (Y > 0).sum(axis=1) > 1
     f = degradation(cluster.alpha, k)
-    bandwidth = np.where(multi, cluster.b_inter / f, cluster.b_intra)
+    if cluster.is_heterogeneous:
+        speed, bw_sh, bw_iso = _hetero_mins(cluster, Y > 0)
+        bandwidth = np.where(multi, np.minimum(bw_iso, bw_sh / f),
+                             cluster.b_intra)
+    else:
+        speed = cluster.gpu_speed
+        bandwidth = np.where(multi, cluster.b_inter / f, cluster.b_intra)
 
     n_srv = (Y > 0).sum(axis=1).astype(np.float64)
     gamma = cluster.xi2 * n_srv
 
     exchange = 2.0 * share / bandwidth
-    reduce_t = share / cluster.gpu_speed
+    reduce_t = share / speed
     tau = exchange + reduce_t + gamma + compute
     phi = np.floor(1.0 / tau).astype(np.int64)
     EVAL_COUNTS["full"] += 1
@@ -254,10 +287,16 @@ def stack_model(cluster: Cluster, G: np.ndarray, share: np.ndarray,
         tau = None                       # derived from the terms below
     k = np.maximum(cluster.xi1 * p, 1.0)
     f = degradation(cluster.alpha, k)
-    bandwidth = np.where(n_srv_i > 1, cluster.b_inter / f, cluster.b_intra)
+    if cluster.is_heterogeneous:
+        speed, bw_sh, bw_iso = _hetero_mins(cluster, Y > 0)
+        bandwidth = np.where(n_srv_i > 1, np.minimum(bw_iso, bw_sh / f),
+                             cluster.b_intra)
+    else:
+        speed = cluster.gpu_speed
+        bandwidth = np.where(n_srv_i > 1, cluster.b_inter / f, cluster.b_intra)
     gamma = cluster.xi2 * n_srv_i.astype(np.float64)
     exchange = 2.0 * share2 / bandwidth
-    reduce_t = share2 / cluster.gpu_speed
+    reduce_t = share2 / speed
     compute_b = compute2
     if tau is None:
         tau = exchange + reduce_t + gamma + compute_b
@@ -278,11 +317,20 @@ def ladder_terms(cluster: Cluster, jobs: list[Job], Y_rows: np.ndarray
     G, share, compute = _job_terms(jobs)
     straddle = (Y_rows > 0) & (Y_rows < G[:, None])
     n_srv = (Y_rows > 0).sum(axis=1)
+    if cluster.is_heterogeneous:
+        speed, bw_sh, bw_iso = _hetero_mins(cluster, Y_rows > 0)
+        reduce_t = share / speed
+    else:
+        reduce_t = share / cluster.gpu_speed
+        bw_sh = np.full(len(jobs), float(cluster.b_inter))
+        bw_iso = np.full(len(jobs), np.inf)
     return {
         "straddle": straddle,
         "multi": n_srv > 1,
         "share": share,
-        "reduce": share / cluster.gpu_speed,
+        "reduce": reduce_t,
+        "bw_sh": bw_sh,
+        "bw_iso": bw_iso,
         "gamma": cluster.xi2 * n_srv.astype(np.float64),
         "compute": compute,
     }
@@ -315,8 +363,13 @@ def tau_ladder(cluster: Cluster, terms: dict[str, np.ndarray],
     p = (straddle[None, :, :] * per_server[:, None, :]).max(axis=2)
     k = np.maximum(cluster.xi1 * p, 1.0)
     f = k + cluster.alpha * (k - 1.0)    # degradation(); k already >= 1
+    # bw_sh is filled with b_inter (bw_iso with +inf) on homogeneous
+    # clusters, so this is the same elementwise division as the scalar
+    # form there and the isolated-uplink minimum elsewhere.
     bandwidth = np.where(terms["multi"][rows][None, :],
-                         cluster.b_inter / f, cluster.b_intra)
+                         np.minimum(terms["bw_iso"][rows][None, :],
+                                    terms["bw_sh"][rows][None, :] / f),
+                         cluster.b_intra)
     exchange = 2.0 * terms["share"][rows][None, :] / bandwidth
     tau = exchange + terms["reduce"][rows][None, :] \
         + terms["gamma"][rows][None, :] + terms["compute"][rows][None, :]
@@ -430,6 +483,11 @@ class IncrementalEval:
         self._share = np.zeros(cap)
         self._reduce = np.zeros(cap)
         self._compute = np.zeros(cap)
+        # Device terms over the row's occupied servers (cached at add;
+        # constants gpu_speed / b_inter / +inf on homogeneous clusters).
+        self._spd = np.zeros(cap)
+        self._bw_sh = np.zeros(cap)
+        self._bw_iso = np.zeros(cap)
         # Placement-dependent but row-local terms.
         self._gamma = np.zeros(cap)
         self._multi = np.zeros(cap, dtype=bool)
@@ -449,9 +507,9 @@ class IncrementalEval:
         cap = len(self._live)
         new = cap * 2
         self._jobs.extend([None] * cap)
-        for name in ("_live", "_share", "_reduce", "_compute", "_gamma",
-                     "_multi", "_p", "_k", "_bandwidth", "_exchange",
-                     "_tau", "_phi"):
+        for name in ("_live", "_share", "_reduce", "_compute", "_spd",
+                     "_bw_sh", "_bw_iso", "_gamma", "_multi", "_p", "_k",
+                     "_bandwidth", "_exchange", "_tau", "_phi"):
             old = getattr(self, name)
             setattr(self, name, np.concatenate(
                 [old, np.zeros(cap, dtype=old.dtype)]))
@@ -476,10 +534,19 @@ class IncrementalEval:
         self._Y[row] = y
         w = float(job.num_gpus)
         share = (job.grad_size / w) * (w - 1.0) if w > 1 else 0.0
-        self._share[row] = share
-        self._reduce[row] = share / cl.gpu_speed
-        self._compute[row] = job.dt_fwd * float(job.batch) + job.dt_bwd
         pos = y > 0
+        if cl.is_heterogeneous:
+            spd = float(cl.server_speed_floor[pos].min())
+            bw_sh = float(cl.uplink_shared_or_inf[pos].min())
+            bw_iso = float(cl.uplink_isolated_or_inf[pos].min())
+        else:
+            spd, bw_sh, bw_iso = cl.gpu_speed, cl.b_inter, np.inf
+        self._spd[row] = spd
+        self._bw_sh[row] = bw_sh
+        self._bw_iso[row] = bw_iso
+        self._share[row] = share
+        self._reduce[row] = share / spd
+        self._compute[row] = job.dt_fwd * float(job.batch) + job.dt_bwd
         n_srv = int(pos.sum())
         self._gamma[row] = cl.xi2 * float(n_srv)
         self._multi[row] = n_srv > 1
@@ -513,7 +580,15 @@ class IncrementalEval:
         if k < 1.0:
             k = 1.0
         f = k + cl.alpha * (k - 1.0)
-        bandwidth = (cl.b_inter / f) if self._multi[r] else cl.b_intra
+        if self._multi[r]:
+            # _bw_sh/_bw_iso cache b_inter/+inf on homogeneous clusters,
+            # so this is the original b_inter / f there.
+            bandwidth = float(self._bw_sh[r]) / f
+            bw_iso = float(self._bw_iso[r])
+            if bw_iso < bandwidth:
+                bandwidth = bw_iso
+        else:
+            bandwidth = cl.b_intra
         exchange = 2.0 * float(self._share[r]) / bandwidth
         tau = exchange + float(self._reduce[r]) \
             + float(self._gamma[r]) + float(self._compute[r])
@@ -531,7 +606,10 @@ class IncrementalEval:
         cl = self.cluster
         k = np.maximum(cl.xi1 * self._p[upd], 1.0)
         f = degradation(cl.alpha, k)
-        bandwidth = np.where(self._multi[upd], cl.b_inter / f, cl.b_intra)
+        bandwidth = np.where(self._multi[upd],
+                             np.minimum(self._bw_iso[upd],
+                                        self._bw_sh[upd] / f),
+                             cl.b_intra)
         exchange = 2.0 * self._share[upd] / bandwidth
         tau = exchange + self._reduce[upd] + self._gamma[upd] + self._compute[upd]
         self._k[upd] = k
@@ -610,7 +688,15 @@ class IncrementalEval:
             if straddle_row.any() else 0
         n_srv = int((y > 0).sum())
         EVAL_COUNTS["probes"] += 1
-        return scalar_tau(self.cluster, job, p, n_srv)
+        cl = self.cluster
+        if cl.is_heterogeneous:
+            pos = y > 0
+            return scalar_tau(
+                cl, job, p, n_srv,
+                speed=float(cl.server_speed_floor[pos].min()),
+                bw_shared=float(cl.uplink_shared_or_inf[pos].min()),
+                bw_isolated=float(cl.uplink_isolated_or_inf[pos].min()))
+        return scalar_tau(cl, job, p, n_srv)
 
     def probe_tau_many(self, job: Job, Y_stack: np.ndarray) -> np.ndarray:
         """Batched :meth:`probe_tau`: tau of ``job`` for each candidate
@@ -626,7 +712,12 @@ class IncrementalEval:
         p = np.where(straddle, (self._per_server + 1)[None, :], 0).max(axis=1)
         n_srv = (Y > 0).sum(axis=1)
         EVAL_COUNTS["probes"] += Y.shape[0]
-        return scalar_tau_many(self.cluster, job, p, n_srv)
+        cl = self.cluster
+        if cl.is_heterogeneous:
+            speed, bw_sh, bw_iso = _hetero_mins(cl, Y > 0)
+            return scalar_tau_many(cl, job, p, n_srv, speed=speed,
+                                   bw_shared=bw_sh, bw_isolated=bw_iso)
+        return scalar_tau_many(cl, job, p, n_srv)
 
     def window(self, rows) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(p, tau, phi) for live ``rows`` -- the simulator's per-window
@@ -657,46 +748,68 @@ class IncrementalEval:
 # --------------------------------------------------------------------------
 
 
-def scalar_tau(cluster: Cluster, job: Job, p: int, n_srv: int) -> float:
+def scalar_tau(cluster: Cluster, job: Job, p: int, n_srv: int,
+               speed: float | None = None, bw_shared: float | None = None,
+               bw_isolated: float | None = None) -> float:
     """Eq. (8) for one job given its contention level ``p`` and server
     spread ``n_srv`` -- the scalar core shared by the incremental probes.
     Plain-float IEEE arithmetic (Python floats are IEEE float64, so the
     inlined degradation is the same computation), bit-identical to the
     vectorised engines.
+
+    ``speed``/``bw_shared``/``bw_isolated`` carry the heterogeneous
+    worst-member device terms over the candidate's occupied servers (see
+    :func:`_hetero_mins`); ``None`` keeps the uniform scalars (the
+    homogeneous original, expression for expression).
     """
     w = float(job.num_gpus)
     share = (job.grad_size / w) * (w - 1.0) if w > 1 else 0.0
     k = max(cluster.xi1 * p, 1.0)
     if n_srv > 1:
-        bandwidth = cluster.b_inter / (k + cluster.alpha * (k - 1.0))
+        sh = cluster.b_inter if bw_shared is None else bw_shared
+        bandwidth = sh / (k + cluster.alpha * (k - 1.0))
+        if bw_isolated is not None and bw_isolated < bandwidth:
+            bandwidth = bw_isolated
     else:
         bandwidth = cluster.b_intra
     gamma = cluster.xi2 * float(n_srv)
     exchange = 2.0 * share / bandwidth
-    reduce_t = share / cluster.gpu_speed
+    reduce_t = share / (cluster.gpu_speed if speed is None else speed)
     compute = job.dt_fwd * float(job.batch) + job.dt_bwd
     return exchange + reduce_t + gamma + compute
 
 
 def scalar_tau_many(cluster: Cluster, job: Job, p: np.ndarray,
-                    n_srv: np.ndarray) -> np.ndarray:
+                    n_srv: np.ndarray, speed: np.ndarray | None = None,
+                    bw_shared: np.ndarray | None = None,
+                    bw_isolated: np.ndarray | None = None) -> np.ndarray:
     """Batched :func:`scalar_tau`: Eq. (8) for one job at C hypothesised
     (contention level, server spread) pairs in one vectorised pass -- the
     batched probe entry point shared by :meth:`IncrementalEval.probe_tau_many`
     and the scheduler's multi-candidate rho-hat probes
     (:meth:`repro.core.api.PlacementState.refined_rho_many`).  Elementwise
     float64 with the same operation order as the scalar form, so the
-    results are bit-identical per candidate."""
+    results are bit-identical per candidate.  The optional
+    ``speed``/``bw_shared``/``bw_isolated`` arrays ([C], from
+    :func:`_hetero_mins`) carry per-candidate heterogeneous device terms;
+    ``None`` keeps the uniform scalars."""
     p = np.asarray(p, dtype=np.float64)
     n_srv = np.asarray(n_srv)
     w = float(job.num_gpus)
     share = (job.grad_size / w) * (w - 1.0) if w > 1 else 0.0
     k = np.maximum(cluster.xi1 * p, 1.0)
     f = degradation(cluster.alpha, k)
-    bandwidth = np.where(n_srv > 1, cluster.b_inter / f, cluster.b_intra)
+    sh = cluster.b_inter if bw_shared is None \
+        else np.asarray(bw_shared, dtype=np.float64)
+    bw_multi = sh / f
+    if bw_isolated is not None:
+        bw_multi = np.minimum(np.asarray(bw_isolated, dtype=np.float64),
+                              bw_multi)
+    bandwidth = np.where(n_srv > 1, bw_multi, cluster.b_intra)
     gamma = cluster.xi2 * n_srv.astype(np.float64)
     exchange = 2.0 * share / bandwidth
-    reduce_t = share / cluster.gpu_speed
+    reduce_t = share / (cluster.gpu_speed if speed is None
+                        else np.asarray(speed, dtype=np.float64))
     compute = job.dt_fwd * float(job.batch) + job.dt_bwd
     return exchange + reduce_t + gamma + compute
 
@@ -747,14 +860,28 @@ def estimate_exec_time(cluster: Cluster, job: Job, Y_snapshot: np.ndarray,
 
 def tau_bounds(cluster: Cluster, job: Job) -> tuple[float, float]:
     """[tau_lo, tau_hi] per §5.1: B in [b_e/f(a, max_s O_s), b_i], spread in
-    [1, G_j] servers.  Used to derive the l/u estimate bracket."""
+    [1, G_j] servers.  Used to derive the l/u estimate bracket.
+
+    On heterogeneous clusters the bracket widens to the device extremes:
+    tau_lo prices the fastest server speed floor, tau_hi the slowest floor
+    and the worst effective uplink (isolated uplinks keep their full
+    bandwidth; shared ones pay f(alpha, k_max))."""
     w = float(job.num_gpus)
     share = (job.grad_size / w) * (w - 1.0) if w > 1 else 0.0
     compute = job.dt_fwd * job.batch + job.dt_bwd
     k_max = max(1.0, cluster.xi1 * max(cluster.capacities))
-    b_lo = cluster.b_inter / degradation(cluster.alpha, k_max)
-    tau_lo = 2.0 * share / cluster.b_intra + share / cluster.gpu_speed \
+    if cluster.is_heterogeneous:
+        f_max = degradation(cluster.alpha, k_max)
+        eff = np.where(cluster.uplink_isolated, cluster.uplink_bandwidth,
+                       cluster.uplink_bandwidth / f_max)
+        b_lo = float(eff.min())
+        speed_hi = float(cluster.server_speed_floor.max())
+        speed_lo = float(cluster.server_speed_floor.min())
+    else:
+        b_lo = cluster.b_inter / degradation(cluster.alpha, k_max)
+        speed_hi = speed_lo = cluster.gpu_speed
+    tau_lo = 2.0 * share / cluster.b_intra + share / speed_hi \
         + cluster.xi2 * 1.0 + compute
-    tau_hi = 2.0 * share / b_lo + share / cluster.gpu_speed \
+    tau_hi = 2.0 * share / b_lo + share / speed_lo \
         + cluster.xi2 * min(w, cluster.num_servers) + compute
     return tau_lo, tau_hi

@@ -22,9 +22,10 @@ import dataclasses
 import numpy as np
 
 from repro.core.api import ScheduleRequest, ScheduleResult, get_policy
-from repro.core.cluster import Cluster, philly_cluster
+from repro.core.cluster import Cluster, _draw_hetero, philly_cluster
 from repro.core.jobs import Job, philly_workload
 from repro.core.simulator import SimResult, simulate
+from repro.core.trace import load_trace
 
 __all__ = ["ClusterSpec", "WorkloadSpec", "ArrivalSpec", "Scenario",
            "ContentionStats", "RunReport", "run_scenario"]
@@ -34,19 +35,38 @@ __all__ = ["ClusterSpec", "WorkloadSpec", "ArrivalSpec", "Scenario",
 class ClusterSpec:
     """Cluster description: explicit ``capacities`` or a seeded Philly
     draw of ``num_servers`` servers; optional contention-constant
-    overrides (xi1/xi2/alpha/bandwidths)."""
+    overrides (xi1/xi2/alpha/bandwidths) and per-server heterogeneity
+    draws -- ``speed_tiers`` ``((speed, weight), ...)`` assigns each
+    server's GPUs one drawn speed tier, ``link_classes`` ``((bandwidth,
+    kind, weight), ...)`` draws each server's uplink class (``kind`` is
+    ``"shared"`` or ``"isolated"``; see :mod:`repro.core.cluster`)."""
 
     num_servers: int = 20
     seed: int = 0
     capacities: tuple[int, ...] | None = None
     overrides: tuple[tuple[str, float], ...] = ()
+    speed_tiers: tuple[tuple[float, float], ...] | None = None
+    link_classes: tuple[tuple[float, str, float], ...] | None = None
 
     def build(self) -> Cluster:
         if self.capacities is not None:
-            cluster = Cluster(capacities=tuple(self.capacities))
+            caps = tuple(int(c) for c in self.capacities)
+            rng = np.random.default_rng(self.seed)
+            cluster = Cluster(capacities=caps, **_draw_hetero(
+                rng, caps, self.speed_tiers, self.link_classes))
         else:
-            cluster = philly_cluster(self.num_servers, seed=self.seed)
+            cluster = philly_cluster(self.num_servers, seed=self.seed,
+                                     speed_tiers=self.speed_tiers,
+                                     link_classes=self.link_classes)
         if self.overrides:
+            valid = {f.name for f in dataclasses.fields(Cluster)}
+            unknown = sorted(k for k, _ in self.overrides if k not in valid)
+            if unknown:
+                raise ValueError(
+                    f"unknown Cluster override field(s) {unknown}; valid "
+                    f"fields are {sorted(valid)} (per-device heterogeneity "
+                    "goes in ClusterSpec.speed_tiers / link_classes, not "
+                    "overrides)")
             cluster = dataclasses.replace(cluster, **dict(self.overrides))
         return cluster
 
@@ -54,18 +74,27 @@ class ClusterSpec:
 @dataclasses.dataclass(frozen=True)
 class WorkloadSpec:
     """Workload description.  ``kind="philly"`` draws the §7 Philly-mix
-    jobs; ``num_jobs`` truncates (jobs are re-numbered so jid == index,
-    which the simulator's assignment indexing relies on)."""
+    jobs; ``kind="trace"`` parses the job shapes out of a recorded CSV
+    log at ``path`` (see :mod:`repro.core.trace` -- pair it with an
+    ``ArrivalSpec(kind="trace")`` on the same path to replay the recorded
+    arrivals too).  ``num_jobs`` truncates (jobs are re-numbered so
+    jid == index, which the simulator's assignment indexing relies on)."""
 
     kind: str = "philly"
     seed: int = 0
     num_jobs: int | None = None
     lam: float = 1.0
+    path: str | None = None
 
     def build(self) -> list[Job]:
-        if self.kind != "philly":
+        if self.kind == "trace":
+            if self.path is None:
+                raise ValueError("trace workload needs a path")
+            jobs, _ = load_trace(self.path)
+        elif self.kind == "philly":
+            jobs = philly_workload(seed=self.seed, lam=self.lam)
+        else:
             raise ValueError(f"unknown workload kind {self.kind!r}")
-        jobs = philly_workload(seed=self.seed, lam=self.lam)
         if self.num_jobs is not None:
             jobs = [dataclasses.replace(j, jid=i)
                     for i, j in enumerate(jobs[: self.num_jobs])]
@@ -75,14 +104,28 @@ class WorkloadSpec:
 @dataclasses.dataclass(frozen=True)
 class ArrivalSpec:
     """Arrival process.  ``kind="poisson"`` draws i.i.d. exponential gaps
-    at ``rate`` jobs/slot; ``kind="fixed"`` uses explicit ``times``."""
+    at ``rate`` jobs/slot; ``kind="fixed"`` uses explicit ``times``;
+    ``kind="trace"`` replays the recorded ``start_time`` column of the
+    CSV log at ``path`` (see :mod:`repro.core.trace` -- typically paired
+    with a ``WorkloadSpec(kind="trace")`` on the same path, so the job
+    count matches by construction)."""
 
     kind: str = "poisson"
     rate: float = 0.5
     seed: int = 0
     times: tuple[int, ...] | None = None
+    path: str | None = None
 
     def build(self, jobs: list[Job]) -> np.ndarray:
+        if self.kind == "trace":
+            if self.path is None:
+                raise ValueError("trace arrivals need a path")
+            _, arrivals = load_trace(self.path)
+            if len(arrivals) < len(jobs):
+                raise ValueError(
+                    f"trace {self.path!r} has {len(arrivals)} arrivals "
+                    f"for {len(jobs)} jobs")
+            return arrivals[: len(jobs)]
         if self.kind == "fixed":
             if self.times is None or len(self.times) != len(jobs):
                 raise ValueError("fixed arrivals need one time per job")

@@ -29,6 +29,41 @@ from jax.experimental import pallas as pl
 from repro.kernels.compat import CompilerParams
 
 
+def _tau_kernel_het(y_ref, g_ref, share_ref, compute_ref, spd_ref, sh_ref,
+                    iso_ref, p_ref, n_ref, tau_ref, *, xi1: float,
+                    xi2: float, alpha: float, b_intra: float):
+    """Heterogeneous candidate: Y [1, J, S] + per-server device terms
+    [1, S] -> p/n_srv/tau [1, J].
+
+    ``spd_ref``/``sh_ref``/``iso_ref`` hold the cluster's server speed
+    floors and shared/isolated uplink bandwidths (+inf where the class is
+    absent); the kernel reduces each row's worst members in VMEM with the
+    same masked-min selections as ``contention._hetero_mins`` and prices
+    Eq. (8) with ``min(bw_iso, bw_sh / f)`` -- isolated uplinks skip the
+    sharing divisor."""
+    y = y_ref[0]                                     # [J, S]
+    g = g_ref[0]                                     # [J]
+    pos = y > 0
+    straddle = pos & (y < g[:, None])                # Eq. (6) straddling
+    per_server = jnp.sum(straddle.astype(y.dtype), axis=0)        # [S]
+    p = jnp.max(jnp.where(straddle, per_server[None, :], 0), axis=1)
+    n_srv = jnp.sum(pos.astype(y.dtype), axis=1)
+    ftype = tau_ref.dtype
+    inf = jnp.asarray(jnp.inf, dtype=ftype)
+    speed = jnp.min(jnp.where(pos, spd_ref[0][None, :], inf), axis=1)
+    bw_sh = jnp.min(jnp.where(pos, sh_ref[0][None, :], inf), axis=1)
+    bw_iso = jnp.min(jnp.where(pos, iso_ref[0][None, :], inf), axis=1)
+    k = jnp.maximum(xi1 * p.astype(ftype), 1.0)      # Eq. (7)
+    f = k + alpha * (k - 1.0)                        # degradation f(a, k)
+    bandwidth = jnp.where(n_srv > 1, jnp.minimum(bw_iso, bw_sh / f), b_intra)
+    gamma = xi2 * n_srv.astype(ftype)
+    exchange = 2.0 * share_ref[0] / bandwidth
+    # Eq. (8), same left-to-right addition order as the NumPy engines.
+    tau_ref[0] = exchange + share_ref[0] / speed + gamma + compute_ref[0]
+    p_ref[0] = p
+    n_ref[0] = n_srv
+
+
 def _tau_kernel(y_ref, g_ref, share_ref, reduce_ref, compute_ref,
                 p_ref, n_ref, tau_ref, *, xi1: float, xi2: float,
                 alpha: float, b_inter: float, b_intra: float):
@@ -94,6 +129,48 @@ def _tau_stack_jit(Y, G, share, compute, *, xi1, xi2, alpha, b_inter,
       compute if terms_2d else compute[None, :])
 
 
+@functools.partial(jax.jit, static_argnames=(
+    "xi1", "xi2", "alpha", "b_intra", "terms_2d", "interpret"))
+def _tau_stack_het_jit(Y, G, share, compute, spd, sh, iso, *, xi1, xi2,
+                       alpha, b_intra, terms_2d, interpret):
+    C, J, S = Y.shape
+    ftype = share.dtype
+    itype = Y.dtype
+    term_idx = (lambda c: (c, 0)) if terms_2d else (lambda c: (0, 0))
+    # The [1, S] device-term rows are grid-invariant: every candidate
+    # reads block (0, 0).
+    srv_idx = lambda c: (0, 0)  # noqa: E731 - BlockSpec index lambda
+    return pl.pallas_call(
+        functools.partial(_tau_kernel_het, xi1=xi1, xi2=xi2, alpha=alpha,
+                          b_intra=b_intra),
+        grid=(C,),
+        in_specs=[
+            pl.BlockSpec((1, J, S), lambda c: (c, 0, 0)),
+            pl.BlockSpec((1, J), term_idx),
+            pl.BlockSpec((1, J), term_idx),
+            pl.BlockSpec((1, J), term_idx),
+            pl.BlockSpec((1, S), srv_idx),
+            pl.BlockSpec((1, S), srv_idx),
+            pl.BlockSpec((1, S), srv_idx),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, J), lambda c: (c, 0)),
+            pl.BlockSpec((1, J), lambda c: (c, 0)),
+            pl.BlockSpec((1, J), lambda c: (c, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C, J), itype),     # p
+            jax.ShapeDtypeStruct((C, J), itype),     # n_srv
+            jax.ShapeDtypeStruct((C, J), ftype),     # tau
+        ],
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(Y, G if terms_2d else G[None, :],
+      share if terms_2d else share[None, :],
+      compute if terms_2d else compute[None, :],
+      spd[None, :], sh[None, :], iso[None, :])
+
+
 def tau_stack(cluster, G: np.ndarray, share: np.ndarray,
               compute: np.ndarray, Y: np.ndarray,
               interpret: bool | None = None
@@ -107,6 +184,12 @@ def tau_stack(cluster, G: np.ndarray, share: np.ndarray,
     layout, in which case the candidate/branch axis becomes the kernel's
     grid dimension for the term blocks too).  ``interpret`` defaults to
     Pallas interpret mode on CPU backends.
+
+    Heterogeneous clusters dispatch to a kernel variant that carries the
+    per-server speed floors and shared/isolated uplink bandwidths as
+    grid-invariant [1, S] operands and reduces each row's worst members
+    in VMEM (see :func:`_tau_kernel_het`); homogeneous clusters keep the
+    original static-scalar kernel.
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
@@ -115,12 +198,23 @@ def tau_stack(cluster, G: np.ndarray, share: np.ndarray,
         raise ValueError(f"G must be [J] or [C, J], got shape {G.shape}")
     itype = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
     ftype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
-    p, n_srv, tau = _tau_stack_jit(
-        jnp.asarray(Y, dtype=itype), jnp.asarray(G, dtype=itype),
-        jnp.asarray(share, dtype=ftype), jnp.asarray(compute, dtype=ftype),
-        xi1=float(cluster.xi1), xi2=float(cluster.xi2),
-        alpha=float(cluster.alpha), b_inter=float(cluster.b_inter),
-        b_intra=float(cluster.b_intra), gpu_speed=float(cluster.gpu_speed),
-        terms_2d=G.ndim == 2, interpret=bool(interpret))
+    if cluster.is_heterogeneous:
+        p, n_srv, tau = _tau_stack_het_jit(
+            jnp.asarray(Y, dtype=itype), jnp.asarray(G, dtype=itype),
+            jnp.asarray(share, dtype=ftype), jnp.asarray(compute, dtype=ftype),
+            jnp.asarray(cluster.server_speed_floor, dtype=ftype),
+            jnp.asarray(cluster.uplink_shared_or_inf, dtype=ftype),
+            jnp.asarray(cluster.uplink_isolated_or_inf, dtype=ftype),
+            xi1=float(cluster.xi1), xi2=float(cluster.xi2),
+            alpha=float(cluster.alpha), b_intra=float(cluster.b_intra),
+            terms_2d=G.ndim == 2, interpret=bool(interpret))
+    else:
+        p, n_srv, tau = _tau_stack_jit(
+            jnp.asarray(Y, dtype=itype), jnp.asarray(G, dtype=itype),
+            jnp.asarray(share, dtype=ftype), jnp.asarray(compute, dtype=ftype),
+            xi1=float(cluster.xi1), xi2=float(cluster.xi2),
+            alpha=float(cluster.alpha), b_inter=float(cluster.b_inter),
+            b_intra=float(cluster.b_intra), gpu_speed=float(cluster.gpu_speed),
+            terms_2d=G.ndim == 2, interpret=bool(interpret))
     return (np.asarray(p, dtype=np.int64), np.asarray(n_srv, dtype=np.int64),
             np.asarray(tau, dtype=np.float64))

@@ -160,7 +160,7 @@ class SchedulerService:
     # -- recovery ---------------------------------------------------------
 
     @classmethod
-    def recover(cls, cluster: Cluster, store_path: str, *,
+    def recover(cls, cluster: "Cluster | None", store_path: str, *,
                 policy: str = "sjf-bco", params: "dict | None" = None,
                 tenants: "dict[str, TenantConfig] | None" = None,
                 round_slots: int = 1, max_batch: "int | None" = None,
@@ -170,7 +170,9 @@ class SchedulerService:
         Replays the journal (see :meth:`repro.service.daemon.Daemon.recover`),
         re-enqueues in-flight work, and returns a service ready to
         ``step``/``drain`` -- with placements and busy-time clocks
-        bit-identical to the crashed process's."""
+        bit-identical to the crashed process's.  ``cluster`` may be
+        ``None``: the journal's opening ``cluster`` record reconstructs
+        it exactly, heterogeneous speed/link arrays included."""
         service = cls.__new__(cls)
         default = TenantConfig(policy=policy,
                                params=tuple(sorted((params or {}).items())))

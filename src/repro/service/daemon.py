@@ -101,6 +101,13 @@ class Daemon:
         # them, so it forces per-round monitoring.
         self.monitor_every = 1 if feedback == "actual" else int(monitor_every)
         self.clock = clock or VirtualClock()
+        if len(self.store) == 0:
+            # A fresh journal opens with the cluster description, so
+            # recover() can rebuild heterogeneous clusters (per-GPU
+            # speeds, per-server link classes) exactly from the journal
+            # alone instead of being handed the object out-of-band.
+            self.store.append("cluster", -1, cluster.to_payload(),
+                              ts=self.clock.now())
         self.state = PlacementState(cluster, engine=engine)
         self.state.commit_hook = self._capture_commit
         self.state.evict_hook = self._capture_evict
@@ -299,9 +306,16 @@ class Daemon:
     # -- crash recovery ---------------------------------------------------
 
     @classmethod
-    def recover(cls, cluster: Cluster, store,
+    def recover(cls, cluster: "Cluster | None", store,
                 queue: "QueueManager | None" = None, **kwargs) -> "Daemon":
         """Rebuild a daemon from its journal.
+
+        ``cluster`` may be ``None``: journals opened by this daemon start
+        with a ``cluster`` record, from which the exact cluster --
+        heterogeneous speed/link arrays included -- is reconstructed.  A
+        cluster passed alongside such a journal is cross-checked against
+        the record (replaying a journal onto a different cluster would
+        silently reprice every placement).
 
         Replays every entry in sequence order: submissions recreate the
         job records, ``RUNNING`` transitions re-commit the journaled
@@ -314,6 +328,16 @@ class Daemon:
         caught mid-``PLACING`` is re-decided from exactly the pre-decision
         rng state -- recovery is decision-for-decision exact for every
         registered policy, stochastic ones included."""
+        entries = store.entries()
+        journaled = None
+        if entries and entries[0].kind == "cluster":
+            journaled = Cluster.from_payload(entries[0].payload)
+        if cluster is None:
+            if journaled is None:
+                raise ValueError(
+                    "journal has no cluster record (pre-heterogeneity "
+                    "journal); pass the cluster explicitly")
+            cluster = journaled
         daemon = cls(cluster, store, queue, **kwargs)
         # A chooser decision is journaled as a PLACING..decided bracket
         # (possibly containing evict/resize records, the victim's
@@ -325,7 +349,7 @@ class Daemon:
         # its original placement), the job re-enqueues as QUEUED, and the
         # deterministic chooser re-derives the identical decision.
         buf: "tuple[int, list] | None" = None
-        for entry in store.entries():
+        for entry in entries:
             if buf is not None:
                 jid0, pending = buf
                 # Entries a live bracket can never contain mark the open
@@ -363,6 +387,12 @@ class Daemon:
 
     def _replay(self, entry) -> None:
         """Fold one journal entry back into records / state / clock."""
+        if entry.kind == "cluster":
+            if Cluster.from_payload(entry.payload) != self.cluster:
+                raise ValueError(
+                    "journal cluster record disagrees with the daemon's "
+                    "cluster; replay the journal onto the journaled cluster")
+            return
         if entry.kind == "submit":
             if entry.jid != len(self.jobs):
                 raise ValueError(

@@ -34,7 +34,10 @@ __all__ = ["JournalEntry", "MemoryStore", "SqliteStore", "open_store"]
 class JournalEntry:
     """One journaled event.
 
-    ``kind`` is ``"submit"`` (payload: tenant, arrival, job fields),
+    ``kind`` is ``"cluster"`` (entry 1 of every fresh journal: the
+    :meth:`~repro.core.cluster.Cluster.to_payload` description, so
+    recovery can rebuild heterogeneous clusters without out-of-band
+    state), ``"submit"`` (payload: tenant, arrival, job fields),
     ``"transition"`` (payload: ``to`` state plus, for RUNNING, the exact
     ``gpus``/``rho``/``start``; for DONE, ``finish``; for outcomes of a
     stateful chooser, its post-decision ``rng`` generator state),

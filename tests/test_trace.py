@@ -1,0 +1,147 @@
+"""Trace-replay arrivals: CSV parsing, the scenario-layer trace kinds,
+and batch-vs-daemon replay identity on the bundled sample trace."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (ArrivalSpec, ClusterSpec, Scenario, WorkloadSpec,
+                        load_trace, philly_cluster, replay_trace,
+                        run_scenario)
+from repro.core.trace import (_DEFAULT_BATCH, _DEFAULT_DT_BWD,
+                              _DEFAULT_DT_FWD)
+from repro.service import SchedulerService
+
+SAMPLE = os.path.join(os.path.dirname(__file__), os.pardir, "examples",
+                      "sample_trace.csv")
+
+
+class TestLoadTrace:
+    def test_sample_parses(self):
+        jobs, arrivals = load_trace(SAMPLE)
+        assert len(jobs) == 16
+        assert [j.jid for j in jobs] == list(range(16))
+        # plan_gpu is GPU-percent: 100 -> 1 device, 1600 -> 16.
+        assert {j.num_gpus for j in jobs} == {1, 2, 4, 8, 16}
+        assert arrivals.dtype == np.int64
+        assert arrivals[0] == 0
+        assert np.all(np.diff(arrivals) >= 0)     # sorted by start_time
+
+    def test_optional_columns_default(self, tmp_path):
+        p = tmp_path / "min.csv"
+        p.write_text("start_time,plan_gpu,iterations,grad_size\n"
+                     "5,200,1000,0.001\n"
+                     "9,100,2000,0.002\n")
+        jobs, arrivals = load_trace(str(p))
+        assert jobs[0].batch == _DEFAULT_BATCH
+        assert jobs[0].dt_fwd == _DEFAULT_DT_FWD
+        assert jobs[0].dt_bwd == _DEFAULT_DT_BWD
+        # The excerpt's epoch is shifted out: first arrival is slot 0.
+        assert list(arrivals) == [0, 4]
+
+    def test_empty_optional_cells_default(self):
+        jobs, _ = load_trace(SAMPLE)
+        # Row "7,100,1100,0.0006,,," has empty optional cells.
+        j = next(j for j in jobs if j.iters == 1100)
+        assert j.batch == _DEFAULT_BATCH
+        assert j.dt_bwd == _DEFAULT_DT_BWD
+
+    def test_ties_keep_file_order(self, tmp_path):
+        p = tmp_path / "tie.csv"
+        p.write_text("start_time,plan_gpu,iterations,grad_size\n"
+                     "3,100,111,0.001\n"
+                     "3,100,222,0.001\n")
+        jobs, _ = load_trace(str(p))
+        assert [j.iters for j in jobs] == [111, 222]
+
+    def test_fractional_gpu_rounds_to_device(self, tmp_path):
+        p = tmp_path / "frac.csv"
+        p.write_text("start_time,plan_gpu,iterations,grad_size\n"
+                     "0,25,100,0.001\n"
+                     "0,250,100,0.001\n")
+        jobs, _ = load_trace(str(p))
+        assert [j.num_gpus for j in jobs] == [1, 2]
+
+    def test_missing_column_loud(self, tmp_path):
+        p = tmp_path / "bad.csv"
+        p.write_text("start_time,plan_gpu,iterations\n0,100,100\n")
+        with pytest.raises(ValueError, match="grad_size"):
+            load_trace(str(p))
+
+    def test_empty_trace_loud(self, tmp_path):
+        p = tmp_path / "empty.csv"
+        p.write_text("start_time,plan_gpu,iterations,grad_size\n")
+        with pytest.raises(ValueError, match="no job rows"):
+            load_trace(str(p))
+
+    def test_unparseable_row_names_line(self, tmp_path):
+        p = tmp_path / "garbled.csv"
+        p.write_text("start_time,plan_gpu,iterations,grad_size\n"
+                     "0,100,100,0.001\n"
+                     "1,abc,100,0.001\n")
+        with pytest.raises(ValueError, match="row 3"):
+            load_trace(str(p))
+
+
+class TestTraceScenario:
+    def _scenario(self, **cluster_kw):
+        return Scenario(
+            cluster=ClusterSpec(num_servers=4, seed=2, **cluster_kw),
+            workload=WorkloadSpec(kind="trace", path=SAMPLE),
+            arrivals=ArrivalSpec(kind="trace", path=SAMPLE),
+            policy="sjf-bco", horizon=10**6)
+
+    def test_end_to_end(self):
+        report = run_scenario(self._scenario())
+        assert report.sim.completed == 16
+        assert report.sim.makespan > 0
+
+    def test_daemon_replay_matches_batch(self):
+        """replay_trace through the service daemon == run_scenario on the
+        same trace (the daemon's identity guarantee extends to traces)."""
+        report = run_scenario(self._scenario())
+        cluster = ClusterSpec(num_servers=4, seed=2).build()
+        svc = SchedulerService(cluster, policy="sjf-bco")
+        records = replay_trace(svc.daemon, SAMPLE)
+        assert len(records) == 16
+        sched, sim = svc.drain()
+        assert len(sched.assignment) == len(report.schedule.assignment)
+        for (j1, g1), (j2, g2) in zip(sched.assignment,
+                                      report.schedule.assignment):
+            assert j1 == j2
+            assert np.array_equal(g1, g2)
+        assert np.array_equal(sim.finish, report.sim.finish)
+        assert sim.makespan == report.sim.makespan
+
+    def test_trace_on_hetero_cluster(self):
+        report = run_scenario(self._scenario(
+            speed_tiers=((50.0, 0.5), (10.0, 0.5)),
+            link_classes=((1.25, "shared", 0.5), (1.0, "isolated", 0.5))))
+        assert report.scenario.cluster.build().is_heterogeneous
+        assert report.sim.completed == 16
+
+    def test_workload_truncation_renumbers(self):
+        jobs = WorkloadSpec(kind="trace", path=SAMPLE, num_jobs=5).build()
+        assert [j.jid for j in jobs] == list(range(5))
+        arrivals = ArrivalSpec(kind="trace", path=SAMPLE).build(jobs)
+        assert len(arrivals) == 5
+
+    def test_arrival_count_mismatch_loud(self, tmp_path):
+        p = tmp_path / "short.csv"
+        p.write_text("start_time,plan_gpu,iterations,grad_size\n"
+                     "0,100,100,0.001\n")
+        jobs = WorkloadSpec(kind="trace", path=SAMPLE).build()
+        with pytest.raises(ValueError, match="1 arrivals"):
+            ArrivalSpec(kind="trace", path=str(p)).build(jobs)
+
+    def test_paths_required(self):
+        with pytest.raises(ValueError, match="path"):
+            WorkloadSpec(kind="trace").build()
+        with pytest.raises(ValueError, match="path"):
+            ArrivalSpec(kind="trace").build([])
+
+
+def test_replay_trace_rejects_bad_path():
+    svc = SchedulerService(philly_cluster(2, seed=0), policy="sjf-bco")
+    with pytest.raises(FileNotFoundError):
+        replay_trace(svc.daemon, "/nonexistent/trace.csv")
