@@ -92,8 +92,24 @@ def check_same_sim(a, b, label: str) -> bool:
     return True
 
 
-def write_report(report: dict, out: str) -> None:
-    """Write the section-row report JSON and confirm the path."""
+def write_report(report: dict, out: str,
+                 carry: tuple[str, ...] = ("scale",)) -> None:
+    """Write the section-row report JSON and confirm the path.
+
+    Sections named in ``carry`` that the current run did not produce are
+    preserved from the previous report at ``out`` (if any) instead of
+    being dropped -- so BENCH_contention.json's expensive ``--scale``
+    section survives a rerun without ``--scale``.
+    """
+    try:
+        with open(out) as fh:
+            prior = json.load(fh)
+    except (OSError, ValueError):
+        prior = {}
+    for key in carry:
+        if key not in report and key in prior:
+            report[key] = prior[key]
+            print(f"kept prior {key!r} section from {out}")
     with open(out, "w") as fh:
         json.dump(report, fh, indent=2)
     print(f"wrote {out}")

@@ -27,13 +27,20 @@ Four measurements per job count |J| (16 / 64 / 256 by default):
   4. *Columnar placement*: SJF-BCO end-to-end with
      ``params={"placement": "columnar"}`` (the whole sweep x bisect forest
      advanced as one [branches, S] array program: vectorised argmin picks,
-     Eq. (16) pool checks and batched refined-rho re-checks) vs
-     ``"scalar"`` (the per-branch ``try_place`` walk -- the oracle and
-     the default, and the faster CPU path at bench scale).  The final
-     (theta, kappa, placements) are asserted identical -- CI's bench
-     smoke fails on divergence.  The full run adds |J| = 1024 to this
-     section plus a columnar-only |J| = 16384 point, the first recorded
-     schedule at that scale.
+     Eq. (16) pool checks and batched refined-rho re-checks, jit-fused
+     per step under x64 -- the bench enables ``jax_enable_x64`` so the
+     "auto" backend resolves to "jit") vs ``"scalar"`` (the per-branch
+     ``try_place`` walk -- the oracle, and the faster CPU path at every
+     measured size).  The final (theta, kappa, placements) are asserted
+     identical -- CI's bench smoke fails on divergence.  Each row
+     records ``scalar_s`` / ``columnar_s`` / ``winner``; the section's
+     ``placement_crossover_J`` is the smallest measured |J| where
+     columnar wins, or null when the scalar walk wins throughout.  The
+     full run sweeps |J| = 256 / 1024 / 4096 / 16384; ``--scale`` adds
+     a ``scale`` section with the |J| = 100000 schedule+simulate point
+     (jit-columnar AND scalar, bit-identity asserted, simulated against
+     a seeded Pareto arrival stream) which ``write_report`` preserves
+     across reruns without the flag.
   5. *Kernel microbench*: ``evaluate_many`` on a [C, J, S] stack vs a
      Python loop of C ``evaluate()`` calls over the same placements.
   6. *Heterogeneity*: a cluster whose per-GPU ``gpu_speeds`` / per-server
@@ -49,7 +56,8 @@ acceptance bar: >= 5x fewer full-model evaluations at |J| = 256).
 
 Usage::
 
-    PYTHONPATH=src python benchmarks/bench_contention.py [--quick] [--out F]
+    PYTHONPATH=src python benchmarks/bench_contention.py \
+        [--quick] [--scale] [--out F]
 """
 from __future__ import annotations
 
@@ -210,31 +218,37 @@ def bench_bisect(n_jobs: int, seed: int = 1) -> dict:
 
 
 def bench_placement(n_jobs: int, seed: int = 1,
-                    columnar_only: bool = False) -> dict:
+                    backend: str = "auto") -> dict:
     """SJF-BCO end-to-end: columnar branch-vectorised placement (the
-    whole sweep x bisect forest as one [branches, S] array program) vs
-    the default scalar per-branch walk, identical modes otherwise
-    (incremental engine, batched sweep, speculative bisection; each
-    placement runs its own ladder defaults -- see ``bisect_levels``).
-    Schedules are asserted bit-identical.  Note the scalar walk is the
-    faster CPU path at these sizes (its copy-on-write lineages already
-    share placement work between branches, with none of the per-step
-    vectorisation overhead); the columnar rows track the cost of the
-    strictly-array engine that trace-scale and accelerator work build
-    on, so the gap is the number to watch across PRs.
+    whole sweep x bisect forest as one [branches, S] array program,
+    jit-fused per step when ``backend`` resolves to "jit") vs the
+    scalar per-branch walk, identical modes otherwise (incremental
+    engine, batched sweep, speculative bisection; each placement runs
+    its own ladder defaults -- see ``bisect_levels``).  Schedules are
+    asserted bit-identical (the jitted-columnar == scalar hard assert
+    of CI's ``--quick`` smoke).
 
-    ``columnar_only`` skips the scalar oracle -- used for the
-    |J| = 16384 point, the first recorded schedule at that scale."""
+    Each row records ``scalar_s`` / ``columnar_s`` / ``winner`` so the
+    report states explicitly, per size, which engine the measured
+    crossover favours; ``main`` folds these into the section-level
+    ``crossover_J``.  On this CPU host the scalar walk's copy-on-write
+    lineages win at every measured size (the columnar row is the
+    number to watch across PRs -- it is the trace-scale array engine
+    that accelerator work builds on); record what is measured, not
+    what is hoped."""
+    from repro.core.api import resolve_columnar_backend
     cluster, jobs = philly_case(n_jobs, seed)
     horizon = max(1200, 12 * n_jobs)
+    backend = resolve_columnar_backend({"columnar_backend": backend})
     row: dict = {"J": n_jobs, "sweep_mode": "batched",
-                 "bisect_mode": "speculative", "modes": {}}
+                 "bisect_mode": "speculative",
+                 "columnar_backend": backend, "modes": {}}
     schedules = {}
-    modes = ("columnar",) if columnar_only else ("scalar", "columnar")
-    for placement in modes:
-        request = ScheduleRequest(cluster=cluster, jobs=jobs,
-                                  horizon=horizon,
-                                  params={"placement": placement})
+    for placement in ("scalar", "columnar"):
+        request = ScheduleRequest(
+            cluster=cluster, jobs=jobs, horizon=horizon,
+            params={"placement": placement,
+                    "columnar_backend": backend})
         sched, t_sched = timed(lambda req=request:
                                get_policy("sjf-bco")(req))
         sim, t_sim = timed(lambda a=sched.assignment:
@@ -249,16 +263,76 @@ def bench_placement(n_jobs: int, seed: int = 1,
             "est_makespan": sched.est_makespan,
             "sim_makespan": sim.makespan,
         }
-    if not columnar_only:
-        # Hard failure, not just a report field: CI's bench-smoke step
-        # relies on this to catch columnar-placement divergence.
-        row["columnar_identical_to_scalar"] = check_identical(
-            schedules["scalar"], schedules["columnar"],
-            f"columnar placement diverged from scalar at J={n_jobs}",
-            check_theta=True)
-        row["schedule_speedup"] = round(
-            row["modes"]["scalar"]["schedule_s"]
-            / max(1e-9, row["modes"]["columnar"]["schedule_s"]), 2)
+    # Hard failure, not just a report field: CI's bench-smoke step
+    # relies on this to catch (jitted-)columnar divergence from the
+    # scalar oracle.
+    row["columnar_identical_to_scalar"] = check_identical(
+        schedules["scalar"], schedules["columnar"],
+        f"columnar placement diverged from scalar at J={n_jobs}",
+        check_theta=True)
+    row["scalar_s"] = row["modes"]["scalar"]["schedule_s"]
+    row["columnar_s"] = row["modes"]["columnar"]["schedule_s"]
+    row["winner"] = ("columnar" if row["columnar_s"] < row["scalar_s"]
+                     else "scalar")
+    row["schedule_speedup"] = round(
+        row["scalar_s"] / max(1e-9, row["columnar_s"]), 2)
+    return row
+
+
+def bench_scale(n_jobs: int = 100_000, seed: int = 1) -> dict:
+    """The |J| = 1e5 point: one batch SJF-BCO pass through the
+    jit-fused columnar placement, then a simulation of the resulting
+    schedule against a seeded heavy-tailed Pareto arrival stream
+    (``ArrivalSpec(kind="pareto")`` -- many near-zero gaps punctuated
+    by long lulls, mean-normalised to 0.5 jobs/slot).  Runs the scalar
+    walk on the same instance too, so the scalar-vs-columnar question
+    is answered by measurement at this scale rather than extrapolated
+    from the placement section's smaller sizes.  Behind ``--scale``
+    only (minutes of wall clock); ``write_report`` preserves the
+    section across reruns without the flag."""
+    from repro.core import ArrivalSpec
+    cluster, jobs = philly_case(n_jobs, seed)
+    jobs = [dataclasses.replace(j, jid=i)
+            for i, j in enumerate(jobs[:n_jobs])]
+    arrivals = ArrivalSpec(kind="pareto", rate=0.5, seed=seed,
+                           shape=1.5).build(jobs)
+    horizon = max(1200, 12 * n_jobs)
+    row: dict = {"J": n_jobs, "sweep_mode": "batched",
+                 "bisect_mode": "speculative",
+                 "arrivals": {"kind": "pareto", "rate": 0.5,
+                              "shape": 1.5, "seed": seed,
+                              "last_arrival": int(arrivals[-1])},
+                 "modes": {}}
+    schedules = {}
+    for placement, params in (
+            ("columnar", {"placement": "columnar",
+                          "columnar_backend": "jit"}),
+            ("scalar", {"placement": "scalar"})):
+        request = ScheduleRequest(cluster=cluster, jobs=jobs,
+                                  horizon=horizon, params=params)
+        sched, t_sched = timed(lambda req=request:
+                               get_policy("sjf-bco")(req))
+        sim, t_sim = timed(lambda a=sched.assignment:
+                           simulate(cluster, jobs, a, arrivals=arrivals))
+        schedules[placement] = sched
+        row["modes"][placement] = {
+            "schedule_s": round(t_sched, 4),
+            "simulate_s": round(t_sim, 4),
+            "theta": sched.theta,
+            "kappa": sched.kappa,
+            "completed": sim.completed,
+            "sim_makespan": sim.makespan,
+        }
+        print(f"scale |J|={n_jobs}: {placement} schedule "
+              f"{t_sched:.1f}s simulate {t_sim:.1f}s "
+              f"completed={sim.completed}", flush=True)
+    row["columnar_identical_to_scalar"] = check_identical(
+        schedules["scalar"], schedules["columnar"],
+        f"columnar placement diverged from scalar at J={n_jobs}",
+        check_theta=True)
+    row["winner"] = (
+        "columnar" if row["modes"]["columnar"]["schedule_s"]
+        < row["modes"]["scalar"]["schedule_s"] else "scalar")
     return row
 
 
@@ -352,7 +426,16 @@ def bench_evaluate_many(n_jobs: int, n_cands: int = 64, seed: int = 0,
 
 
 def main() -> None:
-    args = make_parser(__doc__, "BENCH_contention.json").parse_args()
+    ap = make_parser(__doc__, "BENCH_contention.json")
+    ap.add_argument("--scale", action="store_true",
+                    help="add the |J|=100000 schedule+simulate point "
+                         "(minutes; excluded from --quick)")
+    args = ap.parse_args()
+    # The jit-fused columnar backend is gated on float64 (the
+    # bit-identity precondition); enable it up front so "auto"
+    # resolves to "jit" and the placement rows measure the fast path.
+    import jax
+    jax.config.update("jax_enable_x64", True)
 
     sizes = [16, 64] if args.quick else [16, 64, 256]
     report = {"bench": "contention-engine",
@@ -384,22 +467,25 @@ def main() -> None:
               f"  speculative {row['modes']['speculative']['end_to_end_s']:.2f}s"
               f"  x{row['end_to_end_speedup']:.2f}"
               f"  identical={row['speculative_identical_to_sequential']}")
-    # Columnar-vs-scalar identity is part of the --quick CI smoke too
-    # (hard assert inside bench_placement).
-    for n in (sizes if args.quick else [256, 1024]):
+    # Jitted-columnar-vs-scalar identity is part of the --quick CI
+    # smoke too (hard assert inside bench_placement; x64 is on, so
+    # "auto" resolves to the jit backend).
+    for n in (sizes if args.quick else [256, 1024, 4096, 16384]):
         row = bench_placement(n)
         report["placement"].append(row)
-        print(f"placement |J|={n:5d}: scalar "
-              f"{row['modes']['scalar']['schedule_s']:.2f}s"
-              f"  columnar {row['modes']['columnar']['schedule_s']:.2f}s"
-              f"  x{row['schedule_speedup']:.2f}"
+        print(f"placement |J|={n:5d}: scalar {row['scalar_s']:.2f}s"
+              f"  columnar[{row['columnar_backend']}] "
+              f"{row['columnar_s']:.2f}s"
+              f"  winner={row['winner']}"
               f"  identical={row['columnar_identical_to_scalar']}")
-    if not args.quick:
-        row = bench_placement(16384, columnar_only=True)
-        report["placement"].append(row)
-        print(f"placement |J|=16384: columnar "
-              f"{row['modes']['columnar']['schedule_s']:.2f}s"
-              f"  (columnar-only point: tracks the array engine at scale)")
+    # The explicit crossover: smallest measured |J| where the columnar
+    # engine beats the scalar walk, or null when the scalar walk wins
+    # at every measured size (the honest answer on this CPU host).
+    won = [r["J"] for r in report["placement"] if r["winner"] == "columnar"]
+    report["placement_crossover_J"] = min(won) if won else None
+    print(f"placement crossover |J| = {report['placement_crossover_J']}")
+    if args.scale and not args.quick:
+        report["scale"] = [bench_scale(100_000)]
     for n in sizes:
         row = bench_evaluate_many(n, n_cands=16 if args.quick else 64)
         report["evaluate_many"].append(row)

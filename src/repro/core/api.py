@@ -275,32 +275,82 @@ def list_choosers() -> list[str]:
 # --------------------------------------------------------------------------
 
 # How the bisection policies advance their (theta, kappa) attempt forest:
-# "columnar" (default) runs the whole forest as one branch-vectorised
-# array program over deduplicated state rows
+# "columnar" runs the whole forest as one branch-vectorised array program
+# over deduplicated state rows
 # (:class:`repro.core.columnar.ColumnarPlacement`); "scalar" walks one
 # :class:`PlacementState` per branch (with the COW lineage sharing of
 # ``try_place_group``) and is the bit-identity oracle.  Same selectable
 # -oracle pattern as the ``engine``/``sweep``/``bisect`` axes.
 PLACEMENTS = ("scalar", "columnar")
 
+#: Job count from which the size-aware default flips to the columnar
+#: engine, or ``None`` while no flip is warranted.  Set from
+#: BENCH_contention.json's measured scalar-vs-columnar crossover
+#: (``placement_crossover_J``), and the bench records *no* crossover on
+#: this CPU host: the scalar COW walk wins at every measured size
+#: (24.7s vs 70.8s jit-columnar at |J| = 16384; both scale ~|J|^1.1,
+#: and the |J| = 100000 ``--scale`` point confirms scalar ahead), so
+#: the default stays scalar until a bench on some host proves a win.
+#: The columnar engine remains the explicit opt-in
+#: (``params={"placement": "columnar"}``) -- it is the strictly-array
+#: substrate accelerator work targets, not the CPU fast path.
+COLUMNAR_DEFAULT_MIN_JOBS: int | None = None
 
-def resolve_placement(params: dict) -> str:
-    """The request's ``placement`` param, validated (default "scalar").
+
+def resolve_placement(params: dict, n_jobs: int | None = None) -> str:
+    """The request's ``placement`` param, validated.
+
+    An explicit ``placement`` always wins.  Without one the default is
+    size-aware: "scalar" below :data:`COLUMNAR_DEFAULT_MIN_JOBS` jobs,
+    "columnar" at or above it -- but only where the bench-recorded
+    crossover proves the fused array program wins, and the current
+    BENCH_contention.json records none (the constant is ``None``, so
+    the default is "scalar" at every size); callers that pass no
+    ``n_jobs`` -- the scalar-only validate sites -- default to
+    "scalar" always.
 
     "scalar" is the per-branch ``PlacementState`` walk -- the bit-identity
-    oracle and, on CPU at bench scale, the faster end-to-end path (its
+    oracle and, on CPU at small |J|, the faster end-to-end path (its
     copy-on-write lineages already share ~all placement work between
     probe branches, and it pays no per-step vectorisation overhead).
     "columnar" advances the whole sweep x bisect forest as one
     [branches, S] array program (:class:`ColumnarPlacement`) -- identical
-    decisions, strictly-array state; it is the substrate for trace-scale
-    runs and accelerator offload (see docs/ARCHITECTURE.md).
+    decisions, strictly-array state, jit-fused per step
+    (:mod:`repro.kernels.placement`); it is the trace-scale fast path and
+    the accelerator substrate (see docs/ARCHITECTURE.md).
     """
-    placement = params.get("placement", "scalar")
+    placement = params.get("placement")
+    if placement is None:
+        return ("columnar" if COLUMNAR_DEFAULT_MIN_JOBS is not None
+                and n_jobs is not None
+                and n_jobs >= COLUMNAR_DEFAULT_MIN_JOBS else "scalar")
     if placement not in PLACEMENTS:
         raise ValueError(f"unknown placement {placement!r}; "
                          f"choose from {PLACEMENTS}")
     return placement
+
+
+def resolve_columnar_backend(params: dict) -> str:
+    """The request's ``columnar_backend`` param, resolved (default "auto").
+
+    "auto" picks the fused "jit" programs when jax runs in float64
+    (``jax_enable_x64``, the bit-identity precondition) and falls back to
+    "numpy" otherwise; "jit"/"kernel"/"numpy" force a backend ("kernel"
+    routes the same row math through the Pallas kernels of
+    :mod:`repro.kernels.placement`, interpret mode on CPU).  All backends
+    are bit-identical under x64 (pinned by
+    ``tests/test_columnar_equivalence.py``).
+    """
+    backend = params.get("columnar_backend", "auto")
+    if backend == "auto":
+        import jax
+        return "jit" if jax.config.jax_enable_x64 else "numpy"
+    from repro.core.columnar import COLUMNAR_BACKENDS
+    if backend not in COLUMNAR_BACKENDS:
+        raise ValueError(
+            f"unknown columnar backend {backend!r}; choose 'auto' or one "
+            f"of {COLUMNAR_BACKENDS}")
+    return backend
 
 
 # --------------------------------------------------------------------------

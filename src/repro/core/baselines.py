@@ -26,8 +26,9 @@ import numpy as np
 from repro.core.api import (Chooser, PlacementState, Picker, ScheduleRequest,
                             ScheduleResult, SharedState, bisect_theta,
                             finalize, nominal_rho, register_chooser,
-                            register_policy, resolve_placement,
-                            schedule_arrivals, try_place, try_place_group)
+                            register_policy, resolve_columnar_backend,
+                            resolve_placement, schedule_arrivals, try_place,
+                            try_place_group)
 from repro.core.columnar import ColumnarPlacement
 from repro.core.jobs import Job
 
@@ -111,7 +112,8 @@ def ls_chooser(cluster, u: float, params: dict) -> Chooser:
 
 def _columnar_attempts(cluster, jobs: list[Job], rho_noms: dict[int, float],
                        u: float, thetas: list[float], picker: Picker,
-                       engine: str | None, name: str
+                       engine: str | None, name: str,
+                       backend: str = "numpy"
                        ) -> "dict[float, ScheduleResult | None]":
     """All theta attempts of one picker as a single columnar program.
 
@@ -119,9 +121,12 @@ def _columnar_attempts(cluster, jobs: list[Job], rho_noms: dict[int, float],
     ladder advances a job per :meth:`place` call, sharing (and
     re-merging) state rows wherever the budgets pick the same GPUs.
     Decision-for-decision identical to the scalar try_place loop per
-    theta, hence bit-identical schedules."""
+    theta, hence bit-identical schedules.  ``backend`` selects where the
+    step math runs (the FF/LS pickers carry no fused ranking, so "jit"/
+    "kernel" fuse the probe scoring and keep per-step pick_many calls)."""
     ths = sorted(float(th) for th in thetas)
-    col = ColumnarPlacement(cluster, ths, jobs, u, engine=engine)
+    col = ColumnarPlacement(cluster, ths, jobs, u, engine=engine,
+                            backend=backend)
     for job in jobs:                       # request order (no SJF sort)
         col.place(job, rho_noms[job.jid], (picker,), 0)
         if not col.alive.any():
@@ -140,7 +145,8 @@ def _picker_policy(request: ScheduleRequest, picker: Picker, name: str
     :class:`~repro.core.columnar.ColumnarPlacement` program)."""
     cluster, u = request.cluster, request.u
     engine = request.params.get("engine")
-    placement = resolve_placement(request.params)
+    placement = resolve_placement(
+        request.params, len(request.jobs) if request.is_batch else None)
 
     if not request.is_batch:
         return schedule_arrivals(
@@ -156,12 +162,15 @@ def _picker_policy(request: ScheduleRequest, picker: Picker, name: str
                          "choose 'speculative' or 'sequential'")
     warm = bool(request.params.get("warm_start"))
     use_columnar = placement == "columnar" and not warm
+    backend = resolve_columnar_backend(request.params) if use_columnar \
+        else "numpy"
 
     def attempt(theta: float,
                 prev: ScheduleResult | None = None) -> ScheduleResult | None:
         if use_columnar:
             return _columnar_attempts(cluster, jobs, rho_noms, u, [theta],
-                                      picker, engine, name)[float(theta)]
+                                      picker, engine, name,
+                                      backend)[float(theta)]
         hints = dict(prev.assignment) if prev is not None else {}
         state = PlacementState(cluster, engine=engine)
         for job in jobs:
@@ -176,7 +185,8 @@ def _picker_policy(request: ScheduleRequest, picker: Picker, name: str
                          ) -> "dict[float, ScheduleResult | None]":
             if use_columnar:
                 return _columnar_attempts(cluster, jobs, rho_noms, u,
-                                          thetas, picker, engine, name)
+                                          thetas, picker, engine, name,
+                                          backend)
             # One shared state for the whole probe ladder; theta groups
             # advance in lockstep and fork (copy-on-write) only where the
             # budgets change a placement decision.

@@ -209,6 +209,14 @@ class Cluster:
         """Isolated-uplink bandwidth per server, +inf where shared, shape [S]."""
         return np.where(self.uplink_isolated, self.uplink_bandwidth, np.inf)
 
+    @functools.cached_property
+    def _batch_key_cache(self) -> dict:
+        """Scratch for :func:`repro.core.columnar.server_sums`: rows ->
+        read-only flattened ``row * S + gpu_server`` bincount keys.  Purely
+        derived from frozen fields, so caching on the instance is safe for
+        the same reason as the properties above."""
+        return {}
+
     def server_gpu_ids(self, s: int) -> np.ndarray:
         """Global GPU ids living on server ``s``."""
         offsets = np.concatenate([[0], np.cumsum(self.capacities_array)])

@@ -11,9 +11,12 @@ with a columnar layout:
 
   * every (theta, kappa) **branch** maps onto a deduplicated state **row**;
     the row store is a pair of ``[rows, N]`` clock matrices (busy-time U,
-    real-time R), ``[rows, |J|]`` est-start/est-finish matrices, and a
-    per-row decision log (the committed ``(jid, gpus)`` sequence, whose
-    running hash is the row's state fingerprint);
+    real-time R) plus ONE shared append-only decision-log arena -- flat
+    ``jid``/``start``/``finish``/``gpus`` columns threaded by per-record
+    parent pointers, so a row is just a tail index into the arena and
+    cloning a row costs O(N + S) regardless of how many jobs it has placed
+    (the O(placed) per-clone list copies of the first columnar engine were
+    the 16k-scale bottleneck);
   * each :meth:`place` call advances **every** live branch by one job as
     masked vectorised ops: the Eq. (16) pools (``U + rho/u <= theta``) are
     threshold counts on one sorted vector per row, the FA-FFP/LBSGF/FF/LS
@@ -22,6 +25,14 @@ with a columnar layout:
     one :func:`~repro.core.contention.scalar_tau_many` /
     :func:`~repro.core.contention.evaluate_stack` pass, and the Eq. (16)
     re-check splits each theta run with a single vectorised comparison;
+  * with ``backend="jit"`` (the default fast path under x64) the pool
+    split, the per-server reductions, both pickers' full GPU orderings and
+    the Eq. (6)-(8) probe scoring each run as ONE fused ``jax.jit``
+    program from :mod:`repro.kernels.placement` -- padded to power-of-two
+    row buckets so nothing retraces across jobs; ``backend="kernel"``
+    routes the same row math through the Pallas kernels (grid step = one
+    branch row, interpret mode on CPU); ``backend="numpy"`` keeps the
+    eager NumPy ops.  All three are bit-identical under x64;
   * branches whose decisions coincide are **re-merged**: a committed step
     is a pure function of (parent row, chosen GPU set), so children are
     deduplicated by the ``(parent row, gpus)`` key -- exactly the state
@@ -39,6 +50,7 @@ scalar walk stays selectable as ``placement="scalar"``.
 """
 from __future__ import annotations
 
+import array as _arr
 import bisect as _bisect
 
 import numpy as np
@@ -47,10 +59,32 @@ from repro.core import contention
 from repro.core.cluster import Cluster
 from repro.core.contention import (_job_terms, evaluate_stack,
                                    predict_exec_time, resolve_engine,
-                                   scalar_tau_many, slots_for_many)
+                                   scalar_tau, scalar_tau_many, slots_for,
+                                   slots_for_many)
 from repro.core.jobs import Job
 
-__all__ = ["ColumnarPlacement", "server_sums"]
+__all__ = ["ColumnarPlacement", "server_sums", "COLUMNAR_BACKENDS"]
+
+#: Selectable math backends for the columnar step (see module docstring).
+COLUMNAR_BACKENDS = ("numpy", "jit", "kernel")
+
+
+# Flat index arrays reused across millions of small pick/score batches
+# ([rows ~ 10-50, N ~ 100-300]); at those shapes the allocations cost more
+# than the reductions they feed.  Entries are marked read-only -- they are
+# only ever lexsort keys / gather indices.  Keys are (kind, R, M): "rep" =
+# np.repeat(arange(R), M), "tile" = np.tile(arange(M), R).
+_FLAT_IDS: dict[tuple[str, int, int], np.ndarray] = {}
+
+
+def _flat_ids(kind: str, R: int, M: int) -> np.ndarray:
+    a = _FLAT_IDS.get((kind, R, M))
+    if a is None:
+        a = (np.repeat(np.arange(R), M) if kind == "rep"
+             else np.tile(np.arange(M), R))
+        a.setflags(write=False)
+        _FLAT_IDS[(kind, R, M)] = a
+    return a
 
 
 def server_sums(cluster: Cluster, W: np.ndarray) -> np.ndarray:
@@ -64,8 +98,13 @@ def server_sums(cluster: Cluster, W: np.ndarray) -> np.ndarray:
     (occupancy scores) and LBSGF (server loads)."""
     R, N = W.shape
     S = cluster.num_servers
-    keys = (np.arange(R)[:, None] * S
-            + cluster.gpu_server[None, :]).ravel()
+    cache = cluster._batch_key_cache
+    keys = cache.get(R)
+    if keys is None:
+        keys = (np.arange(R)[:, None] * S
+                + cluster.gpu_server[None, :]).ravel()
+        keys.setflags(write=False)
+        cache[R] = keys
     return np.bincount(keys, weights=np.ascontiguousarray(W).ravel(),
                        minlength=R * S).reshape(R, S)
 
@@ -99,15 +138,29 @@ class ColumnarPlacement:
     counts + one ``scalar_tau_many`` per step, ``"batched"`` one padded
     :func:`~repro.core.contention.evaluate_stack` pass over the branch
     stack, ``"reference"`` the per-candidate ``evaluate`` loop.
+    ``backend`` selects where the step's array math runs: ``"numpy"``
+    (eager), ``"jit"`` (fused :mod:`repro.kernels.placement` programs;
+    needs ``jax_enable_x64``) or ``"kernel"`` (same programs with the
+    Pallas row kernels; interpret mode on CPU) -- all bit-identical.
     """
 
     #: try_place's escalation-ladder depth (same constant, same semantics).
     TRIES = 4
 
     def __init__(self, cluster: Cluster, thetas, jobs: list[Job], u: float,
-                 engine: str | None = None):
+                 engine: str | None = None, backend: str = "numpy"):
         self.cluster = cluster
         self.engine = resolve_engine(engine)
+        if backend not in COLUMNAR_BACKENDS:
+            raise ValueError(
+                f"unknown columnar backend {backend!r}; choose one of "
+                f"{COLUMNAR_BACKENDS}")
+        self.backend = backend
+        self._kern = None
+        if backend != "numpy":
+            from repro.kernels import placement as _kern
+            _kern.require_x64()
+            self._kern = _kern
         self.u = float(u)
         self.jobs = jobs
         self.thetas = np.asarray(thetas, dtype=np.float64)
@@ -129,16 +182,23 @@ class ColumnarPlacement:
         self.R = np.zeros((cap, N))          # real-time clocks (gang start)
         self._free = list(range(1, cap))
         self._live_rows: set[int] = {0}
-        # Per-row python structures (few rows thanks to dedup; everything
-        # hot is in the matrices above).  Committed est_start/est_finish
-        # live as per-decision lists parallel to _jid_seq -- O(placed)
-        # per row instead of O(|J|), so clones stay cheap at trace scale;
-        # result() scatters them back into dense arrays.
-        self._assignment: dict[int, list] = {0: []}
-        self._jid_seq: dict[int, list[int]] = {0: []}
-        self._y_seq: dict[int, list[np.ndarray]] = {0: []}
-        self._start_seq: dict[int, list[float]] = {0: []}
-        self._fin_seq: dict[int, list[float]] = {0: []}
+        # The shared decision-log arena: one append-only record per
+        # committed (child row, jid) decision, flat columns + a parent
+        # pointer chain.  A row's history is the chain from its tail
+        # record; rows are just (tail, count) pairs, so clones never copy
+        # decision lists and result() gathers chains as fancy-indexed
+        # NumPy views over the arena columns.
+        self._log_jid = _arr.array("q")
+        self._log_prev = _arr.array("q")
+        self._log_start = _arr.array("d")
+        self._log_fin = _arr.array("d")
+        self._log_g: list[np.ndarray] = []
+        self._log_y: list[np.ndarray] = []
+        self._tail: dict[int, int] = {0: -1}
+        self._count: dict[int, int] = {0: 0}
+        # Per-step caches over the arena (invalidated on commit).
+        self._chain_cache: dict[int, np.ndarray] = {}
+        self._y_cache: dict[int, np.ndarray] = {}
         # Per-server sorted est_finish of straddling placed jobs, shared
         # copy-on-write between cloned rows (see PlacementState.clone).
         self._straddle_fin: dict[int, list[list[float]]] = \
@@ -148,6 +208,21 @@ class ColumnarPlacement:
         self._state_hash: dict[int, int] = {0: 0}
         # Picker tuple already validated by place() (identity-cached).
         self._checked_pickers: tuple | None = None
+        self._pick_ids: np.ndarray | None = None
+        # Branch thetas as plain floats for the singleton-run scalar
+        # compares (the vector form stays in self.thetas).
+        self._thetas_f = self.thetas.tolist()
+        # Live-branch counter (place() kills branches; O(1) liveness for
+        # the sweep's early-exit check).
+        self._n_live = B
+        # Per-job rho memo for the homogeneous incremental engine: Eq. (8)
+        # depends on the candidate only through (p, n_srv), and a step's
+        # candidates hit a handful of distinct pairs -- one scalar_tau per
+        # distinct pair replaces whole scalar_tau_many/score_probes calls
+        # (bit-identical: the scalar expression is pinned equal to the
+        # vectorised and kernel forms).
+        self._rho_memo: dict[tuple[int, int], float] = {}
+        self._rho_memo_jid = -1
 
     # -- row store ---------------------------------------------------------
 
@@ -165,29 +240,70 @@ class ColumnarPlacement:
     def _free_row(self, r: int) -> None:
         self._live_rows.discard(r)
         self._free.append(r)
-        for store in (self._assignment, self._jid_seq, self._y_seq,
-                      self._start_seq, self._fin_seq,
-                      self._straddle_fin, self._fin_owned, self._state_hash):
+        for store in (self._tail, self._count, self._chain_cache,
+                      self._y_cache, self._straddle_fin, self._fin_owned,
+                      self._state_hash):
             store.pop(r, None)
 
     def _clone_row(self, parent: int) -> int:
         """Copy-on-write fork of a row (the columnar PlacementState.clone):
-        O(N + placed) copies; the sorted-finish lists are shared until a
+        O(N + S) copies -- the decision history is a tail pointer into the
+        shared arena, and the sorted-finish lists are shared until a
         commit first writes into one (both sides drop ownership)."""
         r = self._alloc_row()
         self.U[r] = self.U[parent]
         self.R[r] = self.R[parent]
-        self._assignment[r] = list(self._assignment[parent])
-        self._jid_seq[r] = list(self._jid_seq[parent])
-        self._y_seq[r] = list(self._y_seq[parent])
-        self._start_seq[r] = list(self._start_seq[parent])
-        self._fin_seq[r] = list(self._fin_seq[parent])
+        self._tail[r] = self._tail[parent]
+        self._count[r] = self._count[parent]
         self._straddle_fin[r] = list(self._straddle_fin[parent])
         S = self.cluster.num_servers
         self._fin_owned[r] = [False] * S
         self._fin_owned[parent] = [False] * S
         self._state_hash[r] = self._state_hash[parent]
         return r
+
+    # -- decision-log gathers ----------------------------------------------
+
+    def _chain(self, row: int) -> np.ndarray:
+        """Arena record indices of ``row``'s decisions, oldest first
+        (cached per step; a chain walk is O(placed) but runs only for
+        engines/results that need the full history)."""
+        idx = self._chain_cache.get(row)
+        if idx is None:
+            n = self._count[row]
+            idx = np.empty(n, dtype=np.int64)
+            i = self._tail[row]
+            prev = self._log_prev
+            for k in range(n - 1, -1, -1):
+                idx[k] = i
+                i = prev[i]
+            self._chain_cache[row] = idx
+        return idx
+
+    def _row_cols(self, row: int) -> tuple[np.ndarray, np.ndarray,
+                                           np.ndarray]:
+        """(jids, starts, finishes) of ``row``'s decisions, oldest first,
+        gathered zero-copy from the arena columns."""
+        idx = self._chain(row)
+        if not len(idx):
+            z = np.empty(0, dtype=np.int64)
+            return z, np.empty(0), np.empty(0)
+        return (np.frombuffer(self._log_jid, dtype=np.int64)[idx],
+                np.frombuffer(self._log_start, dtype=np.float64)[idx],
+                np.frombuffer(self._log_fin, dtype=np.float64)[idx])
+
+    def _row_Y(self, row: int) -> np.ndarray:
+        """Stacked per-decision occupancy rows ``[placed, S]`` of ``row``
+        (cached per step; only the batched/reference engines need it)."""
+        Y = self._y_cache.get(row)
+        if Y is None:
+            idx = self._chain(row)
+            S = self.cluster.num_servers
+            ylog = self._log_y
+            Y = (np.stack([ylog[i] for i in idx.tolist()])
+                 if len(idx) else np.zeros((0, S), dtype=np.int64))
+            self._y_cache[row] = Y
+        return Y
 
     # -- scoring (rho_hat(y^k) probes, batched over candidates) ------------
 
@@ -200,55 +316,84 @@ class ColumnarPlacement:
         cl = self.cluster
         S = cl.num_servers
         C = len(need)
-        starts = np.empty(C)
-        ys: list[np.ndarray] = []
-        for c, (w, _, g) in enumerate(need):
-            starts[c] = float(self.R[w.row, g].max()) if len(g) else 0.0
-            ys.append(np.bincount(cl.gpu_server[g], minlength=S))
+        G = job.num_gpus
+        # All candidates place the same G-gang, so starts and occupancy
+        # rows come from two batched gathers instead of C bincounts.
+        rows_n = np.fromiter((w.row for w, _, _ in need), np.int64, C)
+        gmat = np.concatenate([g for _, _, g in need]).reshape(C, G)
+        starts = (self.R[rows_n[:, None], gmat].max(axis=1) if G
+                  else np.zeros(C))
+        # Integer counts per (candidate, server): one flat bincount (same
+        # counts as the np.add.at it replaces, far cheaper per call).
+        ys_mat = np.bincount(_flat_ids("rep", C, G) * S
+                             + cl.gpu_server[gmat.ravel()],
+                             minlength=C * S).reshape(C, S)
+        ys = list(ys_mat)
         if self.engine == "incremental":
-            ps = np.empty(C, dtype=np.int64)
-            ns = np.empty(C, dtype=np.int64)
-            G = job.num_gpus
-            for c, (w, _, g) in enumerate(need):
-                sf = self._straddle_fin[w.row]
-                cut = starts[c] + 1e-9
-                p = 0
-                n_srv = 0
-                for s, yv in enumerate(ys[c].tolist()):
-                    if yv > 0:
-                        n_srv += 1
-                        if yv < G:
-                            fin = sf[s]
-                            p = max(p, len(fin)
-                                    - _bisect.bisect_right(fin, cut) + 1)
-                ps[c] = p
-                ns[c] = n_srv
+            ns = (ys_mat > 0).sum(axis=1)
+            ps = np.zeros(C, dtype=np.int64)
+            cuts = starts + 1e-9
+            # Contention probes only on actually-straddled (c, s) pairs
+            # (same max-over-servers as the scalar probe, same bisects).
+            pc, psrv = np.nonzero((ys_mat > 0) & (ys_mat < G))
+            for c, s in zip(pc.tolist(), psrv.tolist()):
+                fin = self._straddle_fin[need[c][0].row][s]
+                cnt = len(fin) - _bisect.bisect_right(fin, cuts[c]) + 1
+                if cnt > ps[c]:
+                    ps[c] = cnt
             contention.EVAL_COUNTS["probes"] += C
-            if cl.is_heterogeneous:
+            if not cl.is_heterogeneous:
+                # Homogeneous clusters: Eq. (8) sees the candidate only
+                # through (p, n_srv), and a step's candidates hit a
+                # handful of distinct pairs -- one memoised scalar_tau
+                # per pair (bit-identical to scalar_tau_many AND to the
+                # fused score_probes program: the scalar expression chain
+                # is pinned equal to both) replaces the whole batched /
+                # dispatched evaluation on every backend.
+                memo = self._rho_memo
+                if self._rho_memo_jid != job.jid:
+                    memo.clear()
+                    self._rho_memo_jid = job.jid
+                ns_l = ns.tolist()
+                ps_l = ps.tolist()
+                rhos = []
+                for c in range(C):
+                    pair = (ps_l[c], ns_l[c])
+                    r = memo.get(pair)
+                    if r is None:
+                        r = memo[pair] = slots_for(
+                            job.iters, scalar_tau(cl, job, *pair))
+                    rhos.append(r)
+            elif self._kern is not None:
+                # One fused Eq. (6)-(8) program over the candidate batch
+                # (bit-identical to the scalar_tau_many expressions).
+                _, rhos = self._kern.score_probes(
+                    cl, job, ys_mat, ps.astype(np.float64),
+                    use_kernel=self.backend == "kernel")
+            else:
                 speed, bw_sh, bw_iso = contention._hetero_mins(
-                    cl, np.asarray(ys) > 0)
+                    cl, ys_mat > 0)
                 taus = scalar_tau_many(cl, job, ps, ns, speed=speed,
                                        bw_shared=bw_sh, bw_isolated=bw_iso)
-            else:
-                taus = scalar_tau_many(cl, job, ps, ns)
-            rhos = slots_for_many(job.iters, taus)
+                rhos = slots_for_many(job.iters, taus)
         elif self.engine == "batched":
             rhos = self._score_batched(job, need, starts, ys)
         else:                                   # "reference"
             rhos = np.empty(C)
             for c, (w, _, g) in enumerate(need):
-                jids = self._jid_seq[w.row]
-                fins = self._fin_seq[w.row]
+                jids, _, fins = self._row_cols(w.row)
                 cut = starts[c] + 1e-9
-                overlap = [j for j, f in zip(jids, fins) if f > cut]
-                Y_snap = np.asarray(
-                    [y for y, f in zip(self._y_seq[w.row], fins)
-                     if f > cut], dtype=np.int64
-                ).reshape(len(overlap), S)
+                keep = fins > cut
+                overlap = jids[keep]
+                Y_snap = self._row_Y(w.row)[keep]
                 rhos[c] = predict_exec_time(
-                    cl, job, [self.jobs[j] for j in overlap], Y_snap, ys[c])
+                    cl, job, [self.jobs[j] for j in overlap.tolist()],
+                    Y_snap, ys[c])
+        # One bulk tolist instead of C float() casts (same float64 values).
+        rhos_l = rhos if type(rhos) is list else rhos.tolist()
+        starts_l = starts.tolist()
         for c, (w, key, g) in enumerate(need):
-            w.scored[key] = (float(rhos[c]), float(starts[c]), ys[c])
+            w.scored[key] = (rhos_l[c], starts_l[c], ys[c])
 
     def _score_batched(self, job: Job, need, starts: np.ndarray,
                        ys: list[np.ndarray]) -> np.ndarray:
@@ -261,7 +406,7 @@ class ColumnarPlacement:
         cl = self.cluster
         S = cl.num_servers
         C = len(need)
-        counts = [len(self._jid_seq[w.row]) for (w, _, _) in need]
+        counts = [self._count[w.row] for (w, _, _) in need]
         Pmax = max(counts)
         Y = np.zeros((C, Pmax + 1, S), dtype=np.int64)
         active = np.zeros((C, Pmax + 1), dtype=bool)
@@ -274,10 +419,9 @@ class ColumnarPlacement:
         for c, (w, _, g) in enumerate(need):
             P = counts[c]
             if P:
-                jids = np.asarray(self._jid_seq[w.row], dtype=np.int64)
-                Y[c, :P] = np.stack(self._y_seq[w.row])
-                active[c, :P] = \
-                    np.asarray(self._fin_seq[w.row]) > starts[c] + 1e-9
+                jids, _, fins = self._row_cols(w.row)
+                Y[c, :P] = self._row_Y(w.row)
+                active[c, :P] = fins > starts[c] + 1e-9
                 Gt[c, :P] = self._G_t[jids]
                 sh[c, :P] = self._share_t[jids]
                 cp[c, :P] = self._compute_t[jids]
@@ -313,12 +457,19 @@ class ColumnarPlacement:
                         "needs theta to enter only through the feasibility "
                         "pool and a vectorised pick")
             self._checked_pickers = pickers
-        live = np.flatnonzero(self.alive)
-        if not len(live):
+            # The fused programs rank FA-FFP/LBSGF in-program; pickers
+            # without a jit_pick_id fall back to their pick_many per step.
+            ids = [getattr(p, "jit_pick_id", -1) for p in pickers]
+            self._pick_ids = np.asarray(ids, dtype=np.int64) \
+                if self._kern is not None and min(ids) >= 0 else None
+        if not self._n_live:
             return
+        live = np.flatnonzero(self.alive)
         u = self.u
-        picker_of = np.broadcast_to(np.asarray(picker_of, dtype=np.int64),
-                                    (self.n_branches,))
+        fused = self._pick_ids is not None
+        picker_of = np.asarray(picker_of, dtype=np.int64)
+        if picker_of.shape != (self.n_branches,):
+            picker_of = np.broadcast_to(picker_of, (self.n_branches,))
         # Contiguous (row, picker) work groups, branches theta-ascending
         # (then branch id) within each -- one stable lexsort instead of a
         # python dict walk.
@@ -330,8 +481,9 @@ class ColumnarPlacement:
         bounds = np.concatenate([[0], gcuts, [len(lb)]])
         work = [_Work(int(rb[s]), int(pb[s]), lb[s:e], rho_nom, {})
                 for s, e in zip(bounds[:-1], bounds[1:])]
-        commits: list[tuple] = []       # (branches, row, gpus, rho, start, y)
+        commits: list[tuple] = []   # (branches, row, gpus, rho, start, y, gb)
         dead: list[np.ndarray] = []
+        first_try = True
         for _ in range(self.TRIES):
             # Pool split: within each work item, group branches by how many
             # GPUs clear the rho_try filter -- equal counts <=> equal pools
@@ -340,18 +492,62 @@ class ColumnarPlacement:
             # batched compare over the [work, N] clock block; only items
             # whose extremes disagree (rare) pay the full per-theta split.
             nw = len(work)
-            rows_w = np.fromiter((w.row for w in work), np.int64, nw)
-            rho_w = np.fromiter((w.rho_try for w in work), np.float64, nw)
-            V = self.U[rows_w] + (rho_w / u)[:, None]
-            th_lo = self.thetas[np.fromiter((w.branches[0] for w in work),
-                                            np.int64, nw)]
-            th_hi = self.thetas[np.fromiter((w.branches[-1] for w in work),
-                                            np.int64, nw)]
-            c_lo = (V <= th_lo[:, None] + 1e-9).sum(axis=1)
-            c_hi = (V <= th_hi[:, None] + 1e-9).sum(axis=1)
+            if first_try:
+                # Round 0 (the common case): every item sits at rho_nom
+                # and its branch run is a contiguous slice of the
+                # lexsorted (lb, rb, pb) arrays, so the group stats are
+                # direct gathers instead of four python fromiter walks.
+                first_try = False
+                heads = bounds[:-1]
+                rows_w = rb[heads]
+                rho_w = np.full(nw, rho_nom)
+                th_lo = self.thetas[lb[heads]]
+                th_hi = self.thetas[lb[bounds[1:] - 1]]
+                pid_w = pb[heads]
+            else:
+                rows_w = np.fromiter((w.row for w in work), np.int64, nw)
+                rho_w = np.fromiter((w.rho_try for w in work),
+                                    np.float64, nw)
+                th_lo = self.thetas[np.fromiter(
+                    (w.branches[0] for w in work), np.int64, nw)]
+                th_hi = self.thetas[np.fromiter(
+                    (w.branches[-1] for w in work), np.int64, nw)]
+                pid_w = np.fromiter((w.pid for w in work), np.int64, nw)
+            ord_w = ok_w = None
+            # The fused program pays one device dispatch + host rankings
+            # for the whole batch; below DISPATCH_MIN_ROWS that fixed cost
+            # exceeds the stats it replaces, so short batches take the
+            # numpy pickers verbatim (the jit backend is then exactly the
+            # numpy backend until batches grow tall enough to win).
+            fused_now = fused and (self.backend == "kernel"
+                                   or nw >= self._kern.DISPATCH_MIN_ROWS)
+            U_w = self.U[rows_w]
+            if fused_now:
+                # One fused program: pools at both extremes, per-server
+                # reductions and both full pick orderings per work item.
+                V, c_lo, c_hi, ord_w, ok_w = self._kern.pick_orders(
+                    self.cluster, U_w, th_lo, th_hi, rho_w / u,
+                    self._pick_ids[pid_w], job,
+                    use_kernel=self.backend == "kernel")
+            else:
+                V = U_w + (rho_w / u)[:, None]
+                # Pool counts only matter where an item's extreme thetas
+                # differ (equal thetas => equal pools trivially); most
+                # items are singletons, so the compares usually vanish.
+                multi = th_lo != th_hi
+                c_lo = np.zeros(nw, dtype=np.int64)
+                c_hi = c_lo
+                if multi.any():
+                    c_hi = np.zeros(nw, dtype=np.int64)
+                    Vm = V[multi]
+                    c_lo[multi] = (Vm <= th_lo[multi][:, None]
+                                   + 1e-9).sum(axis=1)
+                    c_hi[multi] = (Vm <= th_hi[multi][:, None]
+                                   + 1e-9).sum(axis=1)
             runs: list[tuple[_Work, np.ndarray, int]] = []
+            c_lo_l, c_hi_l = c_lo.tolist(), c_hi.tolist()
             for i, w in enumerate(work):
-                if len(w.branches) == 1 or c_lo[i] == c_hi[i]:
+                if len(w.branches) == 1 or c_lo_l[i] == c_hi_l[i]:
                     runs.append((w, w.branches, i))
                 else:
                     counts = np.searchsorted(np.sort(V[i]),
@@ -361,33 +557,75 @@ class ColumnarPlacement:
                     for sub in np.split(w.branches, cuts):
                         runs.append((w, sub, i))
             nr = len(runs)
-            v_idx = np.fromiter((r[2] for r in runs), np.int64, nr)
-            th_rep = self.thetas[np.fromiter((r[1][0] for r in runs),
-                                             np.int64, nr)]
-            feas_all = V[v_idx] <= th_rep[:, None] + 1e-9
+            # nr == nw <=> no item split, and then run i IS work item i.
+            v_idx = (np.arange(nw) if nr == nw
+                     else np.fromiter((r[2] for r in runs), np.int64, nr))
             rows_r = rows_w[v_idx]
-            # Vectorised picks: one pick_many call per distinct picker over
-            # the whole [runs, N] batch.
             picks: list[np.ndarray | None] = [None] * nr
-            by_pid: dict[int, list[int]] = {}
-            for i, (w, _, _) in enumerate(runs):
-                by_pid.setdefault(w.pid, []).append(i)
-            for pid, idxs in sorted(by_pid.items()):
-                if len(idxs) == nr:             # single-picker fast path
-                    U_g, feas = self.U[rows_r], feas_all
+            pending: list[int] = []
+            if fused_now:
+                # The program ranked each work item's th_lo pool; any run
+                # whose pool equals it (all non-split runs, and a split's
+                # lowest-theta sub) reads its pick off the precomputed
+                # ordering.  Higher split subs (rare) fall back below.
+                G = job.num_gpus
+                for i, (w, sub, wi) in enumerate(runs):
+                    if len(sub) == len(w.branches) or c_lo[wi] == c_hi[wi] \
+                            or sub[0] == w.branches[0]:
+                        picks[i] = ord_w[wi, :G] if ok_w[wi] else None
+                    else:
+                        pending.append(i)
+            else:
+                pending = list(range(nr))
+            if pending:
+                if len(pending) == nr == nw:
+                    # Whole-batch numpy round with no splits (the common
+                    # case): run i IS work item i, so the representative
+                    # theta per run is exactly th_lo and the [nw, N]
+                    # clock gathers U_w/V are reused without copies.
+                    th_rep = th_lo
+                    U_all = U_w
+                    feas_all = V <= th_rep[:, None] + 1e-9
                 else:
-                    U_g, feas = self.U[rows_r[idxs]], feas_all[idxs]
-                gp, okv = pickers[pid].pick_many(self.cluster, U_g, feas,
-                                                 job)
-                for j, i in enumerate(idxs):
-                    picks[i] = gp[j] if okv[j] else None
+                    th_rep = self.thetas[np.fromiter(
+                        (runs[i][1][0] for i in pending), np.int64,
+                        len(pending))]
+                    p_idx = v_idx[pending]
+                    U_all = self.U[rows_r[pending]]
+                    feas_all = V[p_idx] <= th_rep[:, None] + 1e-9
+                # Vectorised picks: one pick_many call per distinct picker
+                # over the whole [pending, N] batch.
+                by_pid: dict[int, list[int]] = {}
+                for j, i in enumerate(pending):
+                    by_pid.setdefault(runs[i][0].pid, []).append(j)
+                for pid, idxs in sorted(by_pid.items()):
+                    if len(idxs) == len(pending):  # single-picker fast path
+                        U_g, feas = U_all, feas_all
+                    else:
+                        U_g, feas = U_all[idxs], feas_all[idxs]
+                    gp, okv = pickers[pid].pick_many(self.cluster, U_g,
+                                                     feas, job)
+                    okl = okv.tolist()
+                    for j, jj in enumerate(idxs):
+                        picks[pending[jj]] = gp[j] if okl[j] else None
             # Batched scoring of every first-seen candidate of this level.
+            # One pass over the runs collects the dead (no pick), the
+            # survivors (ok_i/ok_g) and the unseen candidates to score;
+            # keys_r memoises each run's candidate bytes so the commit
+            # loop below reads the memo without re-serialising.
             need: list[tuple[_Work, bytes, np.ndarray]] = []
-            for i, (w, _, _) in enumerate(runs):
+            keys_r: list[bytes | None] = [None] * nr
+            ok_i: list[int] = []
+            ok_g: list[np.ndarray] = []
+            for i, (w, sub, _) in enumerate(runs):
                 g = picks[i]
                 if g is None:
+                    dead.append(sub)
                     continue
                 key = g.tobytes()
+                keys_r[i] = key
+                ok_i.append(i)
+                ok_g.append(g)
                 if key not in w.scored:
                     w.scored[key] = None      # claimed; filled by _score
                     need.append((w, key, g))
@@ -398,30 +636,34 @@ class ColumnarPlacement:
             # same G-gang, so the refined-rho bounds come from one batched
             # [picked, G] gather instead of a max() per run.
             next_work: list[_Work] = []
-            ok_i: list[int] = []
-            ok_g: list[np.ndarray] = []
-            ok_sc: list[tuple] = []
-            for i, (w, sub, _) in enumerate(runs):
-                g = picks[i]
-                if g is None:
-                    dead.append(sub)
-                else:
-                    ok_i.append(i)
-                    ok_g.append(g)
-                    ok_sc.append(w.scored[g.tobytes()])
+            ok_sc = [runs[i][0].scored[keys_r[i]] for i in ok_i]
             if ok_i:
-                gmat = np.stack(ok_g)
+                gmat = np.concatenate(ok_g).reshape(len(ok_g),
+                                                    job.num_gpus)
                 rhos = np.fromiter((sc[0] for sc in ok_sc), np.float64,
                                    len(ok_sc))
                 bnd = (self.U[rows_r[ok_i][:, None], gmat]
-                       + (rhos / u)[:, None]).max(axis=1)
+                       + (rhos / u)[:, None]).max(axis=1).tolist()
+                thetas_f = self._thetas_f
                 for j, i in enumerate(ok_i):
                     w, sub, _ = runs[i]
                     rho, start, y = ok_sc[j]
+                    if len(sub) == 1:
+                        # Singleton run (the common case): one scalar
+                        # compare, no boolean mask / fancy indexing.
+                        if thetas_f[sub[0]] + 1e-9 >= bnd[j]:
+                            commits.append((sub, w.row, ok_g[j], rho,
+                                            start, y, keys_r[i]))
+                        else:
+                            next_work.append(_Work(
+                                w.row, w.pid, sub,
+                                max(rho, w.rho_try * 1.05), w.scored))
+                        continue
                     passes = self.thetas[sub] + 1e-9 >= bnd[j]
                     hi, lo = sub[passes], sub[~passes]
                     if len(hi):
-                        commits.append((hi, w.row, ok_g[j], rho, start, y))
+                        commits.append((hi, w.row, ok_g[j], rho, start, y,
+                                        keys_r[i]))
                     if len(lo):
                         next_work.append(_Work(w.row, w.pid, lo,
                                                max(rho, w.rho_try * 1.05),
@@ -443,22 +685,20 @@ class ColumnarPlacement:
         for bs in dead:
             if len(bs):
                 self.alive[bs] = False
+                self._n_live -= len(bs)
         # Merge identical decisions: a child state is a pure function of
         # (parent row, committed gpus), so branches picking the same set
         # off the same row land on ONE child row.
         merged: dict[tuple[int, bytes], list] = {}
-        order: list[tuple[int, bytes]] = []
-        for bs, row, g, rho, start, y in commits:
-            key = (row, g.tobytes())
+        for bs, row, g, rho, start, y, gb in commits:
+            key = (row, gb)
             ent = merged.get(key)
             if ent is None:
-                merged[key] = [bs, row, g, rho, start, y]
-                order.append(key)
+                merged[key] = [bs, row, g, rho, start, y, gb]
             else:
                 ent[0] = np.concatenate([ent[0], bs])
         by_parent: dict[int, list] = {}
-        for key in order:
-            ent = merged[key]
+        for ent in merged.values():        # dicts keep insertion order
             by_parent.setdefault(ent[1], []).append(ent)
         # Assign child rows: the first class reuses the parent in place
         # (every branch leaves it this step), the rest fork copy-on-write.
@@ -469,9 +709,13 @@ class ColumnarPlacement:
                 child = parent if k == 0 else self._clone_row(parent)
                 child_rows.append((child, ent))
         if child_rows:
+            self._chain_cache.clear()
+            self._y_cache.clear()
             u = self.u
             rows_arr = np.asarray([c for c, _ in child_rows])
-            gmat = np.stack([ent[2] for _, ent in child_rows])
+            gmat = np.concatenate(
+                [ent[2] for _, ent in child_rows]).reshape(
+                    len(child_rows), job.num_gpus)
             rhos = np.asarray([ent[3] for _, ent in child_rows])
             starts = np.asarray([ent[4] for _, ent in child_rows])
             # The columnar Eq. (15) charge: one masked write per matrix.
@@ -480,25 +724,38 @@ class ColumnarPlacement:
             self.U[rows_arr[:, None], gmat] += (rhos / u)[:, None]
             self.R[rows_arr[:, None], gmat] = (starts + rhos)[:, None]
             G = job.num_gpus
+            fins = (starts + rhos).tolist()
             for child, ent in child_rows:
-                bs, _, g, rho, start, y = ent
+                bs, _, g, rho, start, y, gb = ent
                 self.row_of[bs] = child
-                self._assignment[child].append((jid, g))
-                self._jid_seq[child].append(jid)
-                self._y_seq[child].append(y)
                 fin = start + rho
-                self._start_seq[child].append(start)
-                self._fin_seq[child].append(fin)
+                rec = len(self._log_jid)
+                self._log_jid.append(jid)
+                self._log_prev.append(self._tail[child])
+                self._log_start.append(start)
+                self._log_fin.append(fin)
+                self._log_g.append(g)
+                self._log_y.append(y)
+                self._tail[child] = rec
+                self._count[child] += 1
+                self._state_hash[child] = hash(
+                    (self._state_hash[child], jid, gb))
+            # Straddled (child, server) pairs in one batched scan (the
+            # per-child flatnonzero dominated this loop); argwhere's
+            # row-major order reproduces the per-child, server-ascending
+            # insort order exactly.
+            ymat = np.concatenate(
+                [ent[5] for _, ent in child_rows]).reshape(
+                    len(child_rows), self.cluster.num_servers)
+            sc_ci, sc_s = np.nonzero((ymat > 0) & (ymat < G))
+            for ci, s in zip(sc_ci.tolist(), sc_s.tolist()):
+                child = child_rows[ci][0]
                 sf = self._straddle_fin[child]
                 owned = self._fin_owned[child]
-                for s, yv in enumerate(y.tolist()):
-                    if 0 < yv < G:
-                        if not owned[s]:         # copy-on-first-write
-                            sf[s] = list(sf[s])
-                            owned[s] = True
-                        _bisect.insort(sf[s], fin)
-                self._state_hash[child] = hash(
-                    (self._state_hash[child], jid, g.tobytes()))
+                if not owned[s]:                 # copy-on-first-write
+                    sf[s] = list(sf[s])
+                    owned[s] = True
+                _bisect.insort(sf[s], fins[ci])
         # Release rows no branch references any more.
         referenced = set(self.row_of[self.alive].tolist())
         for r in [r for r in self._live_rows if r not in referenced]:
@@ -510,6 +767,11 @@ class ColumnarPlacement:
     def n_rows(self) -> int:
         """Distinct live states (the dedup the lineage forest lacks)."""
         return len(self._live_rows)
+
+    @property
+    def n_live(self) -> int:
+        """Live branches, tracked O(1) (== ``alive.sum()``)."""
+        return self._n_live
 
     def state_hash(self, b: int) -> int | None:
         """Decision-history fingerprint of branch ``b`` (None if dead)."""
@@ -528,12 +790,16 @@ class ColumnarPlacement:
         row = int(self.row_of[b])
         est_start = np.full(self.n_jobs, -1.0)
         est_finish = np.full(self.n_jobs, -1.0)
-        jids = self._jid_seq[row]
-        if jids:
-            est_start[jids] = self._start_seq[row]
-            est_finish[jids] = self._fin_seq[row]
+        idx = self._chain(row)
+        jids, starts, fins = self._row_cols(row)
+        if len(idx):
+            est_start[jids] = starts
+            est_finish[jids] = fins
+        glog = self._log_g
+        assignment = [(int(j), glog[i])
+                      for j, i in zip(jids.tolist(), idx.tolist())]
         return ScheduleResult(
-            assignment=list(self._assignment[row]),
+            assignment=assignment,
             est_start=est_start, est_finish=est_finish,
             est_makespan=float(est_finish.max(initial=0.0)),
             theta=theta, kappa=kappa, policy=policy,

@@ -792,7 +792,13 @@ def scalar_tau_many(cluster: Cluster, job: Job, p: np.ndarray,
     results are bit-identical per candidate.  The optional
     ``speed``/``bw_shared``/``bw_isolated`` arrays ([C], from
     :func:`_hetero_mins`) carry per-candidate heterogeneous device terms;
-    ``None`` keeps the uniform scalars."""
+    ``None`` keeps the uniform scalars.
+
+    The fused columnar score step (``score_probes`` in
+    :mod:`repro.kernels.placement`) re-derives exactly this expression
+    chain on device for tall probe batches -- any change to the
+    operation order here must land there too, or the x64 bit-identity
+    contract pinned by ``tests/test_columnar_equivalence.py`` breaks."""
     p = np.asarray(p, dtype=np.float64)
     n_srv = np.asarray(n_srv)
     w = float(job.num_gpus)

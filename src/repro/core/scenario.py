@@ -104,7 +104,10 @@ class WorkloadSpec:
 @dataclasses.dataclass(frozen=True)
 class ArrivalSpec:
     """Arrival process.  ``kind="poisson"`` draws i.i.d. exponential gaps
-    at ``rate`` jobs/slot; ``kind="fixed"`` uses explicit ``times``;
+    at ``rate`` jobs/slot; ``kind="pareto"`` draws heavy-tailed Pareto
+    gaps (bursty: many near-zero gaps punctuated by long lulls) with tail
+    index ``shape``, mean-normalised so ``rate`` still sets the long-run
+    jobs/slot; ``kind="fixed"`` uses explicit ``times``;
     ``kind="trace"`` replays the recorded ``start_time`` column of the
     CSV log at ``path`` (see :mod:`repro.core.trace` -- typically paired
     with a ``WorkloadSpec(kind="trace")`` on the same path, so the job
@@ -115,6 +118,7 @@ class ArrivalSpec:
     seed: int = 0
     times: tuple[int, ...] | None = None
     path: str | None = None
+    shape: float = 1.5         # Pareto tail index (finite mean needs > 1)
 
     def build(self, jobs: list[Job]) -> np.ndarray:
         if self.kind == "trace":
@@ -130,6 +134,19 @@ class ArrivalSpec:
             if self.times is None or len(self.times) != len(jobs):
                 raise ValueError("fixed arrivals need one time per job")
             return np.asarray(self.times, dtype=np.int64)
+        if self.kind == "pareto":
+            # Lomax (Pareto II) inter-arrival gaps: mean is scale/(shape-1)
+            # for shape > 1, so scale = (shape-1)/rate keeps the long-run
+            # arrival rate at ``rate`` while the tail index ``shape``
+            # controls burstiness (smaller -> heavier tail).
+            if self.shape <= 1.0:
+                raise ValueError(
+                    f"pareto arrivals need shape > 1 for a finite mean "
+                    f"gap (got shape={self.shape})")
+            rng = np.random.default_rng(self.seed)
+            scale = (self.shape - 1.0) / self.rate
+            gaps = rng.pareto(self.shape, size=len(jobs)) * scale
+            return np.floor(np.cumsum(gaps)).astype(np.int64)
         if self.kind != "poisson":
             raise ValueError(f"unknown arrival kind {self.kind!r}")
         rng = np.random.default_rng(self.seed)

@@ -33,10 +33,11 @@ from repro.core.api import (Chooser, PlacementState, ScheduleRequest,
                             ScheduleResult, SharedState, bisect_theta,
                             finalize, nominal_rho, pick_best_finish,
                             register_chooser, register_policy,
-                            resolve_placement, rho_hat, schedule_arrivals,
-                            try_place, try_place_group)
+                            resolve_columnar_backend, resolve_placement,
+                            rho_hat, schedule_arrivals, try_place,
+                            try_place_group)
 from repro.core.cluster import Cluster
-from repro.core.columnar import ColumnarPlacement, server_sums
+from repro.core.columnar import ColumnarPlacement, _flat_ids, server_sums
 from repro.core.jobs import Job
 
 __all__ = ["fa_ffp", "lbsgf", "nominal_rho", "rho_hat", "sjf_bco_policy"]
@@ -130,24 +131,43 @@ def _fa_ffp_many(cluster: Cluster, U: np.ndarray, feasible: np.ndarray,
     S = cluster.num_servers
     Gj = job.num_gpus
     ok = feasible.sum(axis=1) >= Gj
-    cnt = server_sums(cluster, feasible.astype(np.float64)).astype(np.int64)
-    occupied = server_sums(cluster, U)
+    # One flat bincount covers both per-server reductions (pool counts and
+    # occupancy): rows 0..R-1 count the feasible pool, rows R..2R-1 sum the
+    # clocks.  Bins are disjoint per row, so each row's additions keep
+    # their GPU-id order (concatenate upcasts bool -> 0.0/1.0 exactly like
+    # the astype it replaces).
+    both = server_sums(cluster, np.concatenate([feasible, U]))
+    cnt = both[:R].astype(np.int64)
+    occupied = both[R:]
     fits = cnt >= Gj
     has_fit = fits.any(axis=1)
-    # Best server per row by (fewest feasible slots left, most occupied,
-    # lowest id): one flat lexsort with the row as the primary key, so row
-    # r's candidates occupy positions r*S..(r+1)*S-1 of the order.
-    r_flat = np.repeat(np.arange(R), S)
-    s_flat = np.tile(np.arange(S), R)
-    k_fit = np.where(fits, cnt - Gj, N + 1).ravel()
-    k_occ = np.where(fits, -occupied, np.inf).ravel()
-    order = np.lexsort((s_flat, k_occ, k_fit, r_flat))
-    best_srv = s_flat[order[np.arange(R) * S]]
-    in_best = feasible & (cluster.gpu_server[None, :] == best_srv[:, None])
-    packed = np.argsort(np.where(in_best, U, np.inf), axis=1,
-                        kind="stable")[:, :Gj]
+    any_fit = bool(has_fit.any())
+    packed = None
+    if any_fit:
+        # Best server per row by (fewest feasible slots left, most
+        # occupied, lowest id): one flat lexsort with the row as the
+        # primary key, so row r's candidates occupy positions
+        # r*S..(r+1)*S-1 of the order.
+        r_flat = _flat_ids("rep", R, S)
+        s_flat = _flat_ids("tile", R, S)
+        # k_fit ranges over [0, N+1], so folding it into the row key
+        # (row * (N+2) + k_fit) preserves the (row, k_fit) lexicographic
+        # order exactly while dropping one full sort pass.
+        k_fit = (r_flat * (N + 2)
+                 + np.where(fits, cnt - Gj, N + 1).ravel())
+        k_occ = np.where(fits, -occupied, np.inf).ravel()
+        order = np.lexsort((s_flat, k_occ, k_fit))
+        best_srv = s_flat[order[::S]]
+        in_best = feasible \
+            & (cluster.gpu_server[None, :] == best_srv[:, None])
+        packed = np.argsort(np.where(in_best, U, np.inf), axis=1,
+                            kind="stable")[:, :Gj]
+        if has_fit.all():
+            return packed, ok
     spread = np.argsort(np.where(feasible, U, np.inf), axis=1,
                         kind="stable")[:, :Gj]
+    if not any_fit:
+        return spread, ok
     return np.where(has_fit[:, None], packed, spread), ok
 
 
@@ -175,14 +195,19 @@ def _lbsgf_many(cluster: Cluster, U: np.ndarray, feasible: np.ndarray,
     pos = np.arange(S)[None, :]
     rank_vals = np.where(pos < m[:, None], pos, -1)
     srv_rank = np.empty((R, S), dtype=np.int64)
-    np.put_along_axis(srv_rank, srv_order, rank_vals, axis=1)
-    ranks = srv_rank[np.arange(R)[:, None], cluster.gpu_server[None, :]]
+    # Scatter along axis 1 directly (put_along_axis minus its per-call
+    # index-grid construction): row r gets rank_vals[r] at srv_order[r].
+    rows_col = np.arange(R)[:, None]
+    srv_rank[rows_col, srv_order] = rank_vals
+    ranks = srv_rank[rows_col, cluster.gpu_server[None, :]]
     pool = feasible & (ranks >= 0)
     ok = pool.sum(axis=1) >= Gj
-    r_flat = np.repeat(np.arange(R), N)
-    k_rank = np.where(pool, ranks, S + 1).ravel()
+    # k_rank ranges over [0, S+1]; folded into the row key it preserves
+    # the (row, rank) lexicographic order exactly (one sort pass fewer).
+    k_rank = (_flat_ids("rep", R, N) * (S + 2)
+              + np.where(pool, ranks, S + 1).ravel())
     k_U = np.where(pool, U, np.inf).ravel()
-    order = np.lexsort((k_U, k_rank, r_flat))
+    order = np.lexsort((k_U, k_rank))
     gpus = order.reshape(R, N)[:, :Gj] - (np.arange(R) * N)[:, None]
     return gpus, ok
 
@@ -195,6 +220,11 @@ fa_ffp.theta_pool = True
 lbsgf.theta_pool = True
 fa_ffp.pick_many = _fa_ffp_many
 lbsgf.pick_many = _lbsgf_many
+# Stable ids under which repro.kernels.placement's fused jit program ranks
+# these pickers in-program (0 = FA-FFP, 1 = LBSGF); pickers without an id
+# make the columnar engine fall back to per-step pick_many calls.
+fa_ffp.jit_pick_id = 0
+lbsgf.jit_pick_id = 1
 
 
 # The adaptive pack-or-spread choice IS SJF-BCO's online rule (extensions'
@@ -354,7 +384,7 @@ def _sweep_speculative(cluster: Cluster, jobs_sorted: list[Job],
 def _sweep_columnar(cluster: Cluster, jobs: list[Job],
                     jobs_sorted: list[Job], rho_noms: dict[int, float],
                     u: float, thetas: list[float], kappas: list[int],
-                    engine: str | None
+                    engine: str | None, backend: str = "numpy"
                     ) -> dict[float, dict[int, ScheduleResult | None]]:
     """Every (theta, kappa) attempt as ONE columnar array program.
 
@@ -371,12 +401,18 @@ def _sweep_columnar(cluster: Cluster, jobs: list[Job],
     kap = sorted(set(kappas))
     pairs = [(float(th), k) for th in sorted(thetas) for k in kap]
     col = ColumnarPlacement(cluster, [th for th, _ in pairs], jobs, u,
-                            engine=engine)
+                            engine=engine, backend=backend)
     kappa_arr = np.asarray([k for _, k in pairs], dtype=np.int64)
+    # Jobs repeat few distinct sizes, and the picker split depends only on
+    # G_j -- one assignment array per size instead of one per job.
+    picker_by_G: dict[int, np.ndarray] = {}
     for job in jobs_sorted:
-        picker_of = (job.num_gpus > kappa_arr).astype(np.int64)
+        picker_of = picker_by_G.get(job.num_gpus)
+        if picker_of is None:
+            picker_of = (job.num_gpus > kappa_arr).astype(np.int64)
+            picker_by_G[job.num_gpus] = picker_of
         col.place(job, rho_noms[job.jid], (fa_ffp, lbsgf), picker_of)
-        if not col.alive.any():
+        if not col.n_live:
             break                                              # line 14
     results: dict[float, dict[int, ScheduleResult | None]] = \
         {float(th): {} for th in thetas}
@@ -423,22 +459,35 @@ def sjf_bco_policy(request: ScheduleRequest) -> ScheduleResult:
       * ``warm_start`` -- seed each theta's attempts with the placements
         committed at the previous feasible theta (off by default; changes
         the search trajectory, not the accounting).
-      * ``placement`` -- ``"scalar"`` (default) is the per-branch
+      * ``placement`` -- ``"scalar"`` is the per-branch
         :class:`~repro.core.api.PlacementState` walk, the bit-identity
-        oracle and the fastest CPU path at bench scale (its
+        oracle and the fastest CPU path at small |J| (its
         copy-on-write lineages already share placement work between
         branches); ``"columnar"`` advances the whole (theta, kappa)
         forest of each attempt/round as one
         :class:`~repro.core.columnar.ColumnarPlacement` array program
         with deduplicated branch rows -- identical decisions held in
-        strictly-array state (the trace-scale / accelerator substrate).
-        Columnar needs the cold-start batched sweep (hints change
-        decisions), so ``sweep="sequential"`` or ``warm_start=True``
-        fall back to the scalar walk.
+        strictly-array state (the trace-scale fast path / accelerator
+        substrate).  Unset, the default is size-aware: columnar from
+        ``api.COLUMNAR_DEFAULT_MIN_JOBS`` jobs -- but that constant is
+        ``None`` while the bench records no scalar-vs-columnar
+        crossover (the scalar walk wins at every measured size on this
+        CPU host), so the unset default is scalar throughout and
+        columnar stays an explicit opt-in.  Columnar needs the cold-start
+        batched sweep (hints change decisions), so
+        ``sweep="sequential"`` or ``warm_start=True`` fall back to the
+        scalar walk.
+      * ``columnar_backend`` -- where the columnar step's array math
+        runs: ``"auto"`` (default; the fused jit programs when jax is
+        in float64, else eager NumPy), ``"jit"``, ``"kernel"`` (Pallas
+        row kernels, interpret mode on CPU) or ``"numpy"`` -- all
+        bit-identical under x64 (see
+        :func:`~repro.core.api.resolve_columnar_backend`).
     """
     cluster, u = request.cluster, request.u
     engine = request.params.get("engine")
-    placement = resolve_placement(request.params)
+    placement = resolve_placement(
+        request.params, len(request.jobs) if request.is_batch else None)
     sweep = request.params.get("sweep", "batched")
     if sweep not in ("batched", "sequential"):
         raise ValueError(
@@ -466,6 +515,8 @@ def sjf_bco_policy(request: ScheduleRequest) -> ScheduleResult:
 
     warm = bool(request.params.get("warm_start"))
     use_columnar = placement == "columnar" and sweep == "batched" and not warm
+    backend = resolve_columnar_backend(request.params) if use_columnar \
+        else "numpy"
 
     def attempt(theta: float,
                 prev: ScheduleResult | None = None) -> ScheduleResult | None:
@@ -473,7 +524,7 @@ def sjf_bco_policy(request: ScheduleRequest) -> ScheduleResult:
         if use_columnar:
             sweep_results = _sweep_columnar(cluster, jobs, jobs_sorted,
                                             rho_noms, u, [theta], kappas,
-                                            engine)[float(theta)]
+                                            engine, backend)[float(theta)]
         elif sweep == "batched":
             sweep_results = _sweep_batched(cluster, jobs_sorted, rho_noms,
                                            u, theta, kappas, engine, hints)
@@ -499,7 +550,7 @@ def sjf_bco_policy(request: ScheduleRequest) -> ScheduleResult:
             if use_columnar:
                 sweep_results = _sweep_columnar(cluster, jobs, jobs_sorted,
                                                 rho_noms, u, thetas, kappas,
-                                                engine)
+                                                engine, backend)
             else:
                 sweep_results = _sweep_speculative(cluster, jobs_sorted,
                                                    rho_noms, u, thetas,

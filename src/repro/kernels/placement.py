@@ -1,0 +1,512 @@
+"""Jitted pick/check/score programs for the columnar placement engine.
+
+The columnar engine (:class:`repro.core.columnar.ColumnarPlacement`)
+advances every (theta, kappa) branch of the SJF-BCO forest by one job per
+step.  Its per-step array program -- the Eq. (16) feasibility pools
+(``U + rho/u <= theta + 1e-9``), the per-server busy/feasible-count
+reductions behind the FA-FFP/LBSGF picks, and the Eq. (6)-(8) tau/rho
+scoring of the probed candidates -- is a pile of small dense ops over
+``[rows, N]`` operands, which on the NumPy path pays one dispatch per op.
+This module fuses each half into ONE ``jax.jit`` program:
+
+  * :func:`pick_orders` -- pool threshold counts at each work item's
+    extreme thetas, GPU-id-order per-server busy sums, feasible-slot
+    counts and the FA-FFP best-server selection, in one fused program over
+    a ``[rows, N]`` block padded to a power-of-two row bucket; the stable
+    pick *rankings* then run host-side with NumPy sorts over those
+    bitwise-equal keys (XLA's CPU stable sort is ~10-20x slower than
+    NumPy's on these small rows, so sorting in-program would erase the
+    fusion win);
+  * :func:`score_probes` -- Eq. (8) tau and the rho-hat slot count for a
+    padded batch of probed candidates, reusing
+    :func:`repro.kernels.tau`'s hetero-aware term layout (per-server
+    speed floors, shared/isolated uplinks with +inf where absent).
+
+Row shapes are padded to power-of-two buckets so the programs retrace only
+per (bucket, cluster) -- never per job (pinned by the compile-count guard
+in ``tests/test_columnar_equivalence.py``).  With ``use_kernel=True`` the
+same row math runs inside Pallas kernels (grid step = one branch row, the
+whole row reduction in VMEM; interpret mode on CPU, real lowering on TPU)
+-- the kernels share the jnp expressions with the fast path, so all three
+backends (numpy / jit / kernel) are bit-identical under ``jax_enable_x64``:
+the per-server sums replay ``np.bincount``'s GPU-id addition order as a
+statically unrolled in-order block reduction, and every sort is a stable
+sort over bitwise-equal keys.  Without x64 jax computes in float32 and the
+fused path is rejected (:func:`require_x64`) rather than silently diverging
+from the scalar oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.compat import CompilerParams
+
+__all__ = ["pick_orders", "score_probes", "require_x64", "compile_counts"]
+
+#: Smallest padded row bucket (power of two).
+MIN_BUCKET = 4
+
+#: Below this many rows the stats run in NumPy instead of the device
+#: program: one CPU dispatch+fetch round-trip (~300us measured on this
+#: host) costs more than the reductions it replaces.  Calibrated on the
+#: 32-server Philly cluster at |J| = 8192 (thresh 32 -> 37.6s, thresh
+#: 64 -> 32.9s vs 32.8s pure NumPy; the work-group histogram tops out
+#: near 48 rows there, so 64 means "dispatch only on genuinely tall
+#: batches").  ``use_kernel=True`` always dispatches (the Pallas path
+#: is about lowering, not CPU speed).
+DISPATCH_MIN_ROWS = 64
+
+
+def require_x64() -> None:
+    """Reject the fused path when jax would compute in float32.
+
+    The columnar engine's bit-identity contract against the scalar oracle
+    only holds in float64; callers resolve ``columnar_backend="auto"`` to
+    "numpy" in that case, so reaching this error means "jit"/"kernel" was
+    forced explicitly.
+    """
+    if not jax.config.jax_enable_x64:
+        raise RuntimeError(
+            "columnar_backend='jit'/'kernel' needs jax_enable_x64 for "
+            "bit-identity with the scalar oracle; enable x64 "
+            '(jax.config.update("jax_enable_x64", True)) or use '
+            "columnar_backend='numpy'")
+
+
+def _bucket(n: int) -> int:
+    """Power-of-two padding bucket for ``n`` rows (>= MIN_BUCKET)."""
+    return max(MIN_BUCKET, 1 << (max(1, n) - 1).bit_length())
+
+
+@functools.lru_cache(maxsize=64)
+def _cluster_consts(cluster) -> dict:
+    """Per-cluster constant arrays for the fused programs (cached; the
+    Cluster dataclass is frozen/hashable).  ``block_idx``/``block_valid``
+    drive the GPU-id-order per-server block sums: server ``s`` owns the
+    contiguous GPU range ``[offset_s, offset_s + cap_s)``, padded to the
+    cluster's max capacity with clipped (masked-out) indices."""
+    caps = cluster.capacities_array
+    offsets = np.concatenate([[0], np.cumsum(caps)[:-1]])
+    maxcap = int(caps.max())
+    block_idx = np.minimum(offsets[:, None] + np.arange(maxcap)[None, :],
+                           cluster.num_gpus - 1)
+    block_valid = np.arange(maxcap)[None, :] < caps[:, None]
+    return {
+        # Device-committed constants (passed into the jit programs; the
+        # pjit fast path sees committed arrays and skips the transfer).
+        "block_idx": jnp.asarray(block_idx),
+        "block_valid": jnp.asarray(block_valid),
+        "speed_floor": jnp.asarray(cluster.server_speed_floor),
+        "uplink_shared": jnp.asarray(cluster.uplink_shared_or_inf),
+        "uplink_isolated": jnp.asarray(cluster.uplink_isolated_or_inf),
+        # Host copies for the NumPy ranking half.
+        "np_gpu_server": np.asarray(cluster.gpu_server),
+        "np_caps": np.asarray(caps),
+    }
+
+
+# --------------------------------------------------------------------------
+# Row math (shared verbatim by the jnp fast path and the Pallas kernels)
+# --------------------------------------------------------------------------
+
+
+def _pool_row_math(U, tlo, thi, rho_u, G, block_idx, block_valid):
+    """Per-row pool/threshold/server reductions for a ``[B, N]`` block.
+
+    Returns ``(V, feas, c_lo, c_hi, load, cnt, best_srv, has_fit)``.  The
+    per-server busy sums replay ``np.bincount(gpu_server, weights=U)``'s
+    sequential GPU-id addition order as a statically unrolled in-order
+    reduction over each server's contiguous block (trailing masked lanes
+    add +0.0, which is the identity for the non-negative clocks), so the
+    FA-FFP/LBSGF sort keys are bitwise equal to the NumPy pickers'."""
+    N = U.shape[-1]
+    V = U + rho_u[:, None]
+    feas = V <= tlo[:, None] + 1e-9                     # Eq. (16) pool
+    c_lo = jnp.sum(feas, axis=-1)
+    c_hi = jnp.sum(V <= thi[:, None] + 1e-9, axis=-1)
+    Ub = U[:, block_idx]                                # [B, S, maxcap]
+    Fb = feas[:, block_idx] & block_valid[None]
+    cnt = jnp.sum(Fb, axis=-1)                          # exact: bool counts
+    load = jnp.zeros(U.shape[:-1] + block_idx.shape[:1], U.dtype)
+    for i in range(block_idx.shape[1]):                 # GPU-id order
+        load = load + jnp.where(block_valid[None, :, i], Ub[:, :, i], 0.0)
+    # FA-FFP best server: lexicographic min over (feasible slots left,
+    # -occupancy, server id) as staged masked argmins -- the same total
+    # order as the scalar lexsort, ties resolved by first index.
+    fits = cnt >= G
+    has_fit = jnp.any(fits, axis=-1)
+    k_fit = jnp.where(fits, cnt - G, N + 1)
+    k_occ = jnp.where(fits, -load, jnp.inf)
+    t1 = k_fit == jnp.min(k_fit, axis=-1, keepdims=True)
+    k2 = jnp.where(t1, k_occ, jnp.inf)
+    t2 = t1 & (k2 == jnp.min(k2, axis=-1, keepdims=True))
+    best_srv = jnp.argmax(t2, axis=-1)
+    return V, feas, c_lo, c_hi, load, cnt, best_srv, has_fit
+
+
+def _score_row_math(Y, f, gamma, two_share, share, reduce_const, compute,
+                    iters, speed_floor, uplink_sh, uplink_iso, *, hetero,
+                    b_inter, b_intra):
+    """Eq. (6)-(8) tau + rho-hat slots for a ``[B, S]`` candidate block.
+
+    Same expressions in the same order as
+    :func:`repro.core.contention.scalar_tau_many` /
+    :func:`~repro.core.contention.slots_for_many`; the hetero branch reuses
+    :func:`repro.kernels.tau`'s term layout (per-server speed floor and
+    shared/isolated uplinks with +inf where the class is absent).
+
+    The contention terms that multiply into a later addition -- k, the
+    degradation f, gamma = xi2 * n_srv -- arrive precomputed from the host:
+    XLA CPU contracts ``a*b + c`` into an FMA inside a fused loop (one ulp
+    off the separately rounded NumPy result, and ``optimization_barrier``
+    does not stop the LLVM-level contraction), so the program keeps only
+    mins, divides, selects and adds, which have no contractible pairs."""
+    pos = Y > 0
+    multi = jnp.sum(pos, axis=-1) > 1
+    if hetero:
+        inf = jnp.inf
+        speed = jnp.min(jnp.where(pos, speed_floor, inf), axis=-1)
+        bw_sh = jnp.min(jnp.where(pos, uplink_sh, inf), axis=-1)
+        bw_iso = jnp.min(jnp.where(pos, uplink_iso, inf), axis=-1)
+        bw_multi = jnp.minimum(bw_iso, bw_sh / f)
+        reduce_t = share / speed
+    else:
+        bw_multi = b_inter / f
+        reduce_t = reduce_const
+    bandwidth = jnp.where(multi, bw_multi, b_intra)
+    exchange = two_share / bandwidth
+    # Eq. (8), same left-to-right addition order as the NumPy engines.
+    tau = exchange + reduce_t + gamma + compute
+    phi = jnp.maximum(1.0, jnp.floor(1.0 / tau))
+    rho = jnp.ceil(iters / phi)
+    return tau, rho
+
+
+# --------------------------------------------------------------------------
+# Pallas kernel bodies (one grid step per branch row, reductions in VMEM)
+# --------------------------------------------------------------------------
+
+
+def _pool_kernel(U_ref, tlo_ref, thi_ref, rho_ref, g_ref, bidx_ref,
+                 bval_ref, V_ref, feas_ref, clo_ref, chi_ref, load_ref,
+                 cnt_ref, best_ref, fit_ref):
+    """One branch row: Eq. (16) pools + per-server reductions in VMEM."""
+    V, feas, c_lo, c_hi, load, cnt, best, fit = _pool_row_math(
+        U_ref[...], tlo_ref[...][:, 0], thi_ref[...][:, 0],
+        rho_ref[...][:, 0], g_ref[0, 0], bidx_ref[...], bval_ref[...] != 0)
+    V_ref[...] = V
+    feas_ref[...] = feas.astype(feas_ref.dtype)
+    clo_ref[...] = c_lo[:, None].astype(clo_ref.dtype)
+    chi_ref[...] = c_hi[:, None].astype(chi_ref.dtype)
+    load_ref[...] = load
+    cnt_ref[...] = cnt.astype(cnt_ref.dtype)
+    best_ref[...] = best[:, None].astype(best_ref.dtype)
+    fit_ref[...] = fit[:, None].astype(fit_ref.dtype)
+
+
+def _score_kernel(Y_ref, f_ref, gamma_ref, scal_ref, spd_ref, sh_ref,
+                  iso_ref, tau_ref, rho_ref, *, hetero, b_inter, b_intra):
+    """One candidate row: Eq. (6)-(8) tau + rho-hat slots in VMEM.
+
+    ``scal_ref`` packs the five job scalars (two_share, share,
+    reduce_const, compute, iters) into one grid-invariant row."""
+    tau, rho = _score_row_math(
+        Y_ref[...], f_ref[...][:, 0], gamma_ref[...][:, 0], scal_ref[0, 0],
+        scal_ref[0, 1], scal_ref[0, 2], scal_ref[0, 3], scal_ref[0, 4],
+        spd_ref[0], sh_ref[0], iso_ref[0], hetero=hetero,
+        b_inter=b_inter, b_intra=b_intra)
+    tau_ref[...] = tau[:, None]
+    rho_ref[...] = rho[:, None]
+
+
+# --------------------------------------------------------------------------
+# Fused jit programs
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def _pool_stats_jit(U, tlo, thi, rho_u, G, block_idx, block_valid, *,
+                    use_kernel, interpret):
+    """One fused program: pools, thresholds and per-server reductions.
+
+    Everything *sortless* of the pick pipeline runs here -- the charged
+    clocks, both extreme-theta pool counts, the GPU-id-order busy sums,
+    feasible-slot counts and the FA-FFP best-server argmin.  The stable
+    rankings themselves stay on the host (NumPy's stable sorts beat XLA's
+    CPU variadic sort by an order of magnitude on these small rows, and
+    host sorting over bitwise-equal keys keeps bit-identity trivial).
+    """
+    B, N = U.shape
+    itype = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    if use_kernel:
+        S, maxcap = block_idx.shape
+        outs = pl.pallas_call(
+            _pool_kernel,
+            grid=(B,),
+            in_specs=[
+                pl.BlockSpec((1, N), lambda b: (b, 0)),
+                pl.BlockSpec((1, 1), lambda b: (b, 0)),
+                pl.BlockSpec((1, 1), lambda b: (b, 0)),
+                pl.BlockSpec((1, 1), lambda b: (b, 0)),
+                pl.BlockSpec((1, 1), lambda b: (0, 0)),
+                pl.BlockSpec((S, maxcap), lambda b: (0, 0)),
+                pl.BlockSpec((S, maxcap), lambda b: (0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, N), lambda b: (b, 0)),
+                pl.BlockSpec((1, N), lambda b: (b, 0)),
+                pl.BlockSpec((1, 1), lambda b: (b, 0)),
+                pl.BlockSpec((1, 1), lambda b: (b, 0)),
+                pl.BlockSpec((1, S), lambda b: (b, 0)),
+                pl.BlockSpec((1, S), lambda b: (b, 0)),
+                pl.BlockSpec((1, 1), lambda b: (b, 0)),
+                pl.BlockSpec((1, 1), lambda b: (b, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((B, N), U.dtype),      # V
+                jax.ShapeDtypeStruct((B, N), itype),        # feas
+                jax.ShapeDtypeStruct((B, 1), itype),        # c_lo
+                jax.ShapeDtypeStruct((B, 1), itype),        # c_hi
+                jax.ShapeDtypeStruct((B, S), U.dtype),      # load
+                jax.ShapeDtypeStruct((B, S), itype),        # cnt
+                jax.ShapeDtypeStruct((B, 1), itype),        # best_srv
+                jax.ShapeDtypeStruct((B, 1), itype),        # has_fit
+            ],
+            compiler_params=CompilerParams(),
+            interpret=interpret,
+        )(U, tlo[:, None], thi[:, None], rho_u[:, None],
+          jnp.reshape(G, (1, 1)).astype(itype), block_idx,
+          block_valid.astype(itype))
+        V, _feas, c_lo2, c_hi2, load, cnt, best2, fit2 = outs
+        c_lo, c_hi = c_lo2[:, 0], c_hi2[:, 0]
+        best_srv, has_fit = best2[:, 0], fit2[:, 0].astype(bool)
+    else:
+        V, _feas, c_lo, c_hi, load, cnt, best_srv, has_fit = _pool_row_math(
+            U, tlo, thi, rho_u, G, block_idx, block_valid)
+    # feas is recomputed host-side from V (one elementwise compare).
+    return V, c_lo, c_hi, load, cnt, best_srv, has_fit
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "hetero", "b_inter", "b_intra", "use_kernel", "interpret"))
+def _score_probes_jit(Y, f, gamma, scalars, speed_floor, uplink_sh,
+                      uplink_iso, *, hetero, b_inter, b_intra, use_kernel,
+                      interpret):
+    """One fused program: Eq. (6)-(8) tau + rho for a candidate batch.
+
+    ``scalars`` is the ``[1, 5]`` job-scalar row (two_share, share,
+    reduce_const, compute, iters), precomputed on the host together with
+    the degradation ``f`` and gamma terms (see :func:`_score_row_math` on
+    why those multiplies must not live inside the program)."""
+    B, S = Y.shape
+    if not use_kernel:
+        return _score_row_math(
+            Y, f, gamma, scalars[0, 0], scalars[0, 1], scalars[0, 2],
+            scalars[0, 3], scalars[0, 4], speed_floor[None, :],
+            uplink_sh[None, :], uplink_iso[None, :], hetero=hetero,
+            b_inter=b_inter, b_intra=b_intra)
+    ftype = f.dtype                 # float; Y itself is the int occupancy
+    tau2, rho2 = pl.pallas_call(
+        functools.partial(_score_kernel, hetero=hetero, b_inter=b_inter,
+                          b_intra=b_intra),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, S), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+            pl.BlockSpec((1, 5), lambda b: (0, 0)),
+            pl.BlockSpec((1, S), lambda b: (0, 0)),
+            pl.BlockSpec((1, S), lambda b: (0, 0)),
+            pl.BlockSpec((1, S), lambda b: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), ftype),
+            jax.ShapeDtypeStruct((B, 1), ftype),
+        ],
+        compiler_params=CompilerParams(),
+        interpret=interpret,
+    )(Y, f[:, None], gamma[:, None], scalars, speed_floor[None, :],
+      uplink_sh[None, :], uplink_iso[None, :])
+    return tau2[:, 0], rho2[:, 0]
+
+
+# --------------------------------------------------------------------------
+# Public entry points (NumPy in, NumPy out, power-of-two padding)
+# --------------------------------------------------------------------------
+
+
+def pick_orders(cluster, U_stack: np.ndarray, th_lo: np.ndarray,
+                th_hi: np.ndarray, rho_u: np.ndarray, pid: np.ndarray,
+                job, *, use_kernel: bool = False,
+                interpret: bool | None = None):
+    """Fused pool/threshold/pick program over one step's work items.
+
+    ``U_stack`` [nw, N] gathers each work item's busy-time row; ``th_lo``/
+    ``th_hi`` its extreme branch thetas, ``rho_u`` its escalated rho/u
+    charge and ``pid`` its picker id (0 = FA-FFP, 1 = LBSGF).  Returns
+    NumPy ``(V, c_lo, c_hi, order, ok)``: the charged clocks, pool counts
+    at both extremes, each row's full stable GPU ordering (the pick is
+    ``order[i, :G_j]``) and the pool-large-enough flag -- all bit-identical
+    to the NumPy ``pick_many`` forms under x64.
+
+    The device program computes the reductions (pools, per-server busy
+    sums/counts, FA-FFP best server); the stable rankings run here on the
+    host with NumPy's sorts over those bitwise-equal keys, mirroring the
+    second halves of ``_fa_ffp_many`` / ``_lbsgf_many`` term for term.
+    Batches under :data:`DISPATCH_MIN_ROWS` skip the device round-trip and
+    compute the same reductions in NumPy (identical accumulation order via
+    :func:`repro.core.columnar.server_sums`) -- on CPU a dispatch costs
+    more than the stats it replaces below that size.
+    """
+    require_x64()
+    nw, N = U_stack.shape
+    G = job.num_gpus
+    consts = _cluster_consts(cluster)
+    gpu_server = consts["np_gpu_server"]
+    caps = consts["np_caps"]
+    S = caps.shape[0]
+    if use_kernel or nw >= DISPATCH_MIN_ROWS:
+        R = _bucket(nw)
+        if R != nw:
+            U_pad = np.concatenate(
+                [U_stack, np.zeros((R - nw, N), dtype=U_stack.dtype)])
+            pad = np.zeros(R - nw)
+            tl, th, ru = (np.concatenate([a, pad])
+                          for a in (th_lo, th_hi, rho_u))
+        else:
+            U_pad, tl, th, ru = U_stack, th_lo, th_hi, rho_u
+        if interpret is None:
+            interpret = jax.default_backend() == "cpu"
+        # NumPy operands go straight into the jitted call -- the pjit C++
+        # dispatch converts them far cheaper than an eager device_put
+        # per arg.
+        outs = _pool_stats_jit(
+            U_pad, tl, th, ru, G, consts["block_idx"],
+            consts["block_valid"], use_kernel=use_kernel,
+            interpret=interpret)
+        V, c_lo, c_hi, load, _cnt, best_srv, has_fit = (
+            np.asarray(o)[:nw] for o in outs)
+        feas = V <= th_lo[:, None] + 1e-9              # Eq. (16) pool
+    else:
+        from repro.core.columnar import server_sums
+        V = U_stack + rho_u[:, None]
+        feas = V <= th_lo[:, None] + 1e-9              # Eq. (16) pool
+        c_lo = feas.sum(axis=1)
+        c_hi = (V <= th_hi[:, None] + 1e-9).sum(axis=1)
+        load = server_sums(cluster, U_stack)
+        cnt = server_sums(cluster,
+                          feas.astype(np.float64)).astype(np.int64)
+        fits = cnt >= G
+        has_fit = fits.any(axis=1)
+        k_fit = np.where(fits, cnt - G, N + 1)
+        k_occ = np.where(fits, -load, np.inf)
+        t1 = k_fit == k_fit.min(axis=1, keepdims=True)
+        k2 = np.where(t1, k_occ, np.inf)
+        t2 = t1 & (k2 == k2.min(axis=1, keepdims=True))
+        best_srv = t2.argmax(axis=1)
+    U = U_stack
+    order = np.empty((nw, N), dtype=np.int64)
+    ok = np.empty(nw, dtype=bool)
+    fa = np.flatnonzero(pid == 0)
+    if fa.size:
+        # FA-FFP: pack into the best-fit server when one fits, else
+        # spread over the whole pool (== _fa_ffp_many's masked keys).
+        in_best = feas[fa] & (gpu_server[None, :] == best_srv[fa, None])
+        keys = np.where(has_fit[fa, None],
+                        np.where(in_best, U[fa], np.inf),
+                        np.where(feas[fa], U[fa], np.inf))
+        order[fa] = np.argsort(keys, axis=1, kind="stable")
+        ok[fa] = c_lo[fa] >= G
+    lb = np.flatnonzero(pid == 1)
+    if lb.size:
+        # LBSGF: least-busy server prefix of lambda_j*G capacity, then
+        # server-rank-major / least-U lexsort (== _lbsgf_many).
+        nl = lb.size
+        srv_order = np.argsort(load[lb] / caps[None, :].astype(np.float64),
+                               axis=1, kind="stable")
+        cum = np.cumsum(np.take_along_axis(
+            np.broadcast_to(caps[None, :], srv_order.shape), srv_order,
+            axis=1), axis=1)
+        m = np.minimum((cum < job.lam * G).sum(axis=1) + 1, S)
+        pos = np.arange(S)[None, :]
+        rank_vals = np.where(pos < m[:, None], pos, -1)
+        srv_rank = np.empty_like(srv_order)
+        np.put_along_axis(srv_rank, srv_order, rank_vals, axis=1)
+        ranks = srv_rank[:, gpu_server]
+        pool = feas[lb] & (ranks >= 0)
+        ok[lb] = pool.sum(axis=1) >= G
+        k_rank = np.where(pool, ranks, S + 1)
+        k_U = np.where(pool, U[lb], np.inf)
+        r_off = (np.arange(nl) * N)[:, None]
+        flat = np.lexsort((k_U.ravel(), k_rank.ravel(),
+                           np.repeat(np.arange(nl), N)))
+        order[lb] = flat.reshape(nl, N) - r_off
+    return V, c_lo, c_hi, order, ok
+
+
+def score_probes(cluster, job, Y: np.ndarray, p: np.ndarray, *,
+                 use_kernel: bool = False, interpret: bool | None = None):
+    """Fused Eq. (6)-(8) scoring of one step's probed candidates.
+
+    ``Y`` [C, S] holds each candidate's occupancy row and ``p`` its
+    host-probed contention level (float64, from the incremental engine's
+    suffix counts).  Returns NumPy ``(tau, rho)`` bit-identical to
+    ``scalar_tau_many`` + ``slots_for_many`` under x64; heterogeneous
+    clusters price worst-member device terms exactly like
+    :func:`repro.core.contention._hetero_mins`.  Batches under
+    :data:`DISPATCH_MIN_ROWS` skip the device round-trip and score through
+    those NumPy forms directly (same expressions, same order).
+    """
+    require_x64()
+    C, S = Y.shape
+    if not use_kernel and C < DISPATCH_MIN_ROWS:
+        from repro.core import contention as ct
+        n_srv = (Y > 0).sum(axis=1)
+        if cluster.is_heterogeneous:
+            tau = ct.scalar_tau_many(cluster, job, p, n_srv,
+                                     *ct._hetero_mins(cluster, Y > 0))
+        else:
+            tau = ct.scalar_tau_many(cluster, job, p, n_srv)
+        return tau, ct.slots_for_many(job.iters, tau)
+    from repro.core.contention import degradation
+    B = _bucket(C)
+    # Host-side contention terms (every multiply that would feed an
+    # addition in-program; see _score_row_math).
+    k = np.maximum(cluster.xi1 * np.asarray(p, dtype=np.float64), 1.0)
+    f = degradation(cluster.alpha, k)
+    gamma = cluster.xi2 * (Y > 0).sum(axis=1).astype(np.float64)
+    if B != C:
+        Y = np.concatenate([Y, np.zeros((B - C, S), dtype=Y.dtype)])
+        f = np.concatenate([f, np.ones(B - C)])
+        gamma = np.concatenate([gamma, np.zeros(B - C)])
+    consts = _cluster_consts(cluster)
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    w = float(job.num_gpus)
+    share = (job.grad_size / w) * (w - 1.0) if w > 1 else 0.0
+    compute = job.dt_fwd * float(job.batch) + job.dt_bwd
+    scalars = np.array([[2.0 * share, share, share / cluster.gpu_speed,
+                         compute, float(job.iters)]])
+    tau, rho = _score_probes_jit(
+        Y, f, gamma, scalars, consts["speed_floor"],
+        consts["uplink_shared"], consts["uplink_isolated"],
+        hetero=cluster.is_heterogeneous, b_inter=cluster.b_inter,
+        b_intra=cluster.b_intra, use_kernel=use_kernel,
+        interpret=interpret)
+    return np.asarray(tau)[:C], np.asarray(rho)[:C]
+
+
+def compile_counts() -> dict[str, int]:
+    """Compiled-variant counts of the fused programs (the no-retrace
+    guard: bounded by padding buckets x clusters, never growing per job)."""
+    return {"pick_orders": _pool_stats_jit._cache_size(),
+            "score_probes": _score_probes_jit._cache_size()}

@@ -16,6 +16,14 @@ it is therefore opt-in via :func:`repro.core.contention.tau_backend`.  With
 the NumPy engines, so the results are bit-identical (pinned by
 ``tests/test_kernels.py``); without x64 jax computes in float32 and the
 kernel is only approximately equal.
+
+This kernel scores *given* candidate stacks; its sibling
+:mod:`repro.kernels.placement` fuses the columnar placement engine's
+per-step reductions (FA-FFP/LBSGF pick stats over branch rows, Eq.
+(15)/(16) busy-time pools, refined-rho scoring) the same way -- same
+grid-per-row layout, same x64 bit-identity contract, plus plain
+``jax.jit`` variants that are the CPU fast path where the interpret-mode
+Pallas lowering is the parity artifact.
 """
 from __future__ import annotations
 

@@ -17,12 +17,13 @@ from repro.service.queue import QueueManager, TenantConfig
 from repro.service.state import (TERMINAL, TRANSITIONS, InvalidTransition,
                                  JobRecord, JobState)
 from repro.service.store import (JournalEntry, MemoryStore, SqliteStore,
-                                 open_store)
+                                 compact_entries, open_store)
 
 __all__ = [
     "SchedulerService", "SubmitRequest", "JobHandle", "JobStatus",
     "Daemon", "VirtualClock",
     "QueueManager", "TenantConfig",
     "JobState", "JobRecord", "TRANSITIONS", "TERMINAL", "InvalidTransition",
-    "JournalEntry", "MemoryStore", "SqliteStore", "open_store",
+    "JournalEntry", "MemoryStore", "SqliteStore", "compact_entries",
+    "open_store",
 ]

@@ -327,7 +327,13 @@ class Daemon:
         generator state snapshotted in each outcome transition, so a job
         caught mid-``PLACING`` is re-decided from exactly the pre-decision
         rng state -- recovery is decision-for-decision exact for every
-        registered policy, stochastic ones included."""
+        registered policy, stochastic ones included.
+
+        A compacted journal (see
+        :func:`repro.service.store.compact_entries`) starts with a
+        ``snapshot`` record; :meth:`_load_snapshot` rebuilds the folded
+        prefix's records and clocks bit-identically, then the tail
+        replays through the same bracket-buffered loop as ever."""
         entries = store.entries()
         journaled = None
         if entries and entries[0].kind == "cluster":
@@ -393,6 +399,9 @@ class Daemon:
                     "journal cluster record disagrees with the daemon's "
                     "cluster; replay the journal onto the journaled cluster")
             return
+        if entry.kind == "snapshot":
+            self._load_snapshot(entry.payload)
+            return
         if entry.kind == "submit":
             if entry.jid != len(self.jobs):
                 raise ValueError(
@@ -453,6 +462,67 @@ class Daemon:
             pass    # pure bracket delimiter; the entries it closed did the work
         else:
             raise ValueError(f"unknown journal entry kind {entry.kind!r}")
+
+    def _load_snapshot(self, payload: dict) -> None:
+        """Rebuild records and placement state from a compacted journal
+        prefix (:func:`repro.service.store.compact_entries`).
+
+        The ops stream replays the exact placement-state mutations the
+        folded entries would have replayed -- same float operands, same
+        order -- so the rebuilt U/R clocks are bit-identical to a full
+        replay of the uncompacted journal.  Lifecycle states are assigned
+        directly (the snapshot was folded from a journal that already
+        passed :meth:`JobRecord.advance` validation entry by entry)."""
+        if self.jobs:
+            raise ValueError("snapshot record must precede all submissions")
+        for jid, jp in enumerate(payload["jobs"]):
+            job = Job(**jp["job"])
+            self.jobs.append(job)
+            self.arrivals.append(int(jp["arrival"]))
+            self.records[jid] = JobRecord(jid=jid, tenant=jp["tenant"],
+                                          job=job, arrival=int(jp["arrival"]))
+        for op in payload["ops"]:
+            kind = op["op"]
+            if kind == "adv":
+                self.state.advance_to(float(op["t"]))
+            elif kind == "commit":
+                record = self.records[op["jid"]]
+                gpus = np.asarray(op["gpus"], dtype=np.int64)
+                rho, start = float(op["rho"]), float(op["start"])
+                self.state.advance_to(record.arrival)
+                self.state.commit(record.job, gpus, rho, start, self.u)
+                record.gpus, record.rho, record.start = gpus, rho, start
+            elif kind in ("evict", "resize"):
+                record = self.records[op["jid"]]
+                residual = apply_evict(self.state, op["jid"],
+                                       float(op["t"]), self.u,
+                                       num_gpus=int(op["num_gpus"]))
+                if residual is None or \
+                        residual.iters != float(op["iters"]):
+                    raise ValueError(
+                        f"snapshot divergence replaying {kind} of job "
+                        f"{op['jid']}: residual iters "
+                        f"{None if residual is None else residual.iters} "
+                        f"!= snapshotted {op['iters']}")
+                record.job = residual
+                record.gpus = record.rho = record.start = None
+            elif kind == "done":
+                record = self.records[op["jid"]]
+                record.finish = float(op["finish"])
+                if self.feedback == "actual":
+                    self.state.observe_finish(record.job, record.gpus,
+                                              record.finish)
+            else:
+                raise ValueError(f"unknown snapshot op kind {kind!r}")
+        for jid, jp in enumerate(payload["jobs"]):
+            record = self.records[jid]
+            record.state = JobState(jp["state"])
+            if record.state in (JobState.PENDING, JobState.QUEUED):
+                record.gpus = record.rho = record.start = None
+        self.rounds = int(payload["rounds"])
+        self.clock.advance(float(payload["t"]))
+        for tenant, snap in payload["rng"].items():
+            self._chooser_for(tenant).set_state(snap)
 
     # -- internals --------------------------------------------------------
 

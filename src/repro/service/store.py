@@ -20,6 +20,17 @@ Two backends share the interface:
 Payload floats (``rho``, ``start``, ``finish``) must round-trip exactly:
 JSON via ``repr`` and SQLite ``REAL`` columns both preserve IEEE-754
 doubles bit-for-bit.
+
+Both stores also support **snapshot compaction**: a long-running daemon's
+journal grows by ~6 entries per job, so :meth:`MemoryStore.snapshot` /
+:meth:`SqliteStore.snapshot` fold the longest quiescent prefix (every
+closed PLACING..decided bracket) into one ``"snapshot"`` record via
+:func:`compact_entries`.  The snapshot keeps exactly what replay needs --
+the submitted jobs, final lifecycle states, and the ordered stream of
+placement-state mutations with their journaled floats -- so
+:meth:`repro.service.daemon.Daemon.recover` over ``cluster + snapshot +
+tail`` rebuilds busy-time clocks bit-identical to replaying the
+uncompacted journal.
 """
 from __future__ import annotations
 
@@ -27,7 +38,8 @@ import dataclasses
 import json
 import sqlite3
 
-__all__ = ["JournalEntry", "MemoryStore", "SqliteStore", "open_store"]
+__all__ = ["JournalEntry", "MemoryStore", "SqliteStore", "compact_entries",
+           "open_store"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,7 +59,9 @@ class JournalEntry:
     preemption record -- ``"evict"`` / ``"resize"`` (payload: the exact
     eviction instant ``t`` plus the residual's ``iters``/``num_gpus``;
     see :mod:`repro.core.preempt`) -- journaled inside the preempting
-    arrival's decision bracket."""
+    arrival's decision bracket.  A compacted journal additionally holds
+    one ``"snapshot"`` entry right after the cluster record: the folded
+    prefix produced by :func:`compact_entries`."""
 
     seq: int
     ts: float                  # virtual-clock stamp (deterministic tests)
@@ -60,17 +74,144 @@ class JournalEntry:
         return json.dumps(self.payload, sort_keys=True)
 
 
+def compact_entries(entries: "list[JournalEntry]"
+                    ) -> "tuple[list[JournalEntry], list[JournalEntry]] | None":
+    """Fold the longest quiescent journal prefix into one snapshot record.
+
+    Returns ``(folded, tail)`` where ``folded`` is ``[cluster_entry,
+    snapshot_entry]`` and ``tail`` is the unfolded suffix (entries inside
+    a still-open PLACING..decided bracket, which replay must see verbatim
+    to apply-or-drop atomically), or ``None`` when there is nothing to
+    fold.  The walk mirrors :meth:`repro.service.daemon.Daemon.recover`
+    exactly: brackets fold only once their closing ``decided`` record is
+    present, and an abandoned bracket's entries are dropped (recovery
+    drops them too, so the compacted journal replays to the same state).
+
+    The snapshot payload is what replay needs and nothing more:
+
+    * ``jobs`` -- every submission in jid order (tenant, arrival, the
+      *original* job fields) plus its final lifecycle state;
+    * ``ops`` -- the ordered placement-state mutations: ``adv`` (the
+      real-time clock advance journaled by each PLACING), ``commit``
+      (the exact ``gpus``/``rho``/``start`` floats -- U += charges are
+      float-order-sensitive, so order is preserved), ``evict``/``resize``
+      (replayed through :func:`repro.core.preempt.evict`, residual
+      cross-checked), and ``done`` (observed finishes, replayed into the
+      engines under ``feedback="actual"``);
+    * ``rounds`` / ``t`` -- the round counter and final virtual-clock
+      slot the dropped ``advance`` entries had accumulated;
+    * ``rng`` -- each tenant's last journaled chooser generator state.
+
+    A prefix that already starts with a snapshot is re-folded: the old
+    snapshot seeds the walk, so compaction composes.
+    """
+    if len(entries) < 2 or entries[0].kind != "cluster":
+        return None
+    jobs: list[dict] = []
+    ops: list[dict] = []
+    rounds, t = 0, 0.0
+    rng: dict = {}
+    start = 1
+    if entries[1].kind == "snapshot":
+        prev = entries[1].payload
+        jobs = [dict(j) for j in prev["jobs"]]
+        ops = list(prev["ops"])
+        rounds, t = int(prev["rounds"]), float(prev["t"])
+        rng = dict(prev["rng"])
+        start = 2
+
+    def fold(entry: JournalEntry) -> None:
+        nonlocal rounds, t
+        if entry.kind == "submit":
+            if entry.jid != len(jobs):
+                raise ValueError(f"journal gap: submit jid {entry.jid} != "
+                                 f"next jid {len(jobs)}")
+            jobs.append({"tenant": entry.payload["tenant"],
+                         "arrival": int(entry.payload["arrival"]),
+                         "job": entry.payload["job"], "state": "PENDING"})
+        elif entry.kind == "advance":
+            rounds += 1
+            t = max(t, float(entry.payload["t"]))
+        elif entry.kind == "transition":
+            rec = jobs[entry.jid]
+            to = entry.payload["to"]
+            rec["state"] = to
+            if to == "PLACING":
+                ops.append({"op": "adv", "t": float(rec["arrival"])})
+            elif to == "RUNNING":
+                ops.append({"op": "commit", "jid": entry.jid,
+                            "gpus": entry.payload["gpus"],
+                            "rho": entry.payload["rho"],
+                            "start": entry.payload["start"]})
+            elif to == "DONE":
+                rec["finish"] = entry.payload["finish"]
+                ops.append({"op": "done", "jid": entry.jid,
+                            "finish": entry.payload["finish"]})
+            if "rng" in entry.payload:
+                rng[rec["tenant"]] = entry.payload["rng"]
+        elif entry.kind in ("evict", "resize"):
+            ops.append({"op": entry.kind, "jid": entry.jid,
+                        "t": entry.payload["t"],
+                        "iters": entry.payload["iters"],
+                        "num_gpus": entry.payload["num_gpus"]})
+        elif entry.kind != "decided":      # decided: pure bracket delimiter
+            raise ValueError(
+                f"cannot fold journal entry kind {entry.kind!r}")
+
+    safe = start                # index just past the last folded entry
+    buf: "tuple[int, list] | None" = None
+    i = start
+    while i < len(entries):
+        entry = entries[i]
+        if buf is not None:
+            jid0, pending = buf
+            abandoned = entry.kind in ("advance", "submit") or (
+                entry.kind == "transition"
+                and (entry.payload["to"] == "DONE"
+                     or (entry.jid == jid0
+                         and entry.payload["to"] == "PLACING")))
+            if not abandoned:
+                pending.append(entry)
+                if entry.kind == "decided" and entry.jid == jid0:
+                    for buffered in pending:
+                        fold(buffered)
+                    buf = None
+                    safe = i + 1
+                i += 1
+                continue
+            buf = None          # fall through: fold `entry` normally
+        if entry.kind == "transition" and \
+                entry.payload["to"] == "PLACING":
+            buf = (entry.jid, [entry])
+            i += 1
+            continue
+        fold(entry)
+        safe = i + 1
+        i += 1
+    if safe <= start:
+        return None
+    last = entries[safe - 1]
+    snap = JournalEntry(seq=last.seq, ts=last.ts, kind="snapshot", jid=-1,
+                        payload={"jobs": jobs, "ops": ops, "rounds": rounds,
+                                 "t": t, "rng": rng})
+    return [entries[0], snap], entries[safe:]
+
+
 class MemoryStore:
     """In-memory journal: a list of entries, no durability."""
 
     def __init__(self, entries: "list[JournalEntry] | None" = None):
         self._entries: list[JournalEntry] = list(entries or [])
+        # Sequence numbers survive compaction (a snapshot replaces many
+        # entries by one), so the counter is persistent, not len+1.
+        self._next_seq = self._entries[-1].seq + 1 if self._entries else 1
 
     def append(self, kind: str, jid: int, payload: dict,
                ts: float = 0.0) -> JournalEntry:
         """Append one entry; returns it with its assigned sequence number."""
-        entry = JournalEntry(seq=len(self._entries) + 1, ts=ts, kind=kind,
+        entry = JournalEntry(seq=self._next_seq, ts=ts, kind=kind,
                              jid=jid, payload=payload)
+        self._next_seq += 1
         self._entries.append(entry)
         return entry
 
@@ -82,6 +223,16 @@ class MemoryStore:
         """A copy holding only the first ``n`` entries -- a simulated
         crash snapshot for the fault-injection recovery tests."""
         return MemoryStore(self._entries[:n])
+
+    def snapshot(self) -> int:
+        """Compact via :func:`compact_entries`; returns entries saved."""
+        folded = compact_entries(self._entries)
+        if folded is None:
+            return 0
+        kept, tail = folded
+        saved = len(self._entries) - len(kept) - len(tail)
+        self._entries = kept + tail
+        return saved
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -127,6 +278,28 @@ class SqliteStore:
         return [JournalEntry(seq=s, ts=ts, kind=k, jid=j,
                              payload=json.loads(p))
                 for s, ts, k, j, p in rows]
+
+    def snapshot(self) -> int:
+        """Compact via :func:`compact_entries`; returns rows saved.
+
+        The folded rows are replaced by one ``snapshot`` row carrying the
+        last folded sequence number, in a single transaction; AUTOINCREMENT
+        keeps later appends above every seq ever issued, so compaction
+        never reuses a sequence number."""
+        entries = self.entries()
+        folded = compact_entries(entries)
+        if folded is None:
+            return 0
+        (cluster, snap), tail = folded
+        self._db.execute("DELETE FROM journal WHERE seq > ? AND seq <= ?",
+                         (cluster.seq, snap.seq))
+        self._db.execute(
+            "INSERT INTO journal (seq, ts, kind, jid, payload) "
+            "VALUES (?,?,?,?,?)",
+            (snap.seq, snap.ts, snap.kind, snap.jid,
+             json.dumps(snap.payload, sort_keys=True)))
+        self._db.commit()
+        return len(entries) - 2 - len(tail)
 
     def __len__(self) -> int:
         return int(self._db.execute(

@@ -135,6 +135,40 @@ class TestScenario:
             rep.scenario.workload.build())
         assert np.all(rep.sim.start >= arrivals)
 
+    def test_pareto_arrivals_seeded_and_bursty(self):
+        """Heavy-tailed arrivals: seeded (reproducible), mean-normalised
+        to ``rate``, and burstier than Poisson at the same rate (higher
+        squared coefficient of variation of the gaps)."""
+        from repro.core import ArrivalSpec
+        jobs = WorkloadSpec(num_jobs=2000, seed=5).build()
+        spec = ArrivalSpec(kind="pareto", rate=0.5, seed=9, shape=1.5)
+        a, b = spec.build(jobs), spec.build(jobs)
+        assert np.array_equal(a, b)                     # seeded
+        assert np.all(np.diff(a) >= 0)                  # nondecreasing
+        gaps = np.diff(a.astype(np.float64))
+        pois = np.diff(ArrivalSpec(kind="poisson", rate=0.5,
+                                   seed=9).build(jobs).astype(np.float64))
+        # long-run rate lands near the requested one ...
+        assert 0.2 <= len(jobs) / max(a[-1], 1) <= 1.5
+        # ... but the gap distribution is heavier-tailed than Poisson
+        cv2 = gaps.var() / max(gaps.mean(), 1e-12) ** 2
+        cv2_pois = pois.var() / max(pois.mean(), 1e-12) ** 2
+        assert cv2 > cv2_pois
+        with pytest.raises(ValueError, match="shape > 1"):
+            ArrivalSpec(kind="pareto", shape=1.0).build(jobs)
+
+    def test_pareto_scenario_end_to_end(self):
+        from repro.core import ArrivalSpec
+        rep = run_scenario(Scenario(
+            cluster=ClusterSpec(num_servers=6, seed=1),
+            workload=WorkloadSpec(num_jobs=24, seed=1),
+            arrivals=ArrivalSpec(kind="pareto", rate=0.5, seed=1),
+            policy="sjf-bco", horizon=10**6))
+        assert rep.sim.completed == 24
+        arrivals = rep.scenario.arrivals.build(
+            rep.scenario.workload.build())
+        assert np.all(rep.sim.start >= arrivals)
+
     def test_contention_stats_consistent(self):
         rep = run_scenario(Scenario(
             cluster=ClusterSpec(num_servers=4, seed=3),

@@ -190,6 +190,159 @@ class TestColumnarPolicyEquivalence:
         _assert_schedules_equal(results["scalar"], results["columnar"])
 
 
+class TestColumnarJitBackends:
+    """The fused jit/Pallas backends vs the numpy walk: bit-identity
+    under x64 across seeds x policies x hetero clusters, plus the
+    no-retrace guard (the padded array program must not recompile as
+    jobs stream through)."""
+
+    @staticmethod
+    def _force_device(monkeypatch):
+        """Force every batch through the device program: without this the
+        DISPATCH_MIN_ROWS gate routes short batches to the numpy pickers
+        and the device path would go untested at test sizes."""
+        import repro.kernels.placement as kp
+        monkeypatch.setattr(kp, "DISPATCH_MIN_ROWS", 0)
+
+    @staticmethod
+    def _x64():
+        jax = pytest.importorskip("jax")
+        x64_was = jax.config.jax_enable_x64
+        jax.config.update("jax_enable_x64", True)
+        return jax, x64_was
+
+    def _hetero_case(self, seed, n_jobs=24, n_servers=6):
+        import dataclasses
+        base = philly_cluster(n_servers, seed=seed)
+        rng = np.random.default_rng(1000 + seed)
+        speeds = []
+        for cap in base.capacities:
+            tier = float(rng.choice([base.gpu_speed, base.gpu_speed / 4]))
+            speeds += [tier] * cap
+        links = tuple(
+            (float(rng.choice([base.b_inter, base.b_inter * 0.5])),
+             str(rng.choice(["shared", "isolated"])))
+            for _ in range(base.num_servers))
+        cluster = dataclasses.replace(base, gpu_speeds=tuple(speeds),
+                                      links=links)
+        assert cluster.is_heterogeneous
+        mix = ((1, n_jobs // 3), (2, n_jobs // 6), (4, n_jobs // 4),
+               (8, n_jobs // 6), (16, n_jobs // 12))
+        return cluster, philly_workload(seed=seed, mix=mix)
+
+    @pytest.mark.parametrize("seed", range(2))
+    @pytest.mark.parametrize("policy", ["sjf-bco", "ff", "ls"])
+    @pytest.mark.parametrize("hetero", [False, True])
+    def test_jit_vs_eager_bit_identity(self, seed, policy, hetero,
+                                       monkeypatch):
+        """backend="jit" (fused XLA program + host rankings) equals the
+        eager numpy walk AND the scalar oracle bit-for-bit."""
+        jax, x64_was = self._x64()
+        self._force_device(monkeypatch)
+        try:
+            if hetero:
+                cluster, jobs = self._hetero_case(seed)
+            else:
+                cluster, jobs = _philly_case(seed, n_jobs=30, n_servers=6)
+            results = {}
+            for backend, placement in (("numpy", "columnar"),
+                                       ("jit", "columnar"),
+                                       ("numpy", "scalar")):
+                request = ScheduleRequest(
+                    cluster=cluster, jobs=jobs, horizon=2400,
+                    params={"placement": placement,
+                            "columnar_backend": backend})
+                results[(backend, placement)] = get_policy(policy)(request)
+            _assert_schedules_equal(results[("numpy", "columnar")],
+                                    results[("jit", "columnar")])
+            _assert_schedules_equal(results[("numpy", "scalar")],
+                                    results[("jit", "columnar")])
+        finally:
+            jax.config.update("jax_enable_x64", x64_was)
+
+    @pytest.mark.parametrize("seed,hetero", [(0, False), (1, True)])
+    def test_kernel_vs_numpy_bit_identity(self, seed, hetero, monkeypatch):
+        """backend="kernel" (Pallas pick/check/score, interpret mode on
+        CPU) is bit-identical to the numpy walk under x64."""
+        jax, x64_was = self._x64()
+        self._force_device(monkeypatch)
+        try:
+            if hetero:
+                cluster, jobs = self._hetero_case(seed, n_jobs=18)
+            else:
+                cluster, jobs = _philly_case(seed, n_jobs=18, n_servers=4)
+            results = {}
+            for backend in ("numpy", "kernel"):
+                request = ScheduleRequest(
+                    cluster=cluster, jobs=jobs, horizon=2400,
+                    params={"placement": "columnar",
+                            "columnar_backend": backend})
+                results[backend] = get_policy("sjf-bco")(request)
+            _assert_schedules_equal(results["numpy"], results["kernel"])
+        finally:
+            jax.config.update("jax_enable_x64", x64_was)
+
+    def test_pick_orders_device_matches_numpy(self, monkeypatch):
+        """Function-level fuzz: the fused pick/check program and the
+        numpy fallback agree bitwise on every output (pools, counts,
+        rankings, feasibility) across random clock states."""
+        jax, x64_was = self._x64()
+        import repro.kernels.placement as kp
+        try:
+            cluster, jobs = _philly_case(5, n_jobs=12, n_servers=6)
+            N = cluster.num_gpus
+            rng = np.random.default_rng(11)
+            for trial in range(40):
+                job = jobs[int(rng.integers(len(jobs)))]
+                nw = int(rng.integers(1, 40))
+                U = np.round(rng.uniform(0, 30, size=(nw, N)), 3)
+                th_lo = np.sort(rng.uniform(5, 40, size=nw))
+                th_hi = th_lo + rng.uniform(0, 10, size=nw)
+                rho_u = rng.uniform(0.5, 20, size=nw)
+                pid = rng.integers(0, 2, size=nw)
+                outs = {}
+                for rows, label in ((10**9, "numpy"), (0, "device")):
+                    monkeypatch.setattr(kp, "DISPATCH_MIN_ROWS", rows)
+                    outs[label] = kp.pick_orders(
+                        cluster, U.copy(), th_lo, th_hi, rho_u, pid, job)
+                for a, b in zip(outs["numpy"], outs["device"]):
+                    assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                        f"trial {trial}"
+        finally:
+            jax.config.update("jax_enable_x64", x64_was)
+
+    def test_no_retrace_across_jobs(self, monkeypatch):
+        """Compile-count guard: the padded fixed-shape layout must hit
+        the jit cache across jobs -- a fresh workload on the same
+        cluster adds ZERO new compilations."""
+        jax, x64_was = self._x64()
+        self._force_device(monkeypatch)
+        import repro.kernels.placement as kp
+        try:
+            cold = dict(kp.compile_counts())    # cumulative across session
+            cluster, jobs = _philly_case(7, n_jobs=36, n_servers=6)
+            request = ScheduleRequest(
+                cluster=cluster, jobs=jobs, horizon=2400,
+                params={"placement": "columnar", "columnar_backend": "jit"})
+            get_policy("sjf-bco")(request)
+            warm = dict(kp.compile_counts())
+            # A padded program per power-of-two row bucket and static-arg
+            # combination -- not per job, not per branch count.  Counts
+            # are session-cumulative, so bound the delta from this run
+            # (earlier warm cache entries make it smaller, never larger).
+            assert warm["pick_orders"] - cold["pick_orders"] <= 16
+            assert warm["score_probes"] - cold["score_probes"] <= 16
+            assert warm["pick_orders"] > 0 and warm["score_probes"] > 0
+            _, jobs2 = _philly_case(8, n_jobs=36, n_servers=6)
+            request2 = ScheduleRequest(
+                cluster=cluster, jobs=jobs2, horizon=2400,
+                params={"placement": "columnar", "columnar_backend": "jit"})
+            get_policy("sjf-bco")(request2)
+            assert kp.compile_counts() == warm      # no retraces
+        finally:
+            jax.config.update("jax_enable_x64", x64_was)
+
+
 if HAVE_HYPOTHESIS:                                 # pragma: no branch
     class TestColumnarHypothesis:
         @settings(max_examples=25, deadline=None)

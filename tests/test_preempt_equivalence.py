@@ -275,6 +275,34 @@ class TestDaemonEquivalence:
         sched, _ = again.drain()
         assert _same_schedule(full, sched)
 
+    @pytest.mark.parametrize("policy,trace", [
+        ("sjf-bco-dynamic", _evict_trace),
+        ("gadget-elastic", _resize_trace)])
+    def test_snapshot_folds_preemption_brackets(self, policy, trace):
+        """Journal compaction folds EVICT/RESIZE brackets into snapshot
+        ops; recovery from every compacted prefix still reproduces the
+        preemptive schedule exactly (residuals re-derived bit-for-bit)."""
+        (cluster, jobs, arrivals, horizon,
+         store, full, _) = self._drain(policy, trace)
+        folded_preemptions = 0
+        for k in range(len(store) + 1):
+            snap = store.prefix(k)
+            snap.snapshot()
+            entries = snap.entries()
+            if len(entries) > 1 and entries[1].kind == "snapshot":
+                folded_preemptions += sum(
+                    op["op"] in ("evict", "resize")
+                    for op in entries[1].payload["ops"])
+            daemon = Daemon.recover(
+                cluster, snap,
+                QueueManager(default=TenantConfig(policy=policy)),
+                horizon=horizon)
+            for job, a in list(zip(jobs, arrivals))[len(daemon.jobs):]:
+                daemon.admit(job, arrival=int(a))
+            sched, _ = daemon.drain()
+            assert _same_schedule(full, sched), f"prefix {k}"
+        assert folded_preemptions > 0     # snapshots really carried them
+
     def test_schedule_arrivals_chooser_matches_policy(self):
         """The registry chooser is literally the policy's online path."""
         from repro.core.api import get_chooser

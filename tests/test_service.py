@@ -440,3 +440,144 @@ class TestCrashRecovery:
         full, _ = svc.drain()
         again, _ = rec.drain()
         assert _same_schedule(full, again)
+
+
+class TestSnapshotCompaction:
+    """Journal snapshot/compaction: ``store.snapshot()`` folds the
+    quiescent prefix into one record, and recovery from snapshot + tail
+    is bit-identical to replaying the uncompacted journal."""
+
+    def _driven(self, n=16, policy="sjf-bco", params=None, seed=3):
+        cluster = philly_cluster(8, seed=1)
+        jobs = _jobs(n, seed=seed)
+        arrivals = _arrivals(len(jobs))
+        svc = SchedulerService(cluster, policy=policy, params=params or {})
+        _submit_all(svc, jobs, arrivals)
+        while svc.step():
+            pass
+        return cluster, jobs, arrivals, svc
+
+    @staticmethod
+    def _same_daemon(a, b):
+        assert np.array_equal(a.state.U, b.state.U)
+        assert np.array_equal(a.state.R, b.state.R)
+        assert a.state.est_finish == b.state.est_finish
+        assert a.rounds == b.rounds and a.clock.now() == b.clock.now()
+        assert sorted(a.records) == sorted(b.records)
+        for jid, ra in a.records.items():
+            rb = b.records[jid]
+            assert ra.state is rb.state and ra.tenant == rb.tenant
+            assert ra.rho == rb.rho and ra.start == rb.start
+            assert ra.finish == rb.finish
+            assert (ra.gpus is None) == (rb.gpus is None)
+            if ra.gpus is not None:
+                assert np.array_equal(ra.gpus, rb.gpus)
+
+    def test_snapshot_recover_bit_identical(self):
+        cluster, jobs, arrivals, svc = self._driven()
+        store = svc.daemon.store
+        compacted = store.prefix(len(store))
+        saved = compacted.snapshot()
+        assert saved > 0 and len(compacted) < len(store)
+        kinds = [e.kind for e in compacted.entries()]
+        assert kinds[:2] == ["cluster", "snapshot"]
+        qm = lambda: QueueManager(TenantConfig("sjf-bco"))  # noqa: E731
+        full = Daemon.recover(cluster, store.prefix(len(store)), qm())
+        quick = Daemon.recover(cluster, compacted, qm())
+        self._same_daemon(full, quick)
+        sa, _ = full.drain()
+        sb, _ = quick.drain()
+        assert _same_schedule(sa, sb)
+
+    def test_snapshot_every_prefix_identical(self):
+        """Compact at EVERY journal prefix -- including cuts inside an
+        open PLACING bracket, whose entries must stay in the tail -- and
+        the recovered daemon still reproduces the full schedule."""
+        cluster, jobs, arrivals, svc = self._driven(n=12)
+        full, _ = svc.drain()
+        store = svc.daemon.store
+        mid_bracket = 0
+        for k in range(len(store) + 1):
+            snap = store.prefix(k)
+            entries = snap.entries()
+            open_bracket = any(e.kind == "transition"
+                               and e.payload["to"] == "PLACING"
+                               for e in entries) and \
+                entries[-1].kind != "decided" if entries else False
+            mid_bracket += bool(open_bracket)
+            snap.snapshot()
+            daemon = Daemon.recover(cluster, snap,
+                                    QueueManager(TenantConfig("sjf-bco")))
+            for j, a in list(zip(jobs, arrivals))[len(daemon.jobs):]:
+                daemon.admit(j, int(a))
+            sched, _ = daemon.drain()
+            assert _same_schedule(full, sched), f"prefix {k}"
+        assert mid_bracket > 0
+
+    def test_snapshot_preserves_rng_state(self):
+        cluster, jobs, arrivals, svc = self._driven(
+            n=14, policy="rand", params={"seed": 11})
+        store = svc.daemon.store
+        compacted = store.prefix(len(store))
+        assert compacted.snapshot() > 0
+        snap_entry = compacted.entries()[1]
+        assert snap_entry.payload["rng"]          # last generator state kept
+        cfg = TenantConfig("rand", params=(("seed", 11),))
+        full = Daemon.recover(cluster, store.prefix(len(store)),
+                              QueueManager(cfg))
+        quick = Daemon.recover(cluster, compacted, QueueManager(cfg))
+        assert (full._choosers["default"].get_state()
+                == quick._choosers["default"].get_state())
+        self._same_daemon(full, quick)
+
+    def test_resnapshot_composes(self):
+        """snapshot -> write on -> snapshot again: the second fold seeds
+        from the first record, and recovery stays exact."""
+        cluster, jobs, arrivals, svc = self._driven(n=16)
+        full, _ = svc.drain()
+        store = svc.daemon.store
+        half = store.prefix(len(store) // 2)
+        assert half.snapshot() > 0
+        daemon = Daemon.recover(cluster, half,
+                                QueueManager(TenantConfig("sjf-bco")))
+        for j, a in list(zip(jobs, arrivals))[len(daemon.jobs):]:
+            daemon.admit(j, int(a))
+        while daemon.step():
+            pass
+        assert daemon.store.snapshot() > 0        # re-fold snapshot + suffix
+        kinds = [e.kind for e in daemon.store.entries()]
+        assert kinds.count("snapshot") == 1
+        again = Daemon.recover(cluster, daemon.store,
+                               QueueManager(TenantConfig("sjf-bco")))
+        sched, _ = again.drain()
+        assert _same_schedule(full, sched)
+
+    def test_sqlite_snapshot_survives_reopen(self, tmp_path):
+        cluster, jobs, arrivals, svc = self._driven()
+        mem = svc.daemon.store
+        path = str(tmp_path / "compact.db")
+        db = SqliteStore(path)
+        for e in mem.entries():
+            db.append(e.kind, e.jid, e.payload, ts=e.ts)
+        rows = len(db)
+        saved = db.snapshot()
+        assert saved > 0 and len(db) == rows - saved
+        db.close()
+        back = SqliteStore(path)
+        full = Daemon.recover(cluster, mem.prefix(len(mem)),
+                              QueueManager(TenantConfig("sjf-bco")))
+        quick = Daemon.recover(cluster, back, QueueManager(TenantConfig(
+            "sjf-bco")))
+        self._same_daemon(full, quick)
+        # appends after compaction keep strictly increasing sequence
+        e = back.append("advance", -1, {"t": 999.0})
+        assert e.seq > back.entries()[-2].seq
+        back.close()
+
+    def test_memory_seq_persists_across_snapshot(self):
+        cluster, jobs, arrivals, svc = self._driven(n=8)
+        store = svc.daemon.store
+        last_seq = store.entries()[-1].seq
+        store.snapshot()
+        e = store.append("advance", -1, {"t": 1.0})
+        assert e.seq == last_seq + 1              # no reuse after the fold
